@@ -1,0 +1,65 @@
+"""Beyond-paper benchmark: prediction accuracy across the whole assigned
+zoo (10 architectures x shapes), vs the compiled-XLA ground truth captured
+by the dry-run.  The paper validates one model (LLaVA-1.5); this table
+shows the factorization generalizes across dense/MoE/SSM/hybrid/VLM/enc-dec
+families — its central design claim.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks.common import (EXP_DIR, GiB, load_dryrun, mape,
+                               predict_record)
+
+
+def run(mesh: str = "16x16", verbose: bool = True) -> dict:
+    records = load_dryrun(mesh)
+    if not records:
+        print("no dry-run artifacts; run python -m repro.launch.dryrun --all",
+              file=sys.stderr)
+        return {}
+    rows = []
+    for rec in records:
+        pred = predict_record(rec, backend="cpu")
+        actual = rec["memory"]["total_bytes"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "kind": rec["kind"],
+            "predicted_bytes": pred.peak_bytes,
+            "actual_bytes": actual,
+            "ape": 100.0 * abs(pred.peak_bytes - actual) / actual,
+        })
+    by_kind = {}
+    for r in rows:
+        by_kind.setdefault(r["kind"], []).append(
+            (r["predicted_bytes"], r["actual_bytes"]))
+    out = {
+        "mesh": mesh,
+        "rows": rows,
+        "mape_total": mape([(r["predicted_bytes"], r["actual_bytes"])
+                            for r in rows]),
+        "mape_by_kind": {k: mape(v) for k, v in by_kind.items()},
+    }
+    if verbose:
+        print(f"\n=== arch sweep (mesh {mesh}): predicted vs XLA peak "
+              f"(GiB/device) ===")
+        print(f"{'arch':<24s}{'shape':<14s}{'pred':>9s}{'actual':>9s}"
+              f"{'APE%':>8s}")
+        for r in sorted(rows, key=lambda r: (r['arch'], r['shape'])):
+            print(f"{r['arch']:<24s}{r['shape']:<14s}"
+                  f"{r['predicted_bytes']/GiB:9.2f}"
+                  f"{r['actual_bytes']/GiB:9.2f}{r['ape']:8.1f}")
+        print(f"MAPE: total {out['mape_total']:.1f}%  by kind: " +
+              "  ".join(f"{k}={v:.1f}%" for k, v in
+                        out["mape_by_kind"].items()))
+    os.makedirs(EXP_DIR, exist_ok=True)
+    with open(os.path.join(EXP_DIR, f"arch_sweep_{mesh}.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    run()

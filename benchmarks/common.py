@@ -1,0 +1,62 @@
+"""Shared helpers for the benchmark suite."""
+
+from __future__ import annotations
+
+import json
+import glob
+import os
+
+GiB = 1024 ** 3
+EXP_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+DRYRUN_DIR = os.path.join(EXP_DIR, "dryrun")
+
+
+def load_dryrun(mesh: str = "16x16") -> list[dict]:
+    out = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(fn) as f:
+            out.append(json.load(f))
+    return out
+
+
+def mesh_shape_of(record: dict) -> dict:
+    return ({"pod": 2, "data": 16, "model": 16}
+            if record["mesh"] == "2x16x16" else {"data": 16, "model": 16})
+
+
+def predict_record(record: dict, backend: str = "cpu"):
+    """Re-run the paper framework's prediction for a dry-run artifact
+    (pure arithmetic — no mesh, no compile)."""
+    from repro.configs import SHAPES, get_config
+    from repro.core import factors as FA
+    from repro.core import predictor as PR
+    from repro.core.spec import FULL_TRAIN
+    from repro.launch import mesh as M
+    from repro.models import build_model
+    from repro.train.optimizer import OptimizerConfig
+
+    cfg = get_config(record["arch"])
+    shape = SHAPES[record["shape"]]
+    model = build_model(cfg)
+    opt = OptimizerConfig(name=cfg.optimizer)
+    ctx = FA.PredictContext(
+        mesh_shape=mesh_shape_of(record),
+        rules=M.arch_rules(cfg, shape.kind),
+        optimizer=opt.name, fsdp=cfg.fsdp,
+        master_fp32=opt.name != "adafactor",
+        remat=cfg.remat, backend=backend,
+        global_batch=shape.global_batch, seq_len=shape.seq_len,
+        enc_seq=int(shape.seq_len * cfg.encdec.enc_seq_ratio)
+        if cfg.encdec else 0,
+        kind=shape.kind, max_len=shape.seq_len)
+    return PR.predict(model, FULL_TRAIN, ctx)
+
+
+def mape(pairs) -> float:
+    """mean(|pred - actual| / actual) over (pred, actual) pairs, %."""
+    errs = [abs(p - a) / a for p, a in pairs if a > 0]
+    return 100.0 * sum(errs) / max(len(errs), 1)
+
+
+def fmt_gib(x: int) -> str:
+    return f"{x / GiB:8.2f}"

@@ -1,0 +1,45 @@
+"""Framework-overhead benchmark: microseconds per full-model prediction.
+
+The paper's pitch against profiling-based estimators is that a
+formulation-based predictor needs NO training iterations.  This measures
+the end-to-end cost of one prediction (parse -> factorize -> Eq.1) per
+architecture — microseconds-to-milliseconds, vs minutes for a profiling
+run (and vs ~seconds for an XLA compile).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.core import factors as FA
+from repro.core import predictor as PR
+from repro.core.spec import FULL_TRAIN
+from repro.launch import mesh as M
+from repro.models import build_model
+
+
+def run(verbose: bool = True) -> list[tuple[str, float]]:
+    out = []
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        ctx = FA.PredictContext(
+            mesh_shape={"data": 16, "model": 16},
+            rules=M.arch_rules(cfg), optimizer=cfg.optimizer,
+            fsdp=cfg.fsdp, remat=cfg.remat,
+            global_batch=256, seq_len=4096, kind="train")
+        PR.predict(model, FULL_TRAIN, ctx)          # warm (imports, caches)
+        n = 20
+        t0 = time.perf_counter()
+        for _ in range(n):
+            PR.predict(model, FULL_TRAIN, ctx)
+        us = (time.perf_counter() - t0) / n * 1e6
+        out.append((arch, us))
+        if verbose:
+            print(f"predict_memory,{arch},{us:.0f}us_per_call")
+    return out
+
+
+if __name__ == "__main__":
+    run()

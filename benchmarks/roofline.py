@@ -1,0 +1,117 @@
+"""Roofline analysis (deliverable g): per (arch x shape), the three terms
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs        (197 TF/s bf16)
+    memory     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+    collective = wire_bytes_per_device / ICI_bw           (~50 GB/s/link)
+
+derived from the compiled dry-run artifacts (single-pod 16x16 mesh, per the
+brief), plus MODEL_FLOPS = 6*N(active)*D (train) or 2*N(active)*tokens
+(serving) and the useful-compute ratio MODEL_FLOPS / HLO_FLOPs that
+catches remat/redundancy waste.  The dominant term is the hillclimb target
+(EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import csv
+import json
+import os
+import sys
+
+from benchmarks.common import EXP_DIR, load_dryrun
+
+PEAK_FLOPS = 197e12          # TPU v5e bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+N_DEV = 256
+
+
+def model_flops_per_device(arch: str, shape_name: str) -> float:
+    from repro.configs import SHAPES, get_config
+    from repro.core.parser import active_params, parse_model
+    from repro.core.spec import FULL_TRAIN
+    from repro.models import build_model
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rows = parse_model(build_model(cfg).spec, FULL_TRAIN)
+    n_active = active_params(rows)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / N_DEV
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / N_DEV
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch / N_DEV
+
+
+def bottleneck_hint(dom: str, rec: dict) -> str:
+    if dom == "compute":
+        return ("compute-bound: raise useful-ratio (less remat/recompute) "
+                "or accept — this is the roofline target")
+    if dom == "memory":
+        return ("HBM-bound: fuse/shrink transients (flash tiling, bf16 "
+                "stacks), raise arithmetic intensity per pass")
+    wb = (rec.get("loop_aware", {}).get("collective_wire_bytes")
+          or rec["collectives"]["wire_bytes_per_device"])
+    top = max(wb.items(), key=lambda kv: kv[1])[0] if wb else "?"
+    return (f"ICI-bound (mostly {top}): reshard to cut gathers, overlap "
+            f"collectives with compute, or compress payloads")
+
+
+def run(mesh: str = "16x16", verbose: bool = True) -> list[dict]:
+    records = load_dryrun(mesh)
+    rows = []
+    for rec in records:
+        la = rec.get("loop_aware")
+        if la:        # trip-count-aware accounting (see xla_metrics)
+            fl = la["flops_per_device"]
+            by = la["bytes_accessed_per_device"]
+            wire = la["total_wire_bytes_per_device"]
+        else:
+            fl = rec["cost"]["flops_per_device"]
+            by = rec["cost"]["bytes_accessed_per_device"]
+            wire = rec["collectives"]["total_wire_bytes_per_device"]
+        t_c = fl / PEAK_FLOPS
+        t_m = by / HBM_BW
+        t_x = wire / ICI_BW
+        dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+                  key=lambda kv: kv[1])[0]
+        mf = model_flops_per_device(rec["arch"], rec["shape"])
+        bound = max(t_c, t_m, t_x)
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": mesh,
+            "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": dom,
+            "model_flops_per_dev": mf,
+            "useful_ratio": mf / fl if fl else 0.0,
+            # fraction of roofline: useful work over the time the dominant
+            # term pins the step to (1.0 == perfectly compute-bound with
+            # zero waste)
+            "roofline_frac": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+            "hint": bottleneck_hint(dom, rec),
+        })
+    if verbose:
+        print(f"\n=== roofline terms per cell (mesh {mesh}; seconds/step; "
+              f"v5e: 197TF bf16, 819GB/s HBM, 50GB/s ICI) ===")
+        print(f"{'arch':<24s}{'shape':<13s}{'compute':>9s}{'memory':>9s}"
+              f"{'collect':>9s}{'dominant':>11s}{'useful':>8s}{'RLfrac':>8s}")
+        for r in sorted(rows, key=lambda r: (r['arch'], r['shape'])):
+            print(f"{r['arch']:<24s}{r['shape']:<13s}{r['compute_s']:>9.4f}"
+                  f"{r['memory_s']:>9.4f}{r['collective_s']:>9.4f}"
+                  f"{r['dominant']:>11s}{r['useful_ratio']:>8.2f}"
+                  f"{r['roofline_frac']:>8.2f}")
+    os.makedirs(EXP_DIR, exist_ok=True)
+    path = os.path.join(EXP_DIR, f"roofline_{mesh}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    if verbose:
+        print(f"wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

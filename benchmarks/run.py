@@ -1,0 +1,73 @@
+"""Benchmark orchestrator — one entry per paper table/figure + the
+beyond-paper tables.  Prints ``benchmark,metric,value`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run              # offline set
+    PYTHONPATH=src python -m benchmarks.run --paper      # + fig2a/b compiles
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true",
+                    help="also run the fig2a/fig2b compile sweeps (slow)")
+    args = ap.parse_args()
+
+    from benchmarks import arch_sweep, predictor_latency, roofline
+    from benchmarks.common import EXP_DIR
+
+    print("benchmark,metric,value")
+
+    # paper repro: fig 2a/2b (compile sweeps; reuse artifacts if present)
+    for name in ("fig2a", "fig2b"):
+        path = os.path.join(EXP_DIR, f"{name}.json")
+        if args.paper or not os.path.exists(path):
+            from benchmarks import fig2
+            fig2.run(verbose=True)
+            break
+    for name in ("fig2a", "fig2b"):
+        path = os.path.join(EXP_DIR, f"{name}.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                r = json.load(f)
+            paper = 13.0 if name == "fig2a" else 8.7
+            print(f"{name},mape_percent,{r['mape']:.1f}")
+            print(f"{name},paper_mape_percent,{paper}")
+
+    # beyond paper: whole-zoo sweep vs XLA ground truth
+    sweep = arch_sweep.run(verbose=True)
+    if sweep:
+        print(f"arch_sweep,mape_percent,{sweep['mape_total']:.1f}")
+        for k, v in sweep["mape_by_kind"].items():
+            print(f"arch_sweep,mape_{k}_percent,{v:.1f}")
+
+    # roofline terms per cell
+    rows = roofline.run(verbose=True)
+    if rows:
+        by_dom = {}
+        for r in rows:
+            by_dom[r["dominant"]] = by_dom.get(r["dominant"], 0) + 1
+        for k, v in by_dom.items():
+            print(f"roofline,cells_{k}_bound,{v}")
+        best = max(rows, key=lambda r: r["roofline_frac"])
+        print(f"roofline,best_fraction,{best['roofline_frac']:.2f}")
+
+    # predictor overhead (us per call — the anti-profiling pitch)
+    for arch, us in predictor_latency.run(verbose=False):
+        print(f"predictor_latency,{arch}_us_per_call,{us:.0f}")
+
+    # OoM guard: the planner's fit table for the production mesh
+    from benchmarks import planner_table
+    planner_table.run(verbose=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Quickstart: predict a training job's peak memory BEFORE launching it.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+The 30-second version of the paper: pick a model + hyperparameters, get a
+per-device peak-memory prediction and an OoM verdict for the target mesh —
+no profiling run, no compile, microseconds of arithmetic.
+"""
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.core import factors as FA
+from repro.core import planner
+from repro.core import predictor as PR
+from repro.core.spec import FULL_TRAIN, LLAVA_STAGE1, LLAVA_STAGE2
+from repro.launch import mesh as M
+from repro.models import build_model
+
+GiB = 1024 ** 3
+
+# ---------------------------------------------------------------------------
+# 1. Predict peak memory for llama3.2-3b training on the production mesh
+# ---------------------------------------------------------------------------
+cfg = get_config("llama3.2-3b")
+model = build_model(cfg)
+shape = SHAPES["train_4k"]
+
+ctx = FA.PredictContext(
+    mesh_shape={"data": 16, "model": 16},
+    rules=M.arch_rules(cfg, "train"),
+    optimizer=cfg.optimizer, remat=cfg.remat, backend="tpu",
+    global_batch=shape.global_batch, seq_len=shape.seq_len, kind="train")
+pred = PR.predict(model, FULL_TRAIN, ctx)
+print(f"== {cfg.name} x {shape.name} on (data=16, model=16), per device ==")
+print(pred.summary())
+
+# ---------------------------------------------------------------------------
+# 2. The multimodal factorization (the paper's core): training behaviour
+#    changes memory — LLaVA stage-1 vs stage-2 vs full
+# ---------------------------------------------------------------------------
+vlm = build_model(get_config("llava15-7b"))
+vctx = FA.PredictContext(mesh_shape={"data": 8}, optimizer="adamw",
+                         global_batch=16, seq_len=1024, kind="train",
+                         backend="tpu")
+print("\n== LLaVA-1.5-7B, DP=8: memory depends on the TRAINING BEHAVIOUR ==")
+for policy in (LLAVA_STAGE1, LLAVA_STAGE2, FULL_TRAIN):
+    p = PR.predict(vlm, policy, vctx)
+    print(f"  {policy.name:<14s} peak {p.peak_bytes / GiB:7.2f} GiB "
+          f"(opt {p.opt_bytes / GiB:6.2f}, grads {p.grad_bytes / GiB:6.2f},"
+          f" acts {p.act_saved_bytes / GiB:6.2f})")
+
+# ---------------------------------------------------------------------------
+# 3. The OoM guard + planner
+# ---------------------------------------------------------------------------
+print("\n== OoM guard: arctic-480b train_4k on a 16 GiB v5e ==")
+report = planner.plan("arctic-480b", "train_4k",
+                      {"data": 16, "model": 16}, backend="tpu")
+print(report)
+adam = planner.adam_state_bytes("arctic-480b")
+print(f"(fyi: plain Adam would need {adam / GiB:.0f} GiB of optimizer "
+      f"state — more than the whole pod's HBM)")

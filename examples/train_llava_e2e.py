@@ -1,0 +1,102 @@
+"""End-to-end driver: train a ~100M-param LLaVA-style multimodal model for
+a few hundred steps on CPU with the FULL production stack — memory
+prediction first (the paper's workflow), then fault-tolerant training with
+async checkpoints, deterministic data, straggler detection and restart.
+
+    PYTHONPATH=src python examples/train_llava_e2e.py [--steps 200]
+"""
+
+import argparse
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.configs import ShapeConfig, get_config, VLMConfig
+from repro.core import factors as FA
+from repro.core import predictor as PR
+from repro.core.spec import LLAVA_STAGE2
+from repro.data.pipeline import SyntheticPipeline
+from repro.models import build_model
+from repro.models import param as PM
+from repro.runtime import FaultConfig, ResilientTrainer
+from repro.train import OptimizerConfig, TrainState, make_train_step
+from repro.train.optimizer import init_opt_state
+
+GiB = 1024 ** 3
+
+
+def llava_100m():
+    """~100M-param LLaVA-style config (real ViT tower + projector + LM)."""
+    base = get_config("llava15-7b")
+    return dataclasses.replace(
+        base, name="llava-100m",
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=8, d_ff=2048,
+        vocab=32000, head_dim=64,
+        vlm=VLMConfig(d_vision=256, n_image_tokens=64, projector_layers=2,
+                      vision_tower=True, vit_layers=4, vit_heads=4,
+                      vit_d_ff=1024, vit_patch=14, vit_image_size=112))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    # total sequence = 64 image tokens + text; keep text non-degenerate
+    ap.add_argument("--seq", type=int, default=192)
+    args = ap.parse_args()
+
+    cfg = llava_100m()
+    model = build_model(cfg)
+    shape = ShapeConfig("e2e", args.seq, args.batch, "train")
+    policy = LLAVA_STAGE2                       # vision tower frozen
+
+    # 1. paper workflow: predict memory BEFORE training
+    ctx = FA.PredictContext(mesh_shape={}, optimizer="adamw",
+                            global_batch=args.batch, seq_len=args.seq,
+                            kind="train", backend="cpu")
+    pred = PR.predict(model, policy, ctx)
+    print(f"predicted peak memory: {pred.peak_bytes / GiB:.2f} GiB "
+          f"(params {pred.param_bytes / GiB:.2f}, "
+          f"opt {pred.opt_bytes / GiB:.2f})")
+    for mod, parts in pred.per_module.items():
+        if parts["param"]:
+            tag = "trainable" if parts["trainable"] else "FROZEN"
+            print(f"  {mod:<42s} {tag:>9s} "
+                  f"param {parts['param'] / GiB:6.3f} GiB "
+                  f"opt {parts['opt'] / GiB:6.3f} GiB")
+
+    # 2. build the training state
+    params = model.init(jax.random.PRNGKey(0))
+    n = PM.count_params(params)
+    print(f"\nmodel: {cfg.name}, {n / 1e6:.1f}M params")
+    mask = PM.trainable_mask(model.spec, policy)
+    trainable, _ = PM.partition_params(params, mask)
+    opt_cfg = OptimizerConfig(name="adamw", lr=3e-4)
+    state = TrainState(params=params,
+                       opt=init_opt_state(trainable, opt_cfg),
+                       step=jnp.int32(0))
+
+    # 3. fault-tolerant training loop (async ckpt, restart, stragglers)
+    pipe = SyntheticPipeline(cfg, shape, n_shards=2)
+    step_fn = jax.jit(make_train_step(model, policy, opt_cfg))
+    ckpt_dir = os.path.join(tempfile.gettempdir(), "repro_llava_e2e")
+    trainer = ResilientTrainer(
+        train_step=step_fn, pipeline=pipe,
+        checkpointer=Checkpointer(ckpt_dir, keep=2),
+        fault_cfg=FaultConfig(ckpt_every=50),
+        make_batch=lambda s: {k: jnp.asarray(v)
+                              for k, v in pipe.global_batch(s).items()})
+    state, history = trainer.run(state, start_step=0, n_steps=args.steps,
+                                 log_every=20)
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"\nloss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+    print(f"checkpoints in {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

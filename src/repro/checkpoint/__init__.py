@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpointing import (Checkpointer, save_checkpoint,  # noqa: F401
+                                            load_checkpoint, latest_step)

@@ -1,0 +1,146 @@
+"""Checkpointing with elastic resharding and async writes.
+
+Layout: ``<dir>/step_<N>/{meta.json, leaf_<i>.npy}`` — leaves are stored as
+full logical arrays with their treedef path, so a checkpoint written on any
+mesh restores onto any other mesh (the loader re-shards via device_put).
+Writes go through a background thread (training never blocks on IO) into a
+tmp dir that is atomically renamed — a crash mid-write can never corrupt
+the latest complete checkpoint.  ``keep`` bounds disk usage.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _paths(tree) -> list[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: x is None)
+    return ["/".join(str(k) for k in path) for path, _ in flat]
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: Optional[dict] = None) -> str:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: x is None)
+    tmp = os.path.join(directory, f".tmp_step_{step}")
+    final = os.path.join(directory, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    meta = {"step": step, "extra": extra or {}, "leaves": []}
+    for i, (path, leaf) in enumerate(flat):
+        name = f"leaf_{i}.npy"
+        if leaf is None:
+            meta["leaves"].append({"path": "/".join(map(str, path)),
+                                   "none": True})
+            continue
+        arr = np.asarray(jax.device_get(leaf))
+        # np.save cannot represent ml_dtypes (bfloat16 -> void); store the
+        # raw bytes and record the true dtype in meta.
+        np.save(os.path.join(tmp, name),
+                np.frombuffer(np.ascontiguousarray(arr).tobytes(),
+                              dtype=np.uint8))
+        meta["leaves"].append({"path": "/".join(map(str, path)),
+                               "file": name, "dtype": str(arr.dtype),
+                               "shape": list(arr.shape)})
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, like: Any,
+                    shardings: Any = None) -> Any:
+    """Restore into the structure of ``like``; optional pytree of
+    NamedShardings re-shards each leaf for the CURRENT mesh (elastic)."""
+    d = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(
+        like, is_leaf=lambda x: x is None)
+    by_path = {m["path"]: m for m in meta["leaves"]}
+    flat_sh = (treedef.flatten_up_to(shardings)
+               if shardings is not None else [None] * len(flat_like))
+    out = []
+    for (path, leaf), sh in zip(flat_like, flat_sh):
+        key = "/".join(str(k) for k in path)
+        m = by_path.get(key)
+        if m is None or m.get("none"):
+            out.append(None)
+            continue
+        import jax.numpy as jnp
+        raw = np.load(os.path.join(d, m["file"]))
+        dtype = jnp.dtype(m["dtype"])
+        arr = np.frombuffer(raw.tobytes(), dtype=dtype).reshape(m["shape"])
+        if leaf is not None and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@dataclass
+class Checkpointer:
+    """Async checkpointer with retention."""
+
+    directory: str
+    keep: int = 3
+    _thread: Optional[threading.Thread] = field(default=None, repr=False)
+    _error: list = field(default_factory=list, repr=False)
+
+    def save_async(self, step: int, tree: Any,
+                   extra: Optional[dict] = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(
+            lambda x: None if x is None else np.asarray(jax.device_get(x)),
+            tree, is_leaf=lambda x: x is None)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra)
+                self._gc()
+            except Exception as e:       # surfaced on next wait()
+                self._error.append(e)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error:
+            raise self._error.pop()
+
+    def _gc(self) -> None:
+        steps = sorted(int(m.group(1)) for d in os.listdir(self.directory)
+                       if (m := re.fullmatch(r"step_(\d+)", d)))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, like: Any, shardings: Any = None):
+        self.wait()
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return step, load_checkpoint(self.directory, step, like, shardings)

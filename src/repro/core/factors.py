@@ -1,0 +1,273 @@
+"""Per-factor analytical equations (paper workflow steps 5-6).
+
+For every parsed layer, four factors are computed:
+
+* ``M_param`` — parameter bytes, divided by the layer's real shard factor
+  (TP over ``model``; optionally FSDP over ``data``).
+* ``M_grad``  — gradient bytes (param dtype), zero for frozen layers.  In a
+  single compiled XLA train step the full (TP-sharded) gradient pytree is
+  live at the end of the backward pass, so grads share the *param* shard
+  factor — the ZeRO reduce-scatter changes the persistent accumulator, not
+  the transient peak.
+* ``M_opt``   — optimizer-state bytes (AdamW: fp32 master + m + v; 8-bit
+  Adam: fp32 master + int8 m/v + block scales; Adafactor: factored second
+  moment), ZeRO-sharded over ``data`` on top of the param sharding.
+* ``M_act``   — activation bytes saved for backward, a function of the
+  remat policy and of the training behaviour: frozen modules save nothing
+  (the paper's central multimodal observation).
+
+All equations take shard factors from the SAME axis-resolution logic the
+runtime uses (``repro.mesh_ctx``), so prediction and execution cannot
+disagree about sharding.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.parser import ParsedLayer
+from repro.core.spec import ActTerm, ParamSpec, dtype_bytes
+from repro.mesh_ctx import DEFAULT_RULES, shard_factor
+
+AXIS_LAYERS = "layers"
+
+
+@dataclass(frozen=True)
+class PredictContext:
+    """Everything the factor equations need to know about the run."""
+
+    mesh_shape: dict[str, int] = field(default_factory=dict)
+    rules: dict = field(default_factory=lambda: dict(DEFAULT_RULES))
+    optimizer: str = "adamw"
+    zero: bool = True              # ZeRO: opt states sharded over data
+    fsdp: bool = False             # params/grads sharded over data too
+    remat: str = "block"
+    global_batch: int = 1
+    seq_len: int = 1
+    enc_seq: int = 0
+    kind: str = "train"            # train | prefill | decode
+    max_len: int = 0               # KV-cache length for decode
+    grad_accum: int = 1
+    grad_dtype_bytes: int = 2      # bf16 grads
+    master_fp32: bool = True       # keep fp32 master copy in optimizer
+    # Oracle backend the prediction targets.  "tpu": native bf16 compute
+    # (deployment prediction).  "cpu": XLA:CPU float-normalization — every
+    # bf16 op is legalized to f32-with-converts and LICM hoists the
+    # converts of loop-carried stacks, so saved bf16 buffers effectively
+    # exist twice (bf16 + f32) at the fwd->bwd boundary and gradients
+    # accumulate in f32.  Used when validating against this container's
+    # compiled-memory ground truth (see DESIGN.md §2).
+    backend: str = "cpu"
+
+    @property
+    def act_saved_bytes_per_bf16(self) -> int:
+        return 6 if self.backend == "cpu" else 2      # bf16 + hoisted f32
+
+    @property
+    def act_transient_mult(self) -> int:
+        return 2 if self.backend == "cpu" else 1      # f32 twins of bf16
+
+    @property
+    def eff_grad_bytes(self) -> int:
+        if self.grad_accum > 1:
+            return 4                     # fp32 cross-microbatch accumulator
+        return self.grad_dtype_bytes
+
+    # In-flight fp32 new-state stacks of the (chunked) optimizer update
+    # before buffer assignment aliases them — ZeRO-sharded, so the term
+    # shrinks with DP.  Coefficient calibrated on the fig2a DP sweep
+    # (llava15-7b, SeqLen 1024, MBS 16) and validated on fig2b + the
+    # arch sweep; see EXPERIMENTS.md §Calibration.
+    OPT_UPDATE_TRANSIENT = 0.6
+
+    @property
+    def opt_transient_frac(self) -> float:
+        return self.OPT_UPDATE_TRANSIENT if self.backend == "cpu" else 0.0
+
+    @property
+    def micro_batch(self) -> int:
+        """Activations live per-microbatch under gradient accumulation."""
+        return max(self.global_batch // max(self.grad_accum, 1), 1)
+
+    @property
+    def dp(self) -> int:
+        return (self.mesh_shape.get("data", 1)
+                * self.mesh_shape.get("pod", 1))
+
+
+def _stacked(p: ParamSpec, row: ParsedLayer) -> tuple[tuple, tuple]:
+    """Shape/axes including the scan-stack leading dim."""
+    if row.scanned:
+        return (row.repeat,) + tuple(p.shape), \
+            (AXIS_LAYERS,) + (tuple(p.axes) if p.axes
+                              else (None,) * len(p.shape))
+    return tuple(p.shape), tuple(p.axes) if p.axes else (None,) * len(p.shape)
+
+
+def _psharding(p: ParamSpec, row: ParsedLayer, ctx: PredictContext) -> int:
+    shape, axes = _stacked(p, row)
+    extra = ("data",) if ctx.fsdp else ()
+    return shard_factor(shape, axes, ctx.mesh_shape, ctx.rules, extra)
+
+
+# ---------------------------------------------------------------------------
+# factor 1: parameters
+# ---------------------------------------------------------------------------
+
+
+def param_factor(row: ParsedLayer, ctx: PredictContext) -> int:
+    total = 0
+    for p in row.layer.params.values():
+        # stacked total bytes divided by the stacked shard factor
+        total += p.nbytes * row.repeat // _psharding(p, row, ctx)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# factor 2: gradients
+# ---------------------------------------------------------------------------
+
+
+def grad_factor(row: ParsedLayer, ctx: PredictContext) -> int:
+    if not row.trainable or ctx.kind != "train":
+        return 0
+    total = 0
+    for p in row.layer.params.values():
+        # grads share the param sharding (TP / FSDP); dtype per backend
+        n = p.size * row.repeat
+        total += n * ctx.eff_grad_bytes // _psharding(p, row, ctx)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# factor 3: optimizer states
+# ---------------------------------------------------------------------------
+
+
+def opt_bytes_for(p: ParamSpec, stacked_shape: tuple, optimizer: str,
+                  master_fp32: bool = True) -> int:
+    """Bytes of optimizer state for one (possibly stacked) param tensor.
+
+    Mirrors train/optimizer.py exactly: any change there must land here.
+    """
+    size = math.prod(stacked_shape) if stacked_shape else 1
+    if optimizer == "adamw":
+        return size * (4 + 4 + (4 if master_fp32 else 0))      # m, v, master
+    if optimizer == "adamw8bit":
+        nblk = -(-size // 256)                                 # padded blocks
+        scales = 2 * nblk * 4                                  # per-block fp32
+        return 2 * nblk * 256 + size * (4 if master_fp32 else 0) + scales
+    if optimizer == "adafactor":
+        if len(stacked_shape) >= 2:
+            r = math.prod(stacked_shape[:-1])
+            c = math.prod(stacked_shape[:-2]) * stacked_shape[-1]
+            return 4 * (r + c)                                 # v_row + v_col
+        return 4 * size                                        # full v
+    raise ValueError(optimizer)
+
+
+def opt_factor(row: ParsedLayer, ctx: PredictContext) -> int:
+    if not row.trainable or ctx.kind != "train":
+        return 0
+    total = 0
+    for p in row.layer.params.values():
+        shape, axes = _stacked(p, row)
+        rep = 1 if row.scanned else row.repeat
+        extra = ("data",) if (ctx.zero or ctx.fsdp) else ()
+        denom = shard_factor(shape, axes, ctx.mesh_shape, ctx.rules, extra)
+        total += opt_bytes_for(p, shape, ctx.optimizer,
+                               ctx.master_fp32) * rep // denom
+    return total
+
+
+# ---------------------------------------------------------------------------
+# factor 4: activations
+# ---------------------------------------------------------------------------
+
+
+def _term_bytes(t: ActTerm, ctx: PredictContext, batch: int,
+                saved: bool = False) -> int:
+    shape = t.concrete_shape(batch, ctx.seq_len, ctx.enc_seq)
+    axes = t.axes if t.axes else (None,) * len(shape)
+    denom = shard_factor(shape, axes, ctx.mesh_shape, ctx.rules)
+    nb = dtype_bytes(t.dtype)
+    if nb == 2:                       # bf16 tensors feel the cpu-oracle
+        nb = ctx.act_saved_bytes_per_bf16 if saved \
+            else nb * ctx.act_transient_mult
+    return math.prod(shape) * nb // max(denom, 1)
+
+
+_DOT_KINDS = {"linear", "attention", "mlp", "moe", "ssm", "embedding"}
+
+
+def _is_dot_term(t: ActTerm) -> bool:
+    return not (t.name.endswith(".lse") or t.dtype == "int32")
+
+
+def layer_act_terms(row: ParsedLayer, ctx: PredictContext,
+                    batch: Optional[int] = None,
+                    saved: bool = False) -> dict[str, int]:
+    """Bytes of each activation tensor of ONE instance of this layer."""
+    b = batch if batch is not None else ctx.micro_batch
+    return {t.name: _term_bytes(t, ctx, b, saved) for t in row.layer.acts}
+
+
+def act_factor_saved(row: ParsedLayer, ctx: PredictContext) -> int:
+    """Activation bytes SAVED for backward across all repeats of the layer
+    under the remat policy.  Frozen layers save nothing (their backward is
+    dead-code-eliminated); the paper's M_act rule for multimodal models.
+    """
+    if ctx.kind != "train" or not row.trainable or not row.layer.acts:
+        return 0
+    terms = layer_act_terms(row, ctx, saved=True)
+    # weight-tied python-unrolled invocations (zamba2 shared blocks): all
+    # invocations' activations are saved — no scan, no remat
+    inv = row.layer.meta.get("invocation_repeat")
+    if inv:
+        return sum(terms.values()) * inv
+    if not row.scanned or ctx.remat == "none":
+        return sum(terms.values()) * row.repeat
+    if ctx.remat == "dots":
+        keep = sum(v for t, v in zip(row.layer.acts, terms.values())
+                   if _is_dot_term(t))
+        return keep * row.repeat
+    # remat == "block": only the scan carry is saved per iteration; it is
+    # attributed to the block's first layer (its ".in" term == block input).
+    first = row.layer.acts[0]
+    if first.name.endswith(".in") and row.layer.kind in ("rmsnorm",
+                                                         "layernorm"):
+        return terms[first.name] * row.repeat
+    return 0
+
+
+FLASH_CHUNK = 1024
+
+
+def _flash_tile_bytes(row: ParsedLayer, ctx: PredictContext) -> int:
+    """fp32 probability tiles of the two-level blocked flash attention:
+    (B, q_chunk, H, kv_chunk) — the dominant attention transient."""
+    meta = row.layer.meta
+    if row.layer.kind != "attention" or ctx.kind == "decode":
+        return 0
+    h = meta.get("n_heads", 1)
+    qc = min(FLASH_CHUNK, ctx.seq_len)
+    b = ctx.micro_batch
+    denom = shard_factor((b, qc, h, qc), ("batch", "seq", "heads", None),
+                         ctx.mesh_shape, ctx.rules)
+    return b * qc * h * qc * 4 // max(denom, 1)
+
+
+def act_factor_transient(row: ParsedLayer, ctx: PredictContext) -> int:
+    """Peak transient working set of ONE instance (recomputed block during
+    its backward, or plain forward for frozen modules)."""
+    if not row.layer.acts:
+        return 0
+    total = sum(layer_act_terms(row, ctx).values())
+    tiles = _flash_tile_bytes(row, ctx)
+    if ctx.kind == "train" and row.trainable:
+        # recomputed fwd + cotangents (+ p and ds score tiles in the
+        # flash backward)
+        return 2 * total + 2 * tiles
+    return total + tiles

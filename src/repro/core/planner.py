@@ -1,0 +1,119 @@
+"""OoM guard + configuration planner — the paper's purpose, closed-loop.
+
+``check`` predicts a cell's peak per-device memory BEFORE any compile or
+launch and compares it to the chip's HBM.  ``plan`` searches the cheap
+knobs (gradient accumulation, remat policy) for the first configuration
+that fits, using only Eq.1 arithmetic — microseconds per candidate, vs a
+failed cluster launch per guess without it.
+
+This is also where arctic-480b's published memory plan comes from: Adam's
+fp32 states alone (~5.2 TiB) can never fit a 256-chip v5e pod, which the
+guard flags analytically; the shipped config therefore uses Adafactor +
+2-axis FSDP (see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+from repro.core import factors as F
+from repro.core import predictor as PR
+from repro.core.spec import FULL_TRAIN, TrainPolicy
+
+GiB = 1024 ** 3
+V5E_HBM = 16 * GiB
+# XLA reserves working space; plan against a fraction of physical HBM.
+HEADROOM = 0.92
+
+
+@dataclass
+class PlanReport:
+    arch: str
+    shape: str
+    fits: bool
+    peak_bytes: int
+    budget_bytes: int
+    grad_accum: int = 1
+    remat: str = "block"
+    note: str = ""
+    prediction: Optional[PR.PredictedMemory] = None
+
+    def __str__(self) -> str:
+        verdict = "FITS" if self.fits else "OOM "
+        return (f"[{verdict}] {self.arch} x {self.shape}: "
+                f"peak {self.peak_bytes / GiB:.2f} GiB vs budget "
+                f"{self.budget_bytes / GiB:.2f} GiB"
+                + (f" (grad_accum={self.grad_accum}, remat={self.remat})"
+                   if self.grad_accum > 1 else "")
+                + (f" — {self.note}" if self.note else ""))
+
+
+def _context(cfg, shape, mesh_shape, *, backend="tpu", grad_accum=1,
+             remat=None, optimizer=None) -> F.PredictContext:
+    from repro.launch import mesh as M
+    opt = optimizer or cfg.optimizer
+    return F.PredictContext(
+        mesh_shape=mesh_shape, rules=M.arch_rules(cfg, shape.kind),
+        optimizer=opt, fsdp=cfg.fsdp, master_fp32=opt != "adafactor",
+        remat=remat or cfg.remat, backend=backend,
+        global_batch=shape.global_batch, seq_len=shape.seq_len,
+        enc_seq=int(shape.seq_len * cfg.encdec.enc_seq_ratio)
+        if cfg.encdec else 0,
+        kind=shape.kind, max_len=shape.seq_len, grad_accum=grad_accum)
+
+
+def check(arch: str, shape_name: str, mesh_shape: dict,
+          hbm_bytes: int = V5E_HBM, policy: TrainPolicy = FULL_TRAIN,
+          backend: str = "tpu", grad_accum: int = 1,
+          remat: Optional[str] = None) -> PlanReport:
+    from repro.configs import SHAPES, get_config
+    from repro.models import build_model
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    ctx = _context(cfg, shape, mesh_shape, backend=backend,
+                   grad_accum=grad_accum, remat=remat)
+    pred = PR.predict(model, policy, ctx)
+    budget = int(hbm_bytes * HEADROOM)
+    return PlanReport(arch=arch, shape=shape_name,
+                      fits=pred.peak_bytes <= budget,
+                      peak_bytes=pred.peak_bytes, budget_bytes=budget,
+                      grad_accum=grad_accum, remat=remat or cfg.remat,
+                      prediction=pred)
+
+
+def plan(arch: str, shape_name: str, mesh_shape: dict,
+         hbm_bytes: int = V5E_HBM, policy: TrainPolicy = FULL_TRAIN,
+         backend: str = "tpu") -> PlanReport:
+    """First-fit search over (remat, grad_accum); pure arithmetic."""
+    from repro.configs import SHAPES, get_config
+    shape = SHAPES[shape_name]
+    base = check(arch, shape_name, mesh_shape, hbm_bytes, policy, backend)
+    if base.fits or shape.kind != "train":
+        return base
+    cfg = get_config(arch)
+    for remat in (cfg.remat, "block"):
+        for accum in (1, 2, 4, 8, 16, 32):
+            if shape.global_batch % accum:
+                continue
+            r = check(arch, shape_name, mesh_shape, hbm_bytes, policy,
+                      backend, grad_accum=accum, remat=remat)
+            if r.fits:
+                r.note = f"planner: accum x{accum} fits the budget"
+                return r
+    base.note = ("no (remat, grad_accum) configuration fits — needs a "
+                 "bigger mesh, more sharding, or a leaner optimizer")
+    return base
+
+
+def adam_state_bytes(arch: str) -> int:
+    """Analytic Adam fp32 state (m+v+master) for the full model — the
+    arctic-480b infeasibility argument."""
+    from repro.configs import get_config
+    from repro.core.parser import parse_model, total_params
+    from repro.models import build_model
+    n = total_params(parse_model(build_model(get_config(arch)).spec,
+                                 FULL_TRAIN))
+    return n * 12

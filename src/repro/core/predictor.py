@@ -1,0 +1,253 @@
+"""Peak-memory predictor (paper workflow step 6-7 + Eq. 1).
+
+``predict(model, policy, ctx)`` evaluates the four factors for every parsed
+layer and aggregates them with a schedule model of the compiled XLA step:
+
+    peak = M_param + M_opt + M_grad                (persistent + backward)
+         + M_act_saved (remat-aware scan carries)
+         + max transient working set (one block's recomputed backward)
+         + loss-head terms (hidden + one vocab-sharded logits chunk)
+         + batch inputs (+ KV/SSM caches for serving)
+
+Per-module subtotals are reported so the multimodal structure (frozen
+vision tower vs. trainable language model) is visible, as in the paper.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from repro.configs import ArchConfig
+from repro.core import factors as F
+from repro.core.parser import ParsedLayer, parse_model
+from repro.core.spec import TrainPolicy, dtype_bytes
+from repro.mesh_ctx import shard_factor
+
+GiB = 1024 ** 3
+
+
+@dataclass
+class PredictedMemory:
+    param_bytes: int = 0
+    grad_bytes: int = 0
+    opt_bytes: int = 0
+    act_saved_bytes: int = 0
+    act_transient_bytes: int = 0
+    loss_bytes: int = 0
+    input_bytes: int = 0
+    cache_bytes: int = 0
+    # updated trainable params: the optimizer writes NEW buffers while the
+    # donated inputs are still live, so they cannot alias — one extra copy
+    # of the trainable params exists at the end of every train step.
+    output_copy_bytes: int = 0
+    per_module: dict = field(default_factory=dict)
+
+    @property
+    def peak_bytes(self) -> int:
+        return (self.param_bytes + self.grad_bytes + self.opt_bytes
+                + self.act_saved_bytes + self.act_transient_bytes
+                + self.loss_bytes + self.input_bytes + self.cache_bytes
+                + self.output_copy_bytes)
+
+    def summary(self) -> str:
+        rows = [("params", self.param_bytes), ("grads", self.grad_bytes),
+                ("opt", self.opt_bytes), ("act_saved", self.act_saved_bytes),
+                ("act_trans", self.act_transient_bytes),
+                ("loss", self.loss_bytes), ("inputs", self.input_bytes),
+                ("cache", self.cache_bytes),
+                ("out_copy", self.output_copy_bytes),
+                ("PEAK", self.peak_bytes)]
+        return "\n".join(f"  {k:<10s} {v / GiB:9.3f} GiB" for k, v in rows)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _loss_terms(cfg: ArchConfig, ctx: F.PredictContext) -> int:
+    """hidden (B,S,D) bf16 saved + one logits chunk fp32 (vocab-sharded),
+    forward + backward transient."""
+    if ctx.kind != "train":
+        # decode/prefill logits: (B, 1, V) fp32
+        b = ctx.global_batch
+        denom = shard_factor((b, 1, cfg.vocab), ("batch", None, "vocab"),
+                             ctx.mesh_shape, ctx.rules)
+        return b * cfg.vocab * 4 // max(denom, 1)
+    from repro.models.transformer import LOSS_CHUNK
+    b, s = ctx.micro_batch, ctx.seq_len
+    hid_denom = shard_factor((b, s, cfg.d_model), ("batch", "seq", None),
+                             ctx.mesh_shape, ctx.rules)
+    hidden = b * s * cfg.d_model * 2 // max(hid_denom, 1)
+    chunk = min(LOSS_CHUNK, s)
+    logit_denom = shard_factor((b, chunk, cfg.vocab),
+                               ("batch", None, "vocab"),
+                               ctx.mesh_shape, ctx.rules)
+    logits = 2 * b * chunk * cfg.vocab * 4 // max(logit_denom, 1)
+    return hidden + logits
+
+
+def _input_bytes(model, shape_kind: str, ctx: F.PredictContext) -> int:
+    """Bytes of the batch arguments, sharded over batch."""
+    from repro.configs import ShapeConfig
+    shape = ShapeConfig("tmp", ctx.seq_len, ctx.global_batch, shape_kind)
+    total = 0
+    for arr in model.batch_spec(shape).values():
+        denom = shard_factor(arr.shape,
+                             ("batch",) + (None,) * (len(arr.shape) - 1),
+                             ctx.mesh_shape, ctx.rules)
+        total += math.prod(arr.shape) * arr.dtype.itemsize // max(denom, 1)
+    return total
+
+
+def _cache_bytes(model, ctx: F.PredictContext,
+                 rows: list[ParsedLayer]) -> int:
+    """KV / latent / SSM cache bytes for serving steps.
+
+    Shapes/axes mirror the runtime cache layouts exactly (5-D GQA stacks,
+    4-D MLA latents, 5-D SSM states) so non-divisible head counts replicate
+    in prediction just as they do in execution.  On the cpu oracle a decode
+    step's bf16 KV stacks additionally exist as a hoisted fp32 twin
+    (XLA:CPU float normalization + LICM), hence the 3x multiplier.
+    """
+    if ctx.kind == "train":
+        return 0
+    b = ctx.global_batch
+    slen = ctx.max_len or ctx.seq_len
+    bf16_mult = 3 if (ctx.backend == "cpu" and ctx.kind == "decode") else 1
+    total = 0
+    for r in rows:
+        meta = r.layer.meta
+        rep = meta.get("cache_repeat", r.repeat)
+        if r.layer.kind == "attention" and "kv_bytes_per_token" in meta:
+            tokens = (ctx.enc_seq or slen) if meta.get("cross") else slen
+            if meta.get("attn_kind") == "mla":
+                mla = meta["mla"]
+                width = mla.kv_lora_rank + mla.qk_rope_head_dim
+                shape = (rep, b, tokens, width)
+                axes = ("layers", "batch", "cache_seq", None)
+                n = math.prod(shape) * 2                   # bf16 latent
+            else:
+                hkv, hd = meta["n_kv_heads"], meta["head_dim"]
+                shape = (rep, b, tokens, hkv, hd)
+                axes = ("layers", "batch", "cache_seq", "kv_heads", None)
+                n = 2 * math.prod(shape) * 2               # k + v, bf16
+            denom = shard_factor(shape, axes, ctx.mesh_shape, ctx.rules)
+            total += n * bf16_mult // max(denom, 1)
+        elif r.layer.kind == "ssm":
+            h, p, n_st = meta["n_heads"], meta["head_dim"], meta["d_state"]
+            shape = (rep, b, h, p, n_st)
+            axes = ("layers", "batch", "ssm", None, None)
+            denom = shard_factor(shape, axes, ctx.mesh_shape, ctx.rules)
+            total += 4 * math.prod(shape) // max(denom, 1)  # fp32 state
+            conv_shape = (rep, b, meta["d_conv"] - 1, meta["conv_ch"])
+            caxes = ("layers", "batch", None, "ffn")
+            cdenom = shard_factor(conv_shape, caxes, ctx.mesh_shape,
+                                  ctx.rules)
+            total += 2 * math.prod(conv_shape) * bf16_mult \
+                // max(cdenom, 1)
+    return total
+
+
+def _decode_transients(rows: list[ParsedLayer], ctx: F.PredictContext) -> int:
+    """Largest per-layer transient of a decode step: fp32 scores over the
+    cache, the in-scan cache-slice update copy, and (naive MLA) the
+    per-layer expanded K/V."""
+    b, slen = ctx.global_batch, ctx.max_len or ctx.seq_len
+    worst = 0
+    for r in rows:
+        meta = r.layer.meta
+        if r.layer.kind != "attention":
+            continue
+        h = meta.get("n_heads", 1)
+        denom = shard_factor((b, h, slen), ("batch", "heads", "cache_seq"),
+                             ctx.mesh_shape, ctx.rules)
+        t = 2 * b * h * slen * 4 // max(denom, 1)     # scores + softmax
+        if meta.get("attn_kind") == "mla":
+            mla = meta["mla"]
+            qk = mla.qk_nope_head_dim + mla.qk_rope_head_dim
+            d2 = shard_factor((b, slen, h, qk + mla.v_head_dim),
+                              ("batch", "cache_seq", "heads", None),
+                              ctx.mesh_shape, ctx.rules)
+            t += b * slen * h * (qk + mla.v_head_dim) * 2 // max(d2, 1)
+        elif "n_kv_heads" in meta:
+            # dynamic-update-slice inside the layer scan cannot alias the
+            # carried stack slice -> one layer's k+v update copy is live
+            hkv, hd = meta["n_kv_heads"], meta["head_dim"]
+            d3 = shard_factor((b, slen, hkv, hd),
+                              ("batch", "cache_seq", "kv_heads", None),
+                              ctx.mesh_shape, ctx.rules)
+            t += 2 * b * slen * hkv * hd * 2 // max(d3, 1)
+        worst = max(worst, t)
+    return worst
+
+
+def _embed_gather_bytes(rows: list[ParsedLayer],
+                        ctx: F.PredictContext) -> int:
+    """Tied (vocab-sharded) embedding tables are fully all-gathered by the
+    token lookup — fp32 on the cpu oracle (float normalization)."""
+    total = 0
+    for r in rows:
+        meta = r.layer.meta
+        if r.layer.kind == "embedding" and meta.get("lookup_gather"):
+            per = 4 if ctx.backend == "cpu" else 2
+            total += meta["vocab"] * meta["d_model"] * per
+    return total
+
+
+def predict(model, policy: TrainPolicy, ctx: F.PredictContext,
+            shape_kind: str = None) -> PredictedMemory:
+    cfg: ArchConfig = model.cfg
+    rows = parse_model(model.spec, policy)
+    kind = shape_kind or ctx.kind
+    out = PredictedMemory()
+
+    worst_transient = 0
+    for r in rows:
+        p = F.param_factor(r, ctx)
+        g = F.grad_factor(r, ctx)
+        o = F.opt_factor(r, ctx)
+        a = F.act_factor_saved(r, ctx)
+        if ctx.kind == "train" and r.trainable:
+            out.output_copy_bytes += p
+        out.param_bytes += p
+        out.grad_bytes += g
+        out.opt_bytes += o
+        out.act_saved_bytes += a
+        mod = out.per_module.setdefault(
+            r.module_path, {"param": 0, "grad": 0, "opt": 0, "act": 0,
+                            "trainable": r.trainable})
+        mod["param"] += p
+        mod["grad"] += g
+        mod["opt"] += o
+        mod["act"] += a
+        if ctx.kind == "train":
+            # one block's recomputed backward (or fwd-only if frozen) is the
+            # live transient while the scan walks backward
+            block = sum(F.act_factor_transient(rr, ctx) for rr in rows
+                        if rr.module_path == r.module_path and rr.scanned) \
+                if r.scanned else F.act_factor_transient(r, ctx)
+            worst_transient = max(worst_transient, block)
+
+    if ctx.kind == "train":
+        out.act_transient_bytes = worst_transient
+    elif kind == "decode":
+        out.act_transient_bytes = _decode_transients(rows, ctx)
+    else:  # prefill: no backward — transient = one block's forward set
+        per_block: dict[str, int] = {}
+        for r in rows:
+            if r.scanned:
+                per_block[r.module_path] = per_block.get(r.module_path, 0) \
+                    + F.act_factor_transient(r, ctx)
+        out.act_transient_bytes = max(per_block.values()) if per_block else 0
+
+    out.loss_bytes = _loss_terms(cfg, ctx)
+    out.input_bytes = _input_bytes(model, kind, ctx)
+    out.cache_bytes = _cache_bytes(model, ctx, rows)
+    out.act_transient_bytes += _embed_gather_bytes(rows, ctx)
+    # optimizer-update in-flight fp32 stacks (cpu oracle; ZeRO-sharded)
+    out.act_transient_bytes += int(ctx.opt_transient_frac * out.opt_bytes)
+    return out
+
+
+def per_device(pred: PredictedMemory) -> int:
+    return pred.peak_bytes

@@ -1,0 +1,52 @@
+"""Prediction-vs-ground-truth reporting (paper section 4)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+GiB = 1024 ** 3
+
+
+@dataclass
+class PredictionRecord:
+    label: str
+    predicted_bytes: int
+    actual_bytes: int
+
+    @property
+    def ape(self) -> float:
+        """Absolute percentage error."""
+        if self.actual_bytes == 0:
+            return 0.0
+        return abs(self.predicted_bytes - self.actual_bytes) \
+            / self.actual_bytes * 100.0
+
+
+def mape(records: list[PredictionRecord]) -> float:
+    if not records:
+        return 0.0
+    return float(np.mean([r.ape for r in records]))
+
+
+def table(records: list[PredictionRecord], title: str = "") -> str:
+    lines = []
+    if title:
+        lines.append(f"## {title}")
+    lines.append(f"{'label':<40s} {'pred GiB':>10s} {'actual GiB':>11s} "
+                 f"{'APE %':>7s}")
+    for r in records:
+        lines.append(f"{r.label:<40s} {r.predicted_bytes / GiB:>10.3f} "
+                     f"{r.actual_bytes / GiB:>11.3f} {r.ape:>7.2f}")
+    lines.append(f"{'MAPE':<40s} {'':>10s} {'':>11s} {mape(records):>7.2f}")
+    return "\n".join(lines)
+
+
+def csv(records: list[PredictionRecord]) -> str:
+    out = ["label,predicted_bytes,actual_bytes,ape_pct"]
+    for r in records:
+        out.append(f"{r.label},{r.predicted_bytes},{r.actual_bytes},"
+                   f"{r.ape:.3f}")
+    out.append(f"MAPE,,,{mape(records):.3f}")
+    return "\n".join(out)

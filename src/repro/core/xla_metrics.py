@@ -1,0 +1,334 @@
+"""Ground truth + roofline inputs extracted from compiled XLA artifacts.
+
+* ``memory_stats``    — per-device peak from ``compiled.memory_analysis()``
+  (arguments + temps + unaliased outputs); this is the quantity whose
+  overflow aborts a TPU job, i.e. the OoM the paper predicts.
+* ``cost_stats``      — HLO FLOPs / bytes-accessed from ``cost_analysis()``.
+* ``collective_stats``— parsed from the post-SPMD HLO text: per collective
+  op, operand bytes and estimated wire bytes (ring terms), for the
+  roofline's collective term.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|s32|u32|s64|u64|"
+                       r"f8e4m3fn|f8e5m2|f16|bf16|f32|f64|c64|c128)"
+                       r"\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_GROUP_RE = re.compile(r"replica_groups=\{?\[?([0-9,\s\{\}\[\]]*)")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of all typed shapes appearing in a string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)       # op -> count
+    operand_bytes: dict = field(default_factory=dict)  # op -> bytes (per dev)
+    wire_bytes: dict = field(default_factory=dict)   # op -> est wire bytes
+
+    @property
+    def total_operand_bytes(self) -> int:
+        return sum(self.operand_bytes.values())
+
+    @property
+    def total_wire_bytes(self) -> int:
+        return sum(self.wire_bytes.values())
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUP_RE.search(line)
+    if not m:
+        return default
+    first = m.group(1).split("}")[0].split("]")[0]
+    ids = [x for x in first.replace("{", " ").replace("[", " ")
+           .split(",") if x.strip().isdigit()]
+    return max(len(ids), 1)
+
+
+def collective_stats(hlo_text: str, n_devices: int = 1) -> CollectiveStats:
+    """Parse per-device collective traffic from post-optimization HLO.
+
+    ``operand_bytes``: sum of result-shape bytes per op (per device).
+    ``wire_bytes``: ring estimates — all-reduce 2x(g-1)/g, gather/scatter
+    and all-to-all (g-1)/g, permute 1x.
+    """
+    out = CollectiveStats()
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        if "-done(" in line:
+            continue                       # counted at -start
+        nbytes = shape_bytes(shape_str)
+        g = _group_size(line, n_devices)
+        if op == "all-reduce":
+            wire = int(2 * nbytes * (g - 1) / max(g, 1))
+        elif op == "collective-permute":
+            wire = nbytes
+        else:                              # all-gather / rs / a2a
+            wire = int(nbytes * (g - 1) / max(g, 1))
+        out.counts[op] = out.counts.get(op, 0) + 1
+        out.operand_bytes[op] = out.operand_bytes.get(op, 0) + nbytes
+        out.wire_bytes[op] = out.wire_bytes.get(op, 0) + wire
+    return out
+
+
+@dataclass
+class MemoryStats:
+    argument_bytes: int
+    output_bytes: int
+    temp_bytes: int
+    alias_bytes: int
+
+    @property
+    def total_bytes(self) -> int:
+        return (self.argument_bytes + self.temp_bytes
+                + self.output_bytes - self.alias_bytes)
+
+
+def memory_stats(compiled) -> MemoryStats:
+    ma = compiled.memory_analysis()
+    return MemoryStats(
+        argument_bytes=ma.argument_size_in_bytes,
+        output_bytes=ma.output_size_in_bytes,
+        temp_bytes=ma.temp_size_in_bytes,
+        alias_bytes=ma.alias_size_in_bytes)
+
+
+@dataclass
+class CostStats:
+    flops: float
+    bytes_accessed: float
+
+
+def cost_stats(compiled) -> CostStats:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return CostStats(flops=float(ca.get("flops", 0.0)),
+                     bytes_accessed=float(ca.get("bytes accessed", 0.0)))
+
+
+# ---------------------------------------------------------------------------
+# Loop-aware HLO analysis.
+#
+# XLA's cost_analysis() counts a while-loop BODY once, not per iteration —
+# for scan-stacked models that undercounts FLOPs/bytes/collectives by
+# ~n_layers.  This walks the computation call graph (entry -> while bodies,
+# fusions, calls), multiplies by loop trip counts (parsed from the loop
+# condition's comparison constant), and accumulates:
+#   * dot FLOPs (2 * output_elems * contraction_size),
+#   * bytes accessed at fusion/instruction granularity,
+#   * collective operand/wire bytes (including collectives inside loops).
+# ---------------------------------------------------------------------------
+
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+) (?:\([^)]*\) -> .*?)?\{",
+                      re.M)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+) = ((?:\([^)]*\))|(?:\S+))\s+"
+    r"([\w\-]+)\((.*)", re.M)
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)="
+                       r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DNUM_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _parse_computations(txt: str) -> dict:
+    """computation name -> list of raw instruction lines."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in txt.splitlines():
+        if line.endswith("{") and ("=" not in line.split("(")[0]):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if line.strip() == "}":
+            continue
+        if cur is not None and "=" in line:
+            comps[cur].append(line)
+    return comps
+
+
+def _first_shape(s: str) -> tuple[str, list[int]]:
+    m = _SHAPE_RE.search(s)
+    if not m:
+        return "", []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d] if dims else []
+
+
+_REF_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_names(rest: str) -> list[str]:
+    """%operand references in the call portion of an instruction line."""
+    args = rest.split(")", 1)[0]
+    return _REF_RE.findall(args)
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Largest integer literal in the loop condition — lax.scan lowers to
+    `lt(iter, constant(N))`, so this is the trip count."""
+    best = 1
+    for line in cond_lines:
+        for c in _CONST_RE.findall(line):
+            best = max(best, int(c))
+    return best
+
+
+@dataclass
+class LoopAwareStats:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collectives: CollectiveStats = field(default_factory=CollectiveStats)
+
+
+def loop_aware_stats(txt: str, n_devices: int = 1) -> LoopAwareStats:
+    comps = _parse_computations(txt)
+    out = LoopAwareStats()
+
+    # name -> result shape string, from every defining instruction (operand
+    # references in HLO calls carry no inline shapes)
+    def_shape: dict[str, str] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if m:
+                def_shape[m.group(1)] = m.group(2)
+
+    def operand_bytes(rest: str) -> int:
+        return sum(shape_bytes(def_shape.get(nm, ""))
+                   for nm in _operand_names(rest))
+
+    def lhs_dims(rest: str) -> list[int]:
+        names = _operand_names(rest)
+        if not names:
+            return []
+        _, dims = _first_shape(def_shape.get(names[0], ""))
+        return dims
+
+    def visit(comp: str, mult: float, seen: tuple):
+        if comp not in comps or comp in seen:
+            return
+        for line in comps[comp]:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, result_shape, op, rest = m.groups()
+            if op == "while":
+                calls = dict(re.findall(r"(body|condition)=%?([\w.\-]+)",
+                                        line))
+                trips = _trip_count(comps.get(calls.get("condition", ""),
+                                              []))
+                visit(calls.get("body", ""), mult * trips, seen + (comp,))
+                continue
+            if op in ("call", "conditional"):
+                for grp in _CALLS_RE.findall(line):
+                    for c in grp.split(","):
+                        visit(c.strip().lstrip("%"), mult, seen + (comp,))
+                continue
+            if op == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", line)
+                if cm:
+                    visit(cm.group(1), mult, seen + (comp,))
+                # bytes at fusion granularity.  In-place-update fusions
+                # (some operand shape == result shape: dus-carried stacks,
+                # accumulators) touch the whole buffer ONCE across the
+                # loop, not per iteration — else saved-activation stacks
+                # would be counted n_layers x their size.
+                rbytes = shape_bytes(result_shape)
+                in_place = any(
+                    def_shape.get(nm, "") == result_shape
+                    for nm in _operand_names(rest))
+                out.bytes_accessed += rbytes if in_place else mult * rbytes
+                continue
+            if op in ("dot", "convolution"):
+                _, odims = _first_shape(result_shape)
+                oelems = 1
+                for d in odims:
+                    oelems *= d
+                lhs = lhs_dims(rest)
+                k = 1
+                dm = _DNUM_RE.search(line)
+                if dm and lhs:
+                    for ci in dm.group(1).split(","):
+                        if ci.strip().isdigit() and int(ci) < len(lhs):
+                            k *= lhs[int(ci)]
+                elif lhs:
+                    k = lhs[-1]
+                out.flops += mult * 2.0 * oelems * k
+                out.bytes_accessed += mult * (shape_bytes(result_shape)
+                                              + operand_bytes(rest))
+                continue
+            if op in ("dynamic-update-slice", "copy", "copy-start"):
+                rbytes = shape_bytes(result_shape)
+                in_place = any(def_shape.get(nm, "") == result_shape
+                               for nm in _operand_names(rest))
+                out.bytes_accessed += rbytes if in_place else mult * rbytes
+                continue
+            if op in ("all-reduce", "all-gather", "reduce-scatter",
+                      "all-to-all", "collective-permute",
+                      "all-reduce-start", "all-gather-start",
+                      "collective-permute-start"):
+                base = op.replace("-start", "")
+                nbytes = shape_bytes(result_shape)
+                g = _group_size(line, n_devices)
+                if base == "all-reduce":
+                    wire = int(2 * nbytes * (g - 1) / max(g, 1))
+                elif base == "collective-permute":
+                    wire = nbytes
+                else:
+                    wire = int(nbytes * (g - 1) / max(g, 1))
+                c = out.collectives
+                c.counts[base] = c.counts.get(base, 0) + int(mult)
+                c.operand_bytes[base] = c.operand_bytes.get(base, 0) \
+                    + int(mult * nbytes)
+                c.wire_bytes[base] = c.wire_bytes.get(base, 0) \
+                    + int(mult * wire)
+                continue
+            if op in ("get-tuple-element", "tuple", "parameter", "bitcast",
+                      "constant", "after-all", "opt-barrier"):
+                continue          # aliases / bookkeeping: no HBM traffic
+            # remaining top-level ops (elementwise, transpose, slice...):
+            # result bytes per execution
+            out.bytes_accessed += mult * shape_bytes(result_shape)
+
+    entries = [c for c in comps if c.startswith("main") or c == "entry"]
+    entry = entries[0] if entries else next(iter(comps), None)
+    # ENTRY computation is the last one in PJRT dumps more often; find the
+    # one nobody calls instead.
+    called = set()
+    for lines in comps.values():
+        for line in lines:
+            for grp in _CALLS_RE.findall(line):
+                for c in grp.split(","):
+                    called.add(c.strip().lstrip("%"))
+    roots = [c for c in comps if c not in called]
+    entry = roots[-1] if roots else entry
+    if entry:
+        visit(entry, 1.0, ())
+    return out

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+* ``flash_attention`` — blocked online-softmax attention (fwd + FA2 bwd),
+  GQA-aware tiling; the memory behaviour the paper's activation factor
+  models (no S x S materialization).
+* ``rmsnorm``         — fused norm fwd/bwd.
+* ``ssd``             — Mamba-2 chunked state-space scan with VMEM-resident
+  inter-chunk state.
+
+Each kernel ships with a pure-jnp oracle in ``ref.py`` and is validated in
+interpret mode across shape/dtype sweeps in ``tests/test_kernels.py``.
+The training graphs use mathematically-identical pure-``lax`` paths (see
+``models.attention`` / ``models.mamba``) so the CPU dry-run oracle and the
+TPU hot path share one definition.
+"""
+
+from repro.kernels.ops import flash_attention, rmsnorm, ssd_scan  # noqa: F401

@@ -1,0 +1,85 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``flash_attention`` is a drop-in for ``repro.models.attention``'s pure-lax
+path: same signature, same (B, S, H, D) layouts, differentiable via
+``jax.custom_vjp`` over the fwd/bwd kernels.  On non-TPU backends pass
+``interpret=True`` (tests do) — the kernel body executes in Python with
+identical math.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import ssd as _ssd
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool = True, block: int = 256,
+                    q_offset: int = 0, interpret: bool = False):
+    out, _ = _fa.flash_fwd(q, k, v, causal=causal, block_q=block,
+                           block_k=block, q_offset=q_offset,
+                           interpret=interpret)
+    return out
+
+
+def _fwd(q, k, v, causal, block, q_offset, interpret):
+    out, lse = _fa.flash_fwd(q, k, v, causal=causal, block_q=block,
+                             block_k=block, q_offset=q_offset,
+                             interpret=interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(causal, block, q_offset, interpret, res, dout):
+    q, k, v, out, lse = res
+    dq, dk, dv = _fa.flash_bwd(q, k, v, out, lse, dout, causal=causal,
+                               block_q=block, block_k=block,
+                               q_offset=q_offset, interpret=interpret)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def rmsnorm(x, scale, eps: float = 1e-5, interpret: bool = False):
+    return _rn.rmsnorm_fwd(x, scale, eps=eps, interpret=interpret)
+
+
+def _rn_fwd(x, scale, eps, interpret):
+    return _rn.rmsnorm_fwd(x, scale, eps=eps, interpret=interpret), (x, scale)
+
+
+def _rn_bwd(eps, interpret, res, dy):
+    x, scale = res
+    return _rn.rmsnorm_bwd(x, scale, dy, eps=eps, interpret=interpret)
+
+
+rmsnorm.defvjp(_rn_fwd, _rn_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int = 256, interpret: bool = False):
+    """Differentiable via jax autodiff through the kernel is not supported;
+    training uses models.mamba.ssd_chunked (pure lax).  This wrapper is the
+    serving/prefill hot path."""
+    return _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)

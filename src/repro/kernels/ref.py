@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematical definition the kernel must match; tests
+sweep shapes/dtypes and ``assert_allclose`` kernel-vs-oracle in interpret
+mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, causal: bool = True, q_offset: int = 0):
+    """Naive O(S^2) GQA attention.  q: (B,Sq,H,D); k/v: (B,Skv,Hkv,D/Dv).
+    Returns (out (B,Sq,H,Dv), lse (B,H,Sq) fp32)."""
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    G = H // Hkv
+    kf = jnp.repeat(k, G, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * D ** -0.5
+    s = jnp.einsum("bshd,bthd->bhst", qf, kf)
+    if causal:
+        q_pos = q_offset + jnp.arange(Sq)
+        mask = jnp.arange(Skv)[None, :] <= q_pos[:, None]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    lse = jax.nn.logsumexp(s, axis=-1)                     # (B,H,Sq)
+    p = jnp.exp(s - lse[..., None])
+    out = jnp.einsum("bhst,bthd->bshd", p, vf)
+    return out.astype(q.dtype), lse
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    """x: (..., D); scale: (D,)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_ref(x, dt, A, B, C, initial_state=None):
+    """Sequential Mamba-2 SSD recurrence (group size 1).
+
+    x: (b, S, H, P); dt: (b, S, H) post-softplus; A: (H,) negative;
+    B, C: (b, S, N).  Returns (y (b,S,H,P), final_state (b,H,P,N) fp32).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    st = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((b, H, P, N), jnp.float32))
+    ys = []
+    for t in range(S):
+        dA = jnp.exp(dt[:, t] * A[None, :])                # (b, H)
+        dBx = jnp.einsum("bn,bhp,bh->bhpn", B[:, t].astype(jnp.float32),
+                         x[:, t].astype(jnp.float32),
+                         dt[:, t].astype(jnp.float32))
+        st = st * dA[..., None, None] + dBx
+        ys.append(jnp.einsum("bhpn,bn->bhp", st,
+                             C[:, t].astype(jnp.float32)))
+    return jnp.stack(ys, 1).astype(x.dtype), st

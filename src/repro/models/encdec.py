@@ -1,0 +1,221 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+Speech frontend is a STUB per the assignment: inputs are precomputed frame
+embeddings (B, T_enc, d_frontend).  Encoder: bidirectional transformer.
+Decoder: causal self-attention + cross-attention over encoder memory.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.core.spec import ModuleSpec, AXIS_EMBED
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.attention import (flash_attention, decode_attention,
+                                    gqa_spec, gqa_forward, gqa_decode)
+from repro.models.layers import apply_rope
+
+
+def encdec_model_spec(cfg: ArchConfig) -> ModuleSpec:
+    e = cfg.encdec
+    frontend = ModuleSpec(
+        name="frontend_proj", modality="audio",
+        layers=[L.linear_spec("proj", e.d_frontend, cfg.d_model,
+                              axes=(None, AXIS_EMBED))])
+    enc_block = ModuleSpec(
+        name="encoder_blocks", modality="audio", repeat=e.n_enc_layers,
+        scanned=True,
+        layers=[L.rmsnorm_spec("norm1", cfg.d_model, cfg.dtype),
+                T.attn_spec_for(cfg),
+                L.rmsnorm_spec("norm2", cfg.d_model, cfg.dtype),
+                L.mlp_spec("ffn", cfg.d_model, cfg.d_ff, cfg.dtype)])
+    enc_final = ModuleSpec(name="encoder_head", modality="audio",
+                           layers=[L.rmsnorm_spec("enc_norm", cfg.d_model,
+                                                  cfg.dtype)])
+    encoder = ModuleSpec(name="speech_encoder", modality="audio",
+                         children=[frontend, enc_block, enc_final])
+
+    dec_block = ModuleSpec(
+        name="decoder_blocks", modality="text", repeat=cfg.n_layers,
+        scanned=True,
+        layers=[L.rmsnorm_spec("norm1", cfg.d_model, cfg.dtype),
+                T.attn_spec_for(cfg),
+                L.rmsnorm_spec("norm_x", cfg.d_model, cfg.dtype),
+                _cross_attn_spec(cfg),
+                L.rmsnorm_spec("norm2", cfg.d_model, cfg.dtype),
+                L.mlp_spec("ffn", cfg.d_model, cfg.d_ff, cfg.dtype)])
+    decoder = ModuleSpec(
+        name="text_decoder", modality="text",
+        children=[
+            ModuleSpec(name="embed", modality="text",
+                       layers=[L.embedding_spec("tok", cfg.vocab, cfg.d_model,
+                                                cfg.dtype, tied=cfg.tie_embeddings)]),
+            dec_block,
+            ModuleSpec(name="head", modality="text",
+                       layers=[L.rmsnorm_spec("final_norm", cfg.d_model,
+                                              cfg.dtype),
+                               L.lm_head_spec("lm_head", cfg.d_model,
+                                              cfg.vocab, cfg.dtype)]),
+        ])
+    return ModuleSpec(name="encdec", modality="multimodal",
+                      children=[encoder, decoder])
+
+
+def _cross_attn_spec(cfg: ArchConfig):
+    s = gqa_spec("cross_attn", cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                 cfg.resolved_head_dim, dtype=cfg.dtype)
+    s.meta["cross"] = True
+    return s
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg: ArchConfig, p: dict, frames: jax.Array,
+           remat: Optional[str] = None) -> jax.Array:
+    enc = p["speech_encoder"]
+    x = L.linear(enc["frontend_proj"]["proj"], frames)
+    hd = cfg.resolved_head_dim
+    remat = remat if remat is not None else cfg.remat
+
+    def body(carry, bp):
+        x = carry
+        h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+        B, S, _ = h.shape
+        a = gqa_forward(bp["attn"], h, n_heads=cfg.n_heads,
+                        n_kv_heads=cfg.n_kv_heads, head_dim=hd,
+                        theta=cfg.rope_theta, norm_eps=cfg.norm_eps,
+                        causal=False)
+        x = x + a
+        h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+        x = x + L.mlp(bp["ffn"], h)
+        return x, None
+
+    x, _ = jax.lax.scan(T._remat(body, remat), x, enc["encoder_blocks"])
+    return L.rmsnorm(enc["encoder_head"]["enc_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# decoder train / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _cross_kv(cfg: ArchConfig, cp: dict, memory: jax.Array):
+    B, Te, _ = memory.shape
+    hd = cfg.resolved_head_dim
+    k = (memory @ cp["wk"]).reshape(B, Te, cfg.n_kv_heads, hd)
+    v = (memory @ cp["wv"]).reshape(B, Te, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def _decoder_block(cfg, bp, x, memory, positions):
+    hd = cfg.resolved_head_dim
+    h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+    x = x + gqa_forward(bp["attn"], h, n_heads=cfg.n_heads,
+                        n_kv_heads=cfg.n_kv_heads, head_dim=hd,
+                        theta=cfg.rope_theta, norm_eps=cfg.norm_eps,
+                        causal=True, positions=positions)
+    h = L.rmsnorm(bp["norm_x"], x, cfg.norm_eps)
+    B, S, _ = h.shape
+    q = (h @ bp["cross_attn"]["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k, v = _cross_kv(cfg, bp["cross_attn"], memory)
+    ctx = flash_attention(q, k, v, False, 1024)
+    x = x + ctx.reshape(B, S, -1) @ bp["cross_attn"]["wo"]
+    h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+    return x + L.mlp(bp["ffn"], h)
+
+
+def encdec_loss(cfg: ArchConfig, params: dict, batch: dict,
+                remat: Optional[str] = None):
+    """batch: {'frames': (B, T, d_frontend), 'tokens': (B, S),
+    'labels': (B, S)}."""
+    p = params["encdec"]
+    memory = encode(cfg, p, batch["frames"], remat)
+    dec = p["text_decoder"]
+    x = T.embed_tokens(cfg, dec, batch["tokens"])
+    remat = remat if remat is not None else cfg.remat
+
+    def body(carry, bp):
+        return _decoder_block(cfg, bp, carry, memory, None), None
+
+    x, _ = jax.lax.scan(T._remat(body, remat), x, dec["decoder_blocks"])
+    x = L.rmsnorm(dec["head"]["final_norm"], x, cfg.norm_eps)
+    loss_sum, n_tok = T.chunked_xent(cfg, dec, x, batch["labels"])
+    loss = loss_sum / jnp.maximum(n_tok, 1.0)
+    return loss, {"xent": loss, "n_tok": n_tok}
+
+
+def encdec_prefill(cfg: ArchConfig, params: dict, batch: dict):
+    """Encode + decoder prefill; cache holds self KV + cross KV per layer."""
+    p = params["encdec"]
+    memory = encode(cfg, p, batch["frames"])
+    dec = p["text_decoder"]
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = T.embed_tokens(cfg, dec, tokens)
+
+    def body(carry, bp):
+        x = carry
+        h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+        kv = T._prefill_kv(cfg, bp["attn"], h)
+        ck, cv = _cross_kv(cfg, bp["cross_attn"], memory)
+        x = _decoder_block(cfg, bp, x, memory, None)
+        return x, dict(kv, cross_k=ck.astype(jnp.bfloat16),
+                       cross_v=cv.astype(jnp.bfloat16))
+
+    x, kv = jax.lax.scan(T._remat(body, cfg.remat), x, dec["decoder_blocks"])
+    cache = {"blocks": kv, "len": jnp.full((B,), S, jnp.int32)}
+    x = L.rmsnorm(dec["head"]["final_norm"], x[:, -1:], cfg.norm_eps)
+    return T.lm_logits(cfg, dec, x), cache
+
+
+def encdec_init_cache(cfg: ArchConfig, batch: int, max_len: int,
+                      enc_len: int) -> dict:
+    hd = cfg.resolved_head_dim
+    L_ = cfg.n_layers
+    kv = {"k": jnp.zeros((L_, batch, max_len, cfg.n_kv_heads, hd), jnp.bfloat16),
+          "v": jnp.zeros((L_, batch, max_len, cfg.n_kv_heads, hd), jnp.bfloat16),
+          "cross_k": jnp.zeros((L_, batch, enc_len, cfg.n_kv_heads, hd),
+                               jnp.bfloat16),
+          "cross_v": jnp.zeros((L_, batch, enc_len, cfg.n_kv_heads, hd),
+                               jnp.bfloat16)}
+    return {"blocks": kv, "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def encdec_decode_step(cfg: ArchConfig, params: dict, token: jax.Array,
+                       cache: dict):
+    p = params["encdec"]["text_decoder"]
+    x = T.embed_tokens(cfg, p, token)
+    length = cache["len"]
+    hd = cfg.resolved_head_dim
+
+    def body(x, inp):
+        bp, lc = inp
+        h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+        a, nc = gqa_decode(bp["attn"], h,
+                           {"k": lc["k"], "v": lc["v"], "len": length},
+                           n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                           head_dim=hd, theta=cfg.rope_theta,
+                           norm_eps=cfg.norm_eps)
+        x = x + a
+        h = L.rmsnorm(bp["norm_x"], x, cfg.norm_eps)
+        B = h.shape[0]
+        q = (h @ bp["cross_attn"]["wq"]).reshape(B, 1, cfg.n_heads, hd)
+        enc_len = jnp.full((B,), lc["cross_k"].shape[1], jnp.int32)
+        ctx = decode_attention(q, lc["cross_k"], lc["cross_v"], enc_len)
+        x = x + ctx.reshape(B, 1, -1) @ bp["cross_attn"]["wo"]
+        h = L.rmsnorm(bp["norm2"], x, cfg.norm_eps)
+        x = x + L.mlp(bp["ffn"], h)
+        nc.pop("len")
+        return x, dict(nc, cross_k=lc["cross_k"], cross_v=lc["cross_v"])
+
+    x, nc = jax.lax.scan(body, x, (p["decoder_blocks"], cache["blocks"]))
+    x = L.rmsnorm(p["head"]["final_norm"], x, cfg.norm_eps)
+    return T.lm_logits(cfg, p, x), {"blocks": nc, "len": length + 1}

@@ -1,0 +1,222 @@
+"""Hybrid SSM + shared-attention model (zamba2-2.7b).
+
+54 Mamba-2 blocks (scan-stacked per segment) with 2 weight-tied ("shared")
+full-attention transformer blocks applied before every ``attn_every``-th
+mamba layer, alternating A/B (zamba2's global shared blocks; per-invocation
+LoRA omitted — see DESIGN.md).  The KV cache exists only for the shared
+blocks' invocations, which is why this arch runs long_500k.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.core.spec import ModuleSpec
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.attention import gqa_spec, gqa_forward, gqa_decode
+from repro.models.mamba import (mamba2_spec, mamba2_forward, mamba2_decode,
+                                mamba2_init_state)
+from repro.models.ssm_lm import _meta as _ssm_meta
+
+
+def _n_attn_invocations(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.hybrid.attn_every
+
+
+def hybrid_model_spec(cfg: ArchConfig, name: str = "language_model") -> ModuleSpec:
+    shared = ModuleSpec(
+        name="shared_attn", modality="text",
+        repeat=cfg.hybrid.shared_attn_blocks, scanned=True,
+        layers=[L.rmsnorm_spec("norm1", cfg.d_model, cfg.dtype),
+                gqa_spec("attn", cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                         cfg.resolved_head_dim, dtype=cfg.dtype),
+                L.rmsnorm_spec("norm2", cfg.d_model, cfg.dtype),
+                L.mlp_spec("ffn", cfg.d_model, cfg.d_ff, cfg.dtype)])
+    # Weight tying: 2 distinct blocks, but n_layers/attn_every INVOCATIONS.
+    # Params/grads/opt scale with the weight count (repeat=2); activations
+    # and KV-cache slots scale with invocations, and the invocations are
+    # python-unrolled (no scan remat).  The predictor reads these markers.
+    for lyr in shared.layers:
+        lyr.meta["invocation_repeat"] = _n_attn_invocations(cfg)
+    shared.layers[1].meta["cache_repeat"] = _n_attn_invocations(cfg)
+    children = [
+        ModuleSpec(name="embed", modality="text",
+                   layers=[L.embedding_spec("tok", cfg.vocab, cfg.d_model,
+                                            cfg.dtype, tied=cfg.tie_embeddings)]),
+        shared,
+        ModuleSpec(name="blocks", modality="text", repeat=cfg.n_layers,
+                   scanned=True,
+                   layers=[L.rmsnorm_spec("norm", cfg.d_model, cfg.dtype),
+                           mamba2_spec("mixer", cfg.d_model, cfg.ssm,
+                                       cfg.dtype)]),
+        ModuleSpec(name="head", modality="text",
+                   layers=[L.rmsnorm_spec("final_norm", cfg.d_model,
+                                          cfg.dtype)]),
+    ]
+    return ModuleSpec(name=name, modality="text", children=children)
+
+
+def _shared_block(cfg: ArchConfig, sp, x: jax.Array) -> jax.Array:
+    h = L.rmsnorm(sp["norm1"], x, cfg.norm_eps)
+    x = x + gqa_forward(sp["attn"], h, n_heads=cfg.n_heads,
+                        n_kv_heads=cfg.n_kv_heads,
+                        head_dim=cfg.resolved_head_dim,
+                        theta=cfg.rope_theta, norm_eps=cfg.norm_eps)
+    h = L.rmsnorm(sp["norm2"], x, cfg.norm_eps)
+    return x + L.mlp(sp["ffn"], h)
+
+
+def _segments(cfg: ArchConfig, p: dict):
+    """Yield (shared_block_params_for_segment, mamba_param_slice)."""
+    every = cfg.hybrid.attn_every
+    n_seg = _n_attn_invocations(cfg)
+    nb = cfg.hybrid.shared_attn_blocks
+    for s in range(n_seg):
+        sp = jax.tree.map(lambda a: a[s % nb], p["shared_attn"])
+        stack = jax.tree.map(lambda a: a[s * every:(s + 1) * every],
+                             p["blocks"])
+        yield s, sp, stack
+
+
+def hybrid_backbone(cfg: ArchConfig, p: dict, x: jax.Array,
+                    remat: Optional[str] = None) -> jax.Array:
+    meta = _ssm_meta(cfg)
+    remat = remat if remat is not None else cfg.remat
+
+    def mamba_body(x, bp):
+        h = L.rmsnorm(bp["norm"], x, cfg.norm_eps)
+        return x + mamba2_forward(bp["mixer"], h, meta, cfg.norm_eps), None
+
+    for s, sp, stack in _segments(cfg, p):
+        x = _shared_block(cfg, sp, x)
+        x, _ = jax.lax.scan(T._remat(mamba_body, remat), x, stack)
+    return L.rmsnorm(p["head"]["final_norm"], x, cfg.norm_eps)
+
+
+def hybrid_loss(cfg: ArchConfig, params: dict, batch: dict,
+                remat: Optional[str] = None):
+    p = params["language_model"]
+    x = T.embed_tokens(cfg, p, batch["tokens"])
+    hidden = hybrid_backbone(cfg, p, x, remat)
+    loss_sum, n_tok = T.chunked_xent(cfg, p, hidden, batch["labels"])
+    loss = loss_sum / jnp.maximum(n_tok, 1.0)
+    return loss, {"xent": loss, "n_tok": n_tok}
+
+
+def hybrid_init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    meta = _ssm_meta(cfg)
+    one = mamba2_init_state(meta, batch)
+    ssm_stack = jax.tree.map(
+        lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one)
+    n_inv = _n_attn_invocations(cfg)
+    hd = cfg.resolved_head_dim
+    kv = {"k": jnp.zeros((n_inv, batch, max_len, cfg.n_kv_heads, hd),
+                         jnp.bfloat16),
+          "v": jnp.zeros((n_inv, batch, max_len, cfg.n_kv_heads, hd),
+                         jnp.bfloat16)}
+    return {"blocks": ssm_stack, "attn": kv,
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def hybrid_decode_step(cfg: ArchConfig, params: dict, token: jax.Array,
+                       cache: dict):
+    p = params["language_model"]
+    meta = _ssm_meta(cfg)
+    x = T.embed_tokens(cfg, p, token)
+    length = cache["len"]
+    new_kv = {"k": [], "v": []}
+    ssm_out = []
+
+    def mamba_body(x, inp):
+        bp, st = inp
+        h = L.rmsnorm(bp["norm"], x, cfg.norm_eps)
+        y, new_st = mamba2_decode(bp["mixer"], h, st, meta, cfg.norm_eps)
+        return x + y, new_st
+
+    for s, sp, stack in _segments(cfg, p):
+        lc = {"k": cache["attn"]["k"][s], "v": cache["attn"]["v"][s],
+              "len": length}
+        h = L.rmsnorm(sp["norm1"], x, cfg.norm_eps)
+        a, nc = gqa_decode(sp["attn"], h, lc, n_heads=cfg.n_heads,
+                           n_kv_heads=cfg.n_kv_heads,
+                           head_dim=cfg.resolved_head_dim,
+                           theta=cfg.rope_theta, norm_eps=cfg.norm_eps)
+        x = x + a
+        h = L.rmsnorm(sp["norm2"], x, cfg.norm_eps)
+        x = x + L.mlp(sp["ffn"], h)
+        new_kv["k"].append(nc["k"])
+        new_kv["v"].append(nc["v"])
+
+        every = cfg.hybrid.attn_every
+        st_slice = jax.tree.map(
+            lambda a: a[s * every:(s + 1) * every], cache["blocks"])
+        x, new_st = jax.lax.scan(mamba_body, x, (stack, st_slice))
+        ssm_out.append(new_st)
+
+    new_cache = {
+        "blocks": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *ssm_out),
+        "attn": {"k": jnp.stack(new_kv["k"]), "v": jnp.stack(new_kv["v"])},
+        "len": length + 1,
+    }
+    x = L.rmsnorm(p["head"]["final_norm"], x, cfg.norm_eps)
+    return T.lm_logits(cfg, p, x), new_cache
+
+
+def hybrid_prefill(cfg: ArchConfig, params: dict, batch: dict):
+    """Chunked-SSD prefill + KV materialization for shared-attn invocations."""
+    from repro.models.ssm_lm import ssm_prefill  # reuse building blocks
+    p = params["language_model"]
+    meta = _ssm_meta(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = T.embed_tokens(cfg, p, tokens)
+
+    from repro.models.mamba import _causal_conv, _split_proj, ssd_chunked
+
+    def mamba_body(x, bp):
+        h = L.rmsnorm(bp["norm"], x, cfg.norm_eps)
+        mp = bp["mixer"]
+        zxbcdt = h @ mp["in_proj"]
+        z, xin, Bv, Cv, dt = _split_proj(zxbcdt, meta)
+        xbc = jnp.concatenate([xin, Bv, Cv], axis=-1)
+        conv_tail = xbc[:, -(meta["d_conv"] - 1):].astype(jnp.bfloat16)
+        xbc = jax.nn.silu(_causal_conv(xbc, mp["conv_w"], mp["conv_b"]))
+        G, N = meta["n_groups"], meta["d_state"]
+        xin, Bv, Cv = jnp.split(
+            xbc, [meta["d_inner"], meta["d_inner"] + G * N], axis=-1)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + mp["dt_bias"])
+        A = -jnp.exp(mp["A_log"])
+        H, P = meta["n_heads"], meta["head_dim"]
+        y, final = ssd_chunked(xin.reshape(B, S, H, P), dt, A,
+                               Bv.reshape(B, S, G, N), Cv.reshape(B, S, G, N),
+                               chunk=meta["chunk"])
+        y = (y + xin.reshape(B, S, H, P)
+             * mp["D"][None, None, :, None]).astype(x.dtype)
+        y = L.rmsnorm({"scale": mp["norm_scale"]},
+                      y.reshape(B, S, H * P) * jax.nn.silu(z), cfg.norm_eps)
+        return x + (y @ mp["out_proj"]).astype(x.dtype), \
+            {"ssm": final, "conv": conv_tail}
+
+    kv_k, kv_v, ssm_states = [], [], []
+    for s, sp, stack in _segments(cfg, p):
+        h = L.rmsnorm(sp["norm1"], x, cfg.norm_eps)
+        kv = T._prefill_kv(cfg, sp["attn"], h)
+        kv_k.append(kv["k"])
+        kv_v.append(kv["v"])
+        x = _shared_block(cfg, sp, x)
+        x, st = jax.lax.scan(mamba_body, x, stack)
+        ssm_states.append(st)
+
+    cache = {
+        "blocks": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                               *ssm_states),
+        "attn": {"k": jnp.stack(kv_k), "v": jnp.stack(kv_v)},
+        "len": jnp.full((B,), S, jnp.int32),
+    }
+    x = L.rmsnorm(p["head"]["final_norm"], x[:, -1:], cfg.norm_eps)
+    return T.lm_logits(cfg, p, x), cache

@@ -1,0 +1,193 @@
+"""Fine-grained layers: spec builders + functional applies.
+
+Every builder returns a :class:`LayerSpec` whose ``params`` dict matches the
+pytree that ``param.init_params`` allocates and whose ``acts``/``flops``
+metadata feed the memory predictor.  Apply functions are pure and consume
+``params[layer_name]`` sub-dicts.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spec import (ActTerm, LayerSpec, ParamSpec,
+                             AXIS_EMBED, AXIS_FFN, AXIS_HEADS,
+                             AXIS_KV_HEADS, AXIS_LORA, AXIS_VOCAB)
+from repro.mesh_ctx import shard
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+
+
+def linear_spec(name: str, d_in: int, d_out: int,
+                axes=(AXIS_EMBED, AXIS_FFN), dtype: str = "bfloat16",
+                bias: bool = False, out_act_axes=("batch", None, AXIS_FFN),
+                init_scale: float = 1.0) -> LayerSpec:
+    params = {"w": ParamSpec((d_in, d_out), dtype, axes, init_scale=init_scale)}
+    if bias:
+        params["b"] = ParamSpec((d_out,), dtype, (axes[1],), init="zeros")
+    return LayerSpec(
+        name=name, kind="linear", params=params,
+        acts=[ActTerm(f"{name}.in", ("B", "S", d_in), dtype,
+                      ("batch", "seq", axes[0]))],
+        flops_per_token=2.0 * d_in * d_out,
+        meta={"d_in": d_in, "d_out": d_out})
+
+
+def linear(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embedding_spec(name: str, vocab: int, d_model: int,
+                   dtype: str = "bfloat16", tied: bool = False) -> LayerSpec:
+    """Untied tables shard columns (embed_cols -> model): the lookup then
+    never gathers the table.  Tied tables must stay vocab-sharded for the
+    vocab-parallel loss; the lookup's table all-gather is modelled by the
+    predictor (meta['lookup_gather'])."""
+    axes = (AXIS_VOCAB, AXIS_EMBED) if tied else (None, "embed_cols")
+    return LayerSpec(
+        name=name, kind="embedding",
+        params={"w": ParamSpec((vocab, d_model), dtype, axes, init="embed")},
+        acts=[ActTerm(f"{name}.ids", ("B", "S"), "int32", ("batch", "seq"))],
+        flops_per_token=0.0,
+        meta={"vocab": vocab, "d_model": d_model, "lookup_gather": tied})
+
+
+def embed(p: dict, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["w"], ids, axis=0)
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    """Logits in fp32 (loss numerics)."""
+    return (x @ p["w"].T).astype(jnp.float32)
+
+
+def lm_head_spec(name: str, d_model: int, vocab: int,
+                 dtype: str = "bfloat16") -> LayerSpec:
+    return LayerSpec(
+        name=name, kind="linear",
+        params={"w": ParamSpec((d_model, vocab), dtype,
+                               (AXIS_EMBED, AXIS_VOCAB))},
+        acts=[ActTerm(f"{name}.in", ("B", "S", d_model), dtype,
+                      ("batch", "seq", AXIS_EMBED))],
+        flops_per_token=2.0 * d_model * vocab,
+        meta={"d_in": d_model, "d_out": vocab})
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(name: str, d: int, dtype: str = "bfloat16") -> LayerSpec:
+    return LayerSpec(
+        name=name, kind="rmsnorm",
+        params={"scale": ParamSpec((d,), dtype, (None,), init="ones")},
+        acts=[ActTerm(f"{name}.in", ("B", "S", d), dtype,
+                      ("batch", "seq", AXIS_EMBED))],
+        flops_per_token=5.0 * d,
+        meta={"d": d})
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_spec(name: str, d: int, dtype: str = "bfloat16") -> LayerSpec:
+    return LayerSpec(
+        name=name, kind="layernorm",
+        params={"scale": ParamSpec((d,), dtype, (None,), init="ones"),
+                "bias": ParamSpec((d,), dtype, (None,), init="zeros")},
+        acts=[ActTerm(f"{name}.in", ("B", "S", d), dtype,
+                      ("batch", "seq", AXIS_EMBED))],
+        flops_per_token=8.0 * d,
+        meta={"d": d})
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(name: str, d_model: int, d_ff: int,
+             dtype: str = "bfloat16", gated: bool = True) -> LayerSpec:
+    if gated:
+        params = {
+            "wg": ParamSpec((d_model, d_ff), dtype, (AXIS_EMBED, AXIS_FFN)),
+            "wu": ParamSpec((d_model, d_ff), dtype, (AXIS_EMBED, AXIS_FFN)),
+            "wd": ParamSpec((d_ff, d_model), dtype, (AXIS_FFN, AXIS_EMBED)),
+        }
+        flops = 2.0 * d_model * d_ff * 3
+        n_ff_acts = 3
+    else:
+        params = {
+            "wu": ParamSpec((d_model, d_ff), dtype, (AXIS_EMBED, AXIS_FFN)),
+            "wd": ParamSpec((d_ff, d_model), dtype, (AXIS_FFN, AXIS_EMBED)),
+        }
+        flops = 2.0 * d_model * d_ff * 2
+        n_ff_acts = 2
+    return LayerSpec(
+        name=name, kind="mlp", params=params,
+        acts=[ActTerm(f"{name}.in", ("B", "S", d_model), dtype,
+                      ("batch", "seq", AXIS_EMBED))]
+             + [ActTerm(f"{name}.h{i}", ("B", "S", d_ff), dtype,
+                        ("batch", "seq", AXIS_FFN)) for i in range(n_ff_acts)],
+        flops_per_token=flops,
+        meta={"d_model": d_model, "d_ff": d_ff, "gated": gated})
+
+
+def mlp(p: dict, x: jax.Array) -> jax.Array:
+    if "wg" in p:
+        g = x @ p["wg"]
+        u = x @ p["wu"]
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(x @ p["wu"])
+    h = shard(h, "batch", "seq", "ffn")
+    return h @ p["wd"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)                     # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) rotated pairwise; positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                          # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,246 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Training/prefill uses the chunked dual form: quadratic attention-like
+computation *within* fixed-size chunks plus a linear state recurrence
+*across* chunks (``lax.scan``) — never materializing an S x S matrix.
+Decode is the O(1) recurrent step on a (H, P, N) state per layer.
+
+``repro.kernels.ssd`` provides the Pallas TPU kernel for the within-chunk
+part; this module is its oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spec import (ActTerm, LayerSpec, ParamSpec,
+                             AXIS_CONV, AXIS_EMBED, AXIS_FFN, AXIS_SSM)
+from repro.mesh_ctx import shard
+from repro.models.layers import rmsnorm
+
+
+def mamba2_spec(name: str, d_model: int, ssm, dtype: str = "bfloat16") -> LayerSpec:
+    d_inner = ssm.d_inner(d_model)
+    H = ssm.n_heads(d_model)
+    G, N = ssm.n_groups, ssm.d_state
+    d_in_proj = 2 * d_inner + 2 * G * N + H
+    conv_ch = d_inner + 2 * G * N
+    params = {
+        "in_proj": ParamSpec((d_model, d_in_proj), dtype, (AXIS_EMBED, AXIS_FFN)),
+        "conv_w": ParamSpec((ssm.d_conv, conv_ch), dtype, (AXIS_CONV, AXIS_FFN)),
+        "conv_b": ParamSpec((conv_ch,), dtype, (AXIS_FFN,), init="zeros"),
+        "A_log": ParamSpec((H,), "float32", (AXIS_SSM,), init="ssm_a"),
+        "D": ParamSpec((H,), "float32", (AXIS_SSM,), init="ones"),
+        "dt_bias": ParamSpec((H,), "float32", (AXIS_SSM,), init="dt_bias"),
+        "norm_scale": ParamSpec((d_inner,), dtype, (AXIS_FFN,), init="ones"),
+        "out_proj": ParamSpec((d_inner, d_model), dtype, (AXIS_FFN, AXIS_EMBED)),
+    }
+    flops = 2.0 * d_model * d_in_proj + 2.0 * d_inner * d_model \
+        + 2.0 * ssm.d_conv * conv_ch \
+        + 2.0 * 2 * H * ssm.head_dim * N  # state update + readout per token
+    return LayerSpec(
+        name=name, kind="ssm", params=params,
+        acts=[
+            ActTerm(f"{name}.in", ("B", "S", d_model), dtype,
+                    ("batch", "seq", AXIS_EMBED)),
+            ActTerm(f"{name}.zxbcdt", ("B", "S", d_in_proj), dtype,
+                    ("batch", "seq", AXIS_FFN)),
+            ActTerm(f"{name}.conv", ("B", "S", conv_ch), dtype,
+                    ("batch", "seq", AXIS_FFN)),
+            ActTerm(f"{name}.y", ("B", "S", d_inner), dtype,
+                    ("batch", "seq", AXIS_FFN)),
+            # per-chunk states saved by the scan across chunks
+            ActTerm(f"{name}.chunk_states",
+                    ("B", "S", H * ssm.head_dim * N // ssm.chunk), "float32",
+                    ("batch", "seq", AXIS_SSM)),
+        ],
+        flops_per_token=flops,
+        meta={"d_inner": d_inner, "n_heads": H, "head_dim": ssm.head_dim,
+              "d_state": N, "n_groups": G, "d_conv": ssm.d_conv,
+              "chunk": ssm.chunk, "d_in_proj": d_in_proj, "conv_ch": conv_ch,
+              "state_bytes": 4 * H * ssm.head_dim * N
+              + 2 * (ssm.d_conv - 1) * conv_ch})
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD core
+# ---------------------------------------------------------------------------
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., Q) -> (..., Q, Q) with out[i, j] = sum_{k=j+1..i} a_k (i>=j),
+    -inf above the diagonal."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int,
+                initial_state: Optional[jax.Array] = None):
+    """SSD dual form.
+
+    x: (b, S, H, P); dt: (b, S, H) (already softplus'd);
+    A: (H,) negative reals; B, C: (b, S, G, N) with G == 1 supported.
+    Returns (y: (b, S, H, P), final_state: (b, H, P, N)).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    assert B.shape[2] == 1, "n_groups == 1 supported"
+    Bm, Cm = B[:, :, 0], C[:, :, 0]                     # (b, S, N)
+
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    xc = x.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = Bm.reshape(b, nc, chunk, N)
+    Cc = Cm.reshape(b, nc, chunk, N)
+
+    s0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((b, H, P, N), jnp.float32))
+
+    def body(st, inp):
+        """One chunk: intra-chunk quadratic term + inter-chunk state pass.
+        Scanning keeps the (b, H, Q, Q) decay matrix a per-chunk temp."""
+        xq, dtq, Bq, Cq = inp                            # (b,Q,H,P) (b,Q,H) ...
+        a = jnp.moveaxis(dtq * A[None, None, :], -1, 1)  # (b, H, Q) <= 0
+        a_cum = jnp.cumsum(a, axis=-1)
+        a_tot = a_cum[..., -1]                           # (b, H)
+        L = jnp.exp(_segsum(a))                          # (b, H, Q, Q)
+        scores = jnp.einsum("bqn,bkn->bqk", Cq.astype(jnp.float32),
+                            Bq.astype(jnp.float32))      # (b, Q, Q)
+        xdt = (xq * dtq[..., None]).astype(jnp.float32)  # (b, Q, H, P)
+        y_diag = jnp.einsum("bhqk,bqk,bkhp->bqhp", L, scores, xdt)
+        y_off = jnp.einsum("bqn,bhq,bhpn->bqhp",
+                           Cq.astype(jnp.float32), jnp.exp(a_cum), st)
+        decay_to_end = jnp.exp(a_tot[..., None] - a_cum)  # (b, H, Q)
+        new_st = st * jnp.exp(a_tot)[..., None, None] \
+            + jnp.einsum("bhq,bqn,bqhp->bhpn",
+                         decay_to_end, Bq.astype(jnp.float32), xdt)
+        return new_st, (y_diag + y_off).astype(x.dtype)
+
+    final, yc = jax.lax.scan(
+        jax.checkpoint(body), s0,
+        (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+         jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0)))
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, Sp, H, P)[:, :S]
+    return y, final
+
+
+def ssd_reference(x, dt, A, B, C, initial_state=None):
+    """Naive sequential recurrence (oracle for tests)."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Bm, Cm = B[:, :, 0], C[:, :, 0]
+    st = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((b, H, P, N), jnp.float32))
+    ys = []
+    for t in range(S):
+        dA = jnp.exp(dt[:, t] * A[None, :])              # (b, H)
+        dBx = jnp.einsum("bn,bhp,bh->bhpn", Bm[:, t].astype(jnp.float32),
+                         x[:, t].astype(jnp.float32), dt[:, t])
+        st = st * dA[..., None, None] + dBx
+        ys.append(jnp.einsum("bhpn,bn->bhp", st, Cm[:, t].astype(jnp.float32)))
+    return jnp.stack(ys, 1).astype(x.dtype), st
+
+
+# ---------------------------------------------------------------------------
+# full block applies
+# ---------------------------------------------------------------------------
+
+
+def _split_proj(zxbcdt: jax.Array, meta: dict):
+    d_inner, G, N, H = (meta["d_inner"], meta["n_groups"], meta["d_state"],
+                        meta["n_heads"])
+    z, x, B, C, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + G * N,
+                 2 * d_inner + 2 * G * N], axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B, S, C), w (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(K):
+        out = out + xp[:, k:k + x.shape[1]].astype(jnp.float32) \
+            * w[k].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def mamba2_forward(p: dict, hidden: jax.Array, meta: dict,
+                   norm_eps: float = 1e-5) -> jax.Array:
+    Bsz, S, _ = hidden.shape
+    H, P, N, G = (meta["n_heads"], meta["head_dim"], meta["d_state"],
+                  meta["n_groups"])
+    zxbcdt = hidden @ p["in_proj"]
+    z, x, Bv, Cv, dt = _split_proj(zxbcdt, meta)
+    xbc = jnp.concatenate([x, Bv, Cv], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    x, Bv, Cv = jnp.split(xbc, [meta["d_inner"], meta["d_inner"] + G * N],
+                          axis=-1)
+    x = shard(x, "batch", "seq", "ffn")
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(x.reshape(Bsz, S, H, P), dt,
+                       A, Bv.reshape(Bsz, S, G, N), Cv.reshape(Bsz, S, G, N),
+                       chunk=meta["chunk"])
+    y = (y + x.reshape(Bsz, S, H, P)
+         * p["D"][None, None, :, None]).astype(hidden.dtype)
+    y = y.reshape(Bsz, S, H * P)
+    y = rmsnorm({"scale": p["norm_scale"]}, y * jax.nn.silu(z), norm_eps)
+    return (y @ p["out_proj"]).astype(hidden.dtype)
+
+
+def mamba2_init_state(meta: dict, batch: int, dtype=jnp.float32) -> dict:
+    H, P, N = meta["n_heads"], meta["head_dim"], meta["d_state"]
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, meta["d_conv"] - 1, meta["conv_ch"]),
+                          jnp.bfloat16),
+    }
+
+
+def mamba2_decode(p: dict, hidden: jax.Array, state: dict, meta: dict,
+                  norm_eps: float = 1e-5) -> tuple:
+    """hidden: (B, 1, d_model); O(1) recurrent step."""
+    Bsz = hidden.shape[0]
+    H, P, N, G = (meta["n_heads"], meta["head_dim"], meta["d_state"],
+                  meta["n_groups"])
+    zxbcdt = hidden @ p["in_proj"]
+    z, x, Bv, Cv, dt = _split_proj(zxbcdt[:, 0], meta)
+    xbc = jnp.concatenate([x, Bv, Cv], axis=-1)          # (B, conv_ch)
+    window = jnp.concatenate(
+        [state["conv"], xbc[:, None].astype(state["conv"].dtype)], axis=1)
+    conv = (window.astype(jnp.float32)
+            * p["conv_w"].astype(jnp.float32)[None]).sum(1) \
+        + p["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(conv).astype(hidden.dtype)
+    x, Bv, Cv = jnp.split(xbc, [meta["d_inner"], meta["d_inner"] + G * N],
+                          axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])                                 # (B, H)
+    xh = x.reshape(Bsz, H, P).astype(jnp.float32)
+    dBx = jnp.einsum("bn,bhp,bh->bhpn", Bv.astype(jnp.float32), xh, dt)
+    ssm = state["ssm"] * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", ssm, Cv.astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(Bsz, 1, H * P).astype(hidden.dtype)
+    y = rmsnorm({"scale": p["norm_scale"]},
+                y * jax.nn.silu(z)[:, None], norm_eps)
+    out = (y @ p["out_proj"]).astype(hidden.dtype)
+    new_state = {"ssm": ssm, "conv": window[:, 1:]}
+    return out, new_state

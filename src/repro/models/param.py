@@ -1,0 +1,153 @@
+"""Parameter allocation and pytree utilities driven by the spec tree.
+
+Params are nested dicts mirroring the ModuleSpec tree:
+``{module_name: {layer_name: {param_name: array}}}`` with scan-stacked
+modules (``repeat > 1``) receiving a leading ``layers`` axis on every leaf.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spec import AXIS_LAYERS, ModuleSpec, ParamSpec, TrainPolicy
+
+
+def _init_leaf(key: jax.Array, p: ParamSpec, stack: int) -> jax.Array:
+    shape = (stack,) + tuple(p.shape) if stack else tuple(p.shape)
+    dtype = jnp.dtype(p.dtype)
+    if p.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(shape, dtype)
+    if p.init == "ssm_a":
+        # Mamba A_log init: log of uniform [1, 16)
+        u = jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if p.init == "dt_bias":
+        # softplus^-1 of dt in [1e-3, 1e-1]
+        dt = jnp.exp(jax.random.uniform(key, shape, jnp.float32)
+                     * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    # "normal" / "embed": truncated-normal-ish scaled by fan-in
+    fan_in = p.shape[0] if len(p.shape) >= 2 else max(p.shape[-1] if p.shape else 1, 1)
+    scale = p.init_scale / np.sqrt(max(fan_in, 1))
+    if p.init == "embed":
+        scale = p.init_scale * 0.02
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(spec: ModuleSpec, key: jax.Array) -> dict:
+    """Allocate the full parameter pytree for a spec tree."""
+
+    def init_module(mod: ModuleSpec, key: jax.Array, stack: int) -> dict:
+        out: dict[str, Any] = {}
+        if mod.repeat > 1 or mod.scanned:
+            stack = max(stack, 1) * mod.repeat
+        n = len(mod.layers) + len(mod.children)
+        keys = jax.random.split(key, max(n, 1))
+        ki = 0
+        for layer in mod.layers:
+            lkeys = jax.random.split(keys[ki], max(len(layer.params), 1))
+            ki += 1
+            out[layer.name] = {
+                name: _init_leaf(lk, p, stack)
+                for lk, (name, p) in zip(lkeys, layer.params.items())
+            }
+        for child in mod.children:
+            out[child.name] = init_module(child, keys[ki], stack)
+            ki += 1
+        return out
+
+    return {spec.name: init_module(spec, key, 0)}
+
+
+def param_specs(spec: ModuleSpec) -> dict:
+    """ShapeDtypeStruct pytree matching :func:`init_params` (no allocation)."""
+
+    def specs_module(mod: ModuleSpec, stack: int) -> dict:
+        out: dict[str, Any] = {}
+        if mod.repeat > 1 or mod.scanned:
+            stack = max(stack, 1) * mod.repeat
+        for layer in mod.layers:
+            out[layer.name] = {}
+            for name, p in layer.params.items():
+                shape = (stack,) + tuple(p.shape) if stack else tuple(p.shape)
+                out[layer.name][name] = jax.ShapeDtypeStruct(shape, jnp.dtype(p.dtype))
+        for child in mod.children:
+            out[child.name] = specs_module(child, stack)
+        return out
+
+    return {spec.name: specs_module(spec, 0)}
+
+
+def param_axes(spec: ModuleSpec) -> dict:
+    """Pytree of logical-axis tuples matching the param pytree layout."""
+
+    def axes_module(mod: ModuleSpec, stacked: bool) -> dict:
+        out: dict[str, Any] = {}
+        stacked = stacked or mod.repeat > 1 or mod.scanned
+        for layer in mod.layers:
+            out[layer.name] = {}
+            for name, p in layer.params.items():
+                axes = tuple(p.axes) if p.axes else (None,) * len(p.shape)
+                if stacked:
+                    axes = (AXIS_LAYERS,) + axes
+                out[layer.name][name] = axes
+        for child in mod.children:
+            out[child.name] = axes_module(child, stacked)
+        return out
+
+    return {spec.name: axes_module(spec, False)}
+
+
+def trainable_mask(spec: ModuleSpec, policy: TrainPolicy) -> dict:
+    """Pytree of bools: which params receive gradients under the policy."""
+
+    def mask_module(mod: ModuleSpec, path: str) -> dict:
+        out: dict[str, Any] = {}
+        flag = policy.is_trainable(path)
+        for layer in mod.layers:
+            out[layer.name] = {name: flag for name in layer.params}
+        for child in mod.children:
+            out[child.name] = mask_module(child, f"{path}/{child.name}")
+        return out
+
+    return {spec.name: mask_module(spec, spec.name)}
+
+
+def partition_params(params: dict, mask: dict) -> tuple[dict, dict]:
+    """Split a param pytree into (trainable, frozen) by a boolean mask tree.
+
+    Non-selected leaves are replaced by ``None`` so the two trees can be
+    merged back with :func:`merge_params`.
+    """
+    trainable = jax.tree.map(lambda p, m: p if m else None, params, mask,
+                             is_leaf=lambda x: x is None)
+    frozen = jax.tree.map(lambda p, m: None if m else p, params, mask,
+                          is_leaf=lambda x: x is None)
+    return trainable, frozen
+
+
+def merge_params(trainable: dict, frozen: dict) -> dict:
+    return jax.tree.map(lambda t, f: t if t is not None else f,
+                        trainable, frozen,
+                        is_leaf=lambda x: x is None)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree)
+               if x is not None)
+
+
+def cast_tree(tree, dtype) -> Any:
+    def cast(x):
+        if x is None:
+            return None
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(cast, tree, is_leaf=lambda x: x is None)

@@ -1,0 +1,131 @@
+"""Unified model interface over all architecture families.
+
+``build_model(cfg)`` returns a :class:`Model` exposing:
+
+* ``spec``         — the ModuleSpec tree (consumed by core.parser)
+* ``init(key)``    — parameter pytree
+* ``loss(params, batch)``            — scalar loss + metrics (training)
+* ``prefill(params, batch)``         — logits + populated cache
+* ``decode_step(params, token, cache)`` — one-token serve step
+* ``init_cache(batch, max_len)``     — zeroed cache pytree
+* ``batch_spec(shape)``              — ShapeDtypeStructs for every input
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, ShapeConfig
+from repro.core.spec import ModuleSpec
+from repro.models import param as PM
+from repro.models import transformer as T
+
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+    spec: ModuleSpec
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+    def init(self, key: jax.Array) -> dict:
+        return PM.init_params(self.spec, key)
+
+    def param_specs(self) -> dict:
+        return PM.param_specs(self.spec)
+
+    def param_axes(self) -> dict:
+        return PM.param_axes(self.spec)
+
+    # ------------------------------------------------------------------
+    def batch_spec(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of this shape."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if shape.kind == "decode":
+            return {"token": tok(B, 1)}
+        if cfg.family == "vlm":
+            n_img = cfg.vlm.n_image_tokens
+            s_text = max(S - n_img, 1)
+            batch = {"tokens": tok(B, s_text), "labels": tok(B, s_text)}
+            if cfg.vlm.vision_tower:
+                n_patch = (cfg.vlm.vit_image_size // cfg.vlm.vit_patch) ** 2
+                batch["patches"] = jax.ShapeDtypeStruct(
+                    (B, n_patch, 3 * cfg.vlm.vit_patch ** 2),
+                    jnp.dtype(cfg.dtype))
+            else:
+                batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (B, n_img, cfg.vlm.d_vision), jnp.dtype(cfg.dtype))
+            if shape.kind == "prefill":
+                batch.pop("labels")
+            return batch
+        if cfg.family == "encdec":
+            T_enc = int(S * cfg.encdec.enc_seq_ratio)
+            batch = {"frames": jax.ShapeDtypeStruct(
+                        (B, T_enc, cfg.encdec.d_frontend), jnp.dtype(cfg.dtype)),
+                     "tokens": tok(B, S), "labels": tok(B, S)}
+            if shape.kind == "prefill":
+                batch.pop("labels")
+            return batch
+        batch = {"tokens": tok(B, S), "labels": tok(B, S)}
+        if shape.kind == "prefill":
+            batch.pop("labels")
+        return batch
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        spec = T.lm_spec(cfg)
+        return Model(
+            cfg=cfg, spec=spec,
+            loss=lambda p, b, **kw: T.lm_loss(cfg, p, b["tokens"],
+                                              b["labels"], **kw),
+            prefill=lambda p, b: T.lm_prefill(cfg, p, b["tokens"]),
+            decode_step=lambda p, t, c: T.lm_decode_step(cfg, p, t, c),
+            init_cache=lambda b, m: T.init_kv_cache(cfg, b, m))
+    if fam == "ssm":
+        from repro.models import ssm_lm as S
+        spec = S.ssm_model_spec(cfg)
+        return Model(
+            cfg=cfg, spec=spec,
+            loss=lambda p, b, **kw: S.ssm_loss(cfg, p, b, **kw),
+            prefill=lambda p, b: S.ssm_prefill(cfg, p, b),
+            decode_step=lambda p, t, c: S.ssm_decode_step(cfg, p, t, c),
+            init_cache=lambda b, m: S.ssm_init_cache(cfg, b, m))
+    if fam == "hybrid":
+        from repro.models import hybrid as H
+        spec = H.hybrid_model_spec(cfg)
+        return Model(
+            cfg=cfg, spec=spec,
+            loss=lambda p, b, **kw: H.hybrid_loss(cfg, p, b, **kw),
+            prefill=lambda p, b: H.hybrid_prefill(cfg, p, b),
+            decode_step=lambda p, t, c: H.hybrid_decode_step(cfg, p, t, c),
+            init_cache=lambda b, m: H.hybrid_init_cache(cfg, b, m))
+    if fam == "vlm":
+        from repro.models import vlm as V
+        spec = V.vlm_model_spec(cfg)
+        return Model(
+            cfg=cfg, spec=spec,
+            loss=lambda p, b, **kw: V.vlm_loss(cfg, p, b, **kw),
+            prefill=lambda p, b: V.vlm_prefill(cfg, p, b),
+            decode_step=lambda p, t, c: V.vlm_decode_step(cfg, p, t, c),
+            init_cache=lambda b, m: T.init_kv_cache(cfg, b, m))
+    if fam == "encdec":
+        from repro.models import encdec as E
+        spec = E.encdec_model_spec(cfg)
+        return Model(
+            cfg=cfg, spec=spec,
+            loss=lambda p, b, **kw: E.encdec_loss(cfg, p, b, **kw),
+            prefill=lambda p, b: E.encdec_prefill(cfg, p, b),
+            decode_step=lambda p, t, c: E.encdec_decode_step(cfg, p, t, c),
+            init_cache=lambda b, m, enc_len=None: E.encdec_init_cache(
+                cfg, b, m, enc_len or m))
+    raise ValueError(f"unknown family {fam!r}")

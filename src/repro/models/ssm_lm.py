@@ -1,0 +1,130 @@
+"""Pure-SSM language model (mamba2-1.3b): embed -> 48x [norm + Mamba2] ->
+norm -> tied logits.  Decode is O(1) per token via the recurrent state."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.core.spec import ModuleSpec
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.mamba import (mamba2_spec, mamba2_forward, mamba2_decode,
+                                mamba2_init_state)
+
+
+def ssm_model_spec(cfg: ArchConfig, name: str = "language_model") -> ModuleSpec:
+    children = [
+        ModuleSpec(name="embed", modality="text",
+                   layers=[L.embedding_spec("tok", cfg.vocab, cfg.d_model,
+                                            cfg.dtype, tied=cfg.tie_embeddings)]),
+        ModuleSpec(name="blocks", modality="text", repeat=cfg.n_layers,
+                   scanned=True,
+                   layers=[L.rmsnorm_spec("norm", cfg.d_model, cfg.dtype),
+                           mamba2_spec("mixer", cfg.d_model, cfg.ssm,
+                                       cfg.dtype)]),
+        ModuleSpec(name="head", modality="text",
+                   layers=[L.rmsnorm_spec("final_norm", cfg.d_model,
+                                          cfg.dtype)]),
+    ]
+    return ModuleSpec(name=name, modality="text", children=children)
+
+
+def _meta(cfg: ArchConfig) -> dict:
+    return mamba2_spec("mixer", cfg.d_model, cfg.ssm, cfg.dtype).meta
+
+
+def ssm_backbone(cfg: ArchConfig, p: dict, x: jax.Array,
+                 remat: Optional[str] = None) -> jax.Array:
+    meta = _meta(cfg)
+    remat = remat if remat is not None else cfg.remat
+
+    def body(x, bp):
+        h = L.rmsnorm(bp["norm"], x, cfg.norm_eps)
+        return x + mamba2_forward(bp["mixer"], h, meta, cfg.norm_eps), None
+
+    x, _ = jax.lax.scan(T._remat(body, remat), x, p["blocks"])
+    return L.rmsnorm(p["head"]["final_norm"], x, cfg.norm_eps)
+
+
+def ssm_loss(cfg: ArchConfig, params: dict, batch: dict,
+             remat: Optional[str] = None):
+    p = params["language_model"]
+    x = T.embed_tokens(cfg, p, batch["tokens"])
+    hidden = ssm_backbone(cfg, p, x, remat)
+    loss_sum, n_tok = T.chunked_xent(cfg, p, hidden, batch["labels"])
+    loss = loss_sum / jnp.maximum(n_tok, 1.0)
+    return loss, {"xent": loss, "n_tok": n_tok}
+
+
+def ssm_init_cache(cfg: ArchConfig, batch: int, max_len: int = 0) -> dict:
+    meta = _meta(cfg)
+    one = mamba2_init_state(meta, batch)
+    stack = jax.tree.map(
+        lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one)
+    return {"blocks": stack, "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def ssm_decode_step(cfg: ArchConfig, params: dict, token: jax.Array,
+                    cache: dict):
+    p = params["language_model"]
+    meta = _meta(cfg)
+    x = T.embed_tokens(cfg, p, token)
+
+    def body(x, inp):
+        bp, st = inp
+        h = L.rmsnorm(bp["norm"], x, cfg.norm_eps)
+        y, new_st = mamba2_decode(bp["mixer"], h, st, meta, cfg.norm_eps)
+        return x + y, new_st
+
+    x, new_states = jax.lax.scan(body, x, (p["blocks"], cache["blocks"]))
+    x = L.rmsnorm(p["head"]["final_norm"], x, cfg.norm_eps)
+    return T.lm_logits(cfg, p, x), {"blocks": new_states,
+                                    "len": cache["len"] + 1}
+
+
+def ssm_prefill(cfg: ArchConfig, params: dict, batch: dict):
+    """Run the chunked-SSD forward over the prompt, materializing the final
+    recurrent state per layer as the cache."""
+    p = params["language_model"]
+    meta = _meta(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = T.embed_tokens(cfg, p, tokens)
+
+    from repro.models.mamba import (_causal_conv, _split_proj, ssd_chunked)
+
+    def body(x, bp):
+        h = L.rmsnorm(bp["norm"], x, cfg.norm_eps)
+        mp = bp["mixer"]
+        zxbcdt = h @ mp["in_proj"]
+        z, xin, Bv, Cv, dt = _split_proj(zxbcdt, meta)
+        xbc = jnp.concatenate([xin, Bv, Cv], axis=-1)
+        conv_tail = xbc[:, -(meta["d_conv"] - 1):].astype(jnp.bfloat16)
+        xbc = jax.nn.silu(_causal_conv(xbc, mp["conv_w"], mp["conv_b"]))
+        xin, Bv, Cv = jnp.split(
+            xbc, [meta["d_inner"], meta["d_inner"] + meta["n_groups"]
+                  * meta["d_state"]], axis=-1)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + mp["dt_bias"])
+        A = -jnp.exp(mp["A_log"])
+        H, P = meta["n_heads"], meta["head_dim"]
+        G, N = meta["n_groups"], meta["d_state"]
+        y, final_state = ssd_chunked(xin.reshape(B, S, H, P), dt, A,
+                                     Bv.reshape(B, S, G, N),
+                                     Cv.reshape(B, S, G, N),
+                                     chunk=meta["chunk"])
+        y = (y + xin.reshape(B, S, H, P)
+             * mp["D"][None, None, :, None]).astype(x.dtype)
+        y = y.reshape(B, S, H * P)
+        y = L.rmsnorm({"scale": mp["norm_scale"]}, y * jax.nn.silu(z),
+                      cfg.norm_eps)
+        return x + (y @ mp["out_proj"]).astype(x.dtype), \
+            {"ssm": final_state, "conv": conv_tail}
+
+    x, states = jax.lax.scan(body, x, p["blocks"])
+    x = L.rmsnorm(p["head"]["final_norm"], x[:, -1:], cfg.norm_eps)
+    cache = {"blocks": states, "len": jnp.full((B,), S, jnp.int32)}
+    return T.lm_logits(cfg, p, x), cache

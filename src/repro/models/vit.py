@@ -1,0 +1,83 @@
+"""CLIP-style ViT vision tower (real params — used by the paper-repro
+llava15-7b config, where it is FROZEN during both training stages)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spec import ActTerm, LayerSpec, ModuleSpec, ParamSpec, AXIS_EMBED
+from repro.models import layers as L
+from repro.models.attention import flash_attention
+
+
+def vit_spec(vlm, dtype: str = "bfloat16") -> ModuleSpec:
+    d = vlm.d_vision
+    n_patches = (vlm.vit_image_size // vlm.vit_patch) ** 2
+    patch_dim = 3 * vlm.vit_patch ** 2
+    head_dim = d // vlm.vit_heads
+    embed = ModuleSpec(
+        name="patch_embed", modality="vision",
+        layers=[
+            L.linear_spec("proj", patch_dim, d, axes=(None, AXIS_EMBED)),
+            LayerSpec("pos_embed", "embedding",
+                      params={"w": ParamSpec((n_patches + 1, d), dtype,
+                                             (None, AXIS_EMBED), init="embed"),
+                              "cls": ParamSpec((d,), dtype, (AXIS_EMBED,),
+                                               init="embed")},
+                      acts=[], flops_per_token=0.0,
+                      meta={"n_patches": n_patches}),
+            L.layernorm_spec("ln_pre", d, dtype),
+        ])
+    block = ModuleSpec(
+        name="blocks", modality="vision", repeat=vlm.vit_layers, scanned=True,
+        layers=[
+            L.layernorm_spec("ln1", d, dtype),
+            _vit_attn_spec(d, vlm.vit_heads, head_dim, dtype),
+            L.layernorm_spec("ln2", d, dtype),
+            L.mlp_spec("mlp", d, vlm.vit_d_ff, dtype, gated=False),
+        ])
+    post = ModuleSpec(name="post", modality="vision",
+                      layers=[L.layernorm_spec("ln_post", d, dtype)])
+    return ModuleSpec(name="vision_tower", modality="vision",
+                      children=[embed, block, post])
+
+
+def _vit_attn_spec(d, n_heads, head_dim, dtype):
+    from repro.models.attention import gqa_spec
+    spec = gqa_spec("attn", d, n_heads, n_heads, head_dim, dtype=dtype)
+    spec.meta["causal"] = False
+    return spec
+
+
+def vit_forward(params: dict, patches: jax.Array, vlm,
+                norm_eps: float = 1e-5) -> jax.Array:
+    """patches: (B, n_patches, 3*patch^2) pre-extracted pixel patches."""
+    p = params["vision_tower"]
+    emb = p["patch_embed"]
+    x = L.linear(emb["proj"], patches)
+    B = x.shape[0]
+    cls = jnp.broadcast_to(emb["pos_embed"]["cls"], (B, 1, x.shape[-1]))
+    x = jnp.concatenate([cls.astype(x.dtype), x], axis=1)
+    x = x + emb["pos_embed"]["w"][None, :x.shape[1]]
+    x = L.layernorm(emb["ln_pre"], x, norm_eps)
+
+    blocks = p["blocks"]
+    n_heads = vlm.vit_heads
+    head_dim = vlm.d_vision // n_heads
+
+    def block(x, bp):
+        h = L.layernorm(bp["ln1"], x, norm_eps)
+        B_, S_, _ = h.shape
+        q = (h @ bp["attn"]["wq"]).reshape(B_, S_, n_heads, head_dim)
+        k = (h @ bp["attn"]["wk"]).reshape(B_, S_, n_heads, head_dim)
+        v = (h @ bp["attn"]["wv"]).reshape(B_, S_, n_heads, head_dim)
+        ctx = flash_attention(q, k, v, False, 1024)
+        x = x + ctx.reshape(B_, S_, -1) @ bp["attn"]["wo"]
+        h = L.layernorm(bp["ln2"], x, norm_eps)
+        x = x + L.mlp(bp["mlp"], h)
+        return x, None
+
+    x, _ = jax.lax.scan(block, x, blocks)
+    x = L.layernorm(p["post"]["ln_post"], x, norm_eps)
+    return x[:, 1:]                                      # drop CLS

@@ -1,0 +1,112 @@
+"""Vision-language models.
+
+* llava-next-mistral-7b (assigned arch): STUB anyres frontend — the input is
+  precomputed patch embeddings (B, n_image_tokens, d_vision); projector +
+  Mistral backbone are real.
+* llava15-7b (paper repro): REAL CLIP ViT-L/14 vision tower (frozen per the
+  paper's training stages) + 2-layer MLP projector + Vicuna-7B.
+
+Sequence layout: [projected image tokens | text embeddings]; loss is
+computed on text positions only (image labels = -100).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.core.spec import ModuleSpec, LayerSpec, ParamSpec, AXIS_EMBED
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.vit import vit_spec, vit_forward
+
+
+def projector_spec(cfg: ArchConfig) -> ModuleSpec:
+    v = cfg.vlm
+    layers = []
+    d_in = v.d_vision
+    for i in range(v.projector_layers):
+        layers.append(L.linear_spec(f"fc{i}", d_in, cfg.d_model,
+                                    axes=(None, AXIS_EMBED), bias=True))
+        d_in = cfg.d_model
+    return ModuleSpec(name="projector", modality="vision", layers=layers)
+
+
+def vlm_model_spec(cfg: ArchConfig) -> ModuleSpec:
+    children = []
+    if cfg.vlm.vision_tower:
+        children.append(vit_spec(cfg.vlm, cfg.dtype))
+    children.append(projector_spec(cfg))
+    children.append(T.lm_spec(cfg, name="language_model"))
+    return ModuleSpec(name="vlm", modality="multimodal", children=children)
+
+
+def project_image(cfg: ArchConfig, p: dict, feats: jax.Array) -> jax.Array:
+    x = feats
+    for i in range(cfg.vlm.projector_layers):
+        x = L.linear(p["projector"][f"fc{i}"], x)
+        if i < cfg.vlm.projector_layers - 1:
+            x = jax.nn.gelu(x)
+    return x
+
+
+def vlm_embeds(cfg: ArchConfig, params: dict, batch: dict):
+    """batch: {'tokens': (B, S_text), 'patch_embeds' | 'patches'} ->
+    (embeds (B, S_total, D), labels offset)."""
+    p = params["vlm"]
+    if cfg.vlm.vision_tower:
+        feats = vit_forward(p, batch["patches"], cfg.vlm, cfg.norm_eps)
+    else:
+        feats = batch["patch_embeds"]
+    img = project_image(cfg, p, feats).astype(jnp.dtype(cfg.dtype))
+    txt = T.embed_tokens(cfg, p["language_model"], batch["tokens"])
+    return jnp.concatenate([img, txt], axis=1)
+
+
+def vlm_loss(cfg: ArchConfig, params: dict, batch: dict,
+             remat: Optional[str] = None):
+    p = params["vlm"]
+    embeds = vlm_embeds(cfg, params, batch)
+    B, S_total, _ = embeds.shape
+    n_img = S_total - batch["tokens"].shape[1]
+    hidden, aux = T.lm_backbone(cfg, p["language_model"], embeds, remat=remat)
+    labels = jnp.concatenate(
+        [jnp.full((B, n_img), -100, jnp.int32), batch["labels"]], axis=1)
+    loss_sum, n_tok = T.chunked_xent(cfg, p["language_model"], hidden, labels)
+    loss = loss_sum / jnp.maximum(n_tok, 1.0)
+    if cfg.moe:
+        loss = loss + 0.01 * aux / max(cfg.n_layers, 1)
+    return loss, {"xent": loss, "aux": aux, "n_tok": n_tok}
+
+
+def vlm_prefill(cfg: ArchConfig, params: dict, batch: dict):
+    """Prefill over [image tokens | text]; returns logits + cache."""
+    p = params["vlm"]
+    embeds = vlm_embeds(cfg, params, batch)
+    # Reuse the LM prefill by driving the backbone directly.
+    lm = p["language_model"]
+    B, S, _ = embeds.shape
+
+    def scan_stack(x, stack):
+        def body(carry, bp):
+            x = carry
+            h = L.rmsnorm(bp["norm1"], x, cfg.norm_eps)
+            kv = T._prefill_kv(cfg, bp["attn"], h)
+            x, _ = T._block_apply(cfg, bool(cfg.moe), bp, x, None, 1024)
+            return x, kv
+        return jax.lax.scan(T._remat(body, cfg.remat), x, stack)
+
+    x, kv = scan_stack(embeds, lm["blocks"])
+    cache = {"blocks": kv, "len": jnp.full((B,), S, jnp.int32)}
+    x = L.rmsnorm(lm["head"]["final_norm"], x[:, -1:], cfg.norm_eps)
+    return T.lm_logits(cfg, lm, x), cache
+
+
+def vlm_decode_step(cfg: ArchConfig, params: dict, token: jax.Array,
+                    cache: dict):
+    return T.lm_decode_step(cfg, {"language_model":
+                                  params["vlm"]["language_model"]},
+                            token, cache)

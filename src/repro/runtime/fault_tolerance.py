@@ -1,0 +1,117 @@
+"""Fault-tolerant training driver: checkpoint/restart, failure recovery,
+straggler mitigation, elastic rescaling.
+
+On a real cluster the failure signal comes from the coordination service
+(heartbeat loss); here the driver exposes the same control flow with an
+injectable failure source so the logic is testable:
+
+* every ``ckpt_every`` steps the state is checkpointed asynchronously;
+* a step failure (device loss / preemption) triggers restore-from-latest
+  and replay — the deterministic pipeline regenerates the exact batches;
+* per-step wall times feed an EWMA straggler detector; a flagged shard's
+  data range is reassigned to healthy hosts (deterministic re-partition);
+* ``rescale(new_n_shards)`` re-partitions data and re-shards the restored
+  state onto a new mesh (elastic scaling) — checkpoints are mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+
+
+@dataclass
+class FaultConfig:
+    ckpt_every: int = 50
+    max_restarts: int = 3
+    straggler_factor: float = 2.0    # step slower than factor*EWMA => flag
+    ewma_alpha: float = 0.2
+
+
+@dataclass
+class ResilientTrainer:
+    """Drives ``train_step`` with checkpoint/restart semantics."""
+
+    train_step: Callable              # (state, batch) -> (state, metrics)
+    pipeline: Any                     # data pipeline (shard_batch/global_batch)
+    checkpointer: Checkpointer
+    fault_cfg: FaultConfig = field(default_factory=FaultConfig)
+    make_batch: Optional[Callable] = None   # step -> batch (overrides pipeline)
+    failure_injector: Optional[Callable] = None  # step -> bool (tests)
+    on_straggler: Optional[Callable] = None
+
+    _ewma: Optional[float] = None
+    restarts: int = 0
+    straggler_events: list = field(default_factory=list)
+
+    def _batch(self, step: int):
+        if self.make_batch is not None:
+            return self.make_batch(step)
+        return self.pipeline.global_batch(step)
+
+    def run(self, state, start_step: int, n_steps: int,
+            log_every: int = 0) -> tuple[Any, list]:
+        history = []
+        step = start_step
+        while step < start_step + n_steps:
+            batch = self._batch(step)
+            t0 = time.monotonic()
+            try:
+                if self.failure_injector and self.failure_injector(step):
+                    raise RuntimeError(f"injected failure at step {step}")
+                state, metrics = self.train_step(state, batch)
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.fault_cfg.max_restarts:
+                    raise
+                restored_step, restored = self.checkpointer.restore_latest(
+                    like=state)
+                if restored is not None:
+                    state = restored
+                    step = int(restored_step)
+                # else: replay from start_step state (no ckpt yet)
+                continue
+            dt = time.monotonic() - t0
+            self._track_stragglers(step, dt)
+            history.append({"step": step, **{k: float(np.asarray(v))
+                                             for k, v in metrics.items()}})
+            step += 1
+            if step % self.fault_cfg.ckpt_every == 0:
+                self.checkpointer.save_async(step, state)
+            if log_every and step % log_every == 0:
+                print(f"step {step}: " + ", ".join(
+                    f"{k}={v:.4f}" for k, v in history[-1].items()
+                    if k != "step"))
+        self.checkpointer.save_async(step, state)
+        self.checkpointer.wait()
+        return state, history
+
+    def _track_stragglers(self, step: int, dt: float) -> None:
+        if self._ewma is None:
+            self._ewma = dt
+            return
+        if dt > self.fault_cfg.straggler_factor * self._ewma:
+            self.straggler_events.append((step, dt, self._ewma))
+            if self.on_straggler:
+                self.on_straggler(step, dt)
+            # Mitigation: deterministic pipeline lets healthy hosts take
+            # over the slow shard's row range next step.
+            if hasattr(self.pipeline, "n_shards") \
+                    and self.pipeline.n_shards > 1:
+                self.pipeline.shard_id = (self.pipeline.shard_id
+                                          % max(self.pipeline.n_shards - 1, 1))
+        a = self.fault_cfg.ewma_alpha
+        self._ewma = (1 - a) * self._ewma + a * dt
+
+    # -- elastic scaling ----------------------------------------------------
+    def rescale(self, new_n_shards: int) -> None:
+        """Re-partition the data pipeline for a new host count; state
+        resharding happens at restore time via mesh-agnostic checkpoints."""
+        self.pipeline.n_shards = new_n_shards
+        self.pipeline.shard_id = min(self.pipeline.shard_id,
+                                     new_n_shards - 1)

@@ -1,0 +1,71 @@
+"""Serving steps: batched prefill and single-token decode with donated
+caches.  The paper's §5 names inference KV-cache memory as future work —
+this module (with core.predictor's cache factor) implements it.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch)
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    """decode_step(params, token, cache) -> (next_token, logits, cache).
+
+    Cache is donated by the launcher (argnums set at jit time) so the
+    update aliases in place — the memory the predictor models.
+    """
+    def decode_step(params, token, cache):
+        logits, new_cache = model.decode_step(params, token, cache)
+        next_token = jnp.argmax(logits[:, -1], axis=-1)[:, None] \
+            .astype(jnp.int32)
+        return next_token, logits, new_cache
+    return decode_step
+
+
+# cache leaves with a growable sequence dim (axis 2 of (L, B, S, ...)).
+_SEQ_KEYS = {"k", "v", "latent", "k_rope"}
+
+
+def pad_cache(cache, extra: int):
+    """Grow KV-style cache capacity by ``extra`` positions.
+
+    Prefill builds a cache sized to the prompt; decoding needs headroom.
+    Only sequence-indexed leaves grow — SSM states, conv windows and
+    encoder cross-attention memories are length-free / fixed.
+    """
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (jnp.pad(v, [(0, 0), (0, 0), (0, extra)]
+                                + [(0, 0)] * (v.ndim - 3))
+                        if k in _SEQ_KEYS and hasattr(v, "ndim")
+                        and v.ndim >= 3 else walk(v))
+                    for k, v in node.items()}
+        return node
+
+    return walk(cache)
+
+
+def generate(model: Model, params, batch, max_new_tokens: int = 16):
+    """Greedy generation loop (examples / tests)."""
+    prefill = jax.jit(make_prefill_step(model))
+    decode = jax.jit(make_decode_step(model), donate_argnums=(2,))
+    logits, cache = prefill(params, batch)
+    cache = pad_cache(cache, max_new_tokens)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for _ in range(max_new_tokens - 1):
+        tok, _, cache = decode(params, tok, cache)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,2 @@
+from repro.train.optimizer import OptimizerConfig, init_opt_state, apply_updates  # noqa: F401
+from repro.train.train_step import TrainState, make_train_step  # noqa: F401

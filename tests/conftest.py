@@ -1,0 +1,49 @@
+"""Shared fixtures.  Tests run on the default 1-CPU-device backend; tests
+needing a small multi-device mesh spawn it via the xdist-safe subprocess
+helpers or use the 1x1 mesh (same code paths, degenerate sizes).
+
+NOTE: --xla_force_host_platform_device_count is deliberately NOT set here —
+only launch/dryrun.py uses placeholder devices (per the brief).  Tests that
+need >1 device run in a subprocess (see test_moe_ep / test_distributed).
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(code: str, n_devices: int = 4) -> str:
+    """Run a python snippet in a subprocess with N fake CPU devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices}")
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=900)
+    if r.returncode != 0:
+        raise AssertionError(f"subprocess failed:\n{r.stdout}\n{r.stderr}")
+    return r.stdout
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_batch(model, shape, key=None):
+    """Concrete random batch matching model.batch_spec(shape)."""
+    key = key if key is not None else jax.random.PRNGKey(1)
+    out = {}
+    for name, sd in model.batch_spec(shape).items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(sd.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, sd.shape, 0,
+                                           model.cfg.vocab, sd.dtype)
+        else:
+            out[name] = jax.random.normal(sub, sd.shape, sd.dtype) * 0.3
+    return out

@@ -1,0 +1,153 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, Sq, Skv, H, Hkv, D, Dv, causal, block)
+    (2, 256, 256, 4, 2, 64, 64, True, 128),
+    (1, 200, 200, 6, 3, 32, 32, True, 128),     # ragged seq -> padding
+    (2, 1, 384, 4, 4, 64, 64, False, 128),      # decode-shaped
+    (1, 256, 256, 8, 1, 128, 64, True, 128),    # MQA + Dq != Dv (MLA-like)
+    (1, 130, 130, 2, 2, 64, 64, True, 128),     # off-by-two padding
+    (2, 128, 256, 4, 2, 64, 64, True, 128),     # q continuation (offset)
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_fwd(case, dtype):
+    B, Sq, Skv, H, Hkv, D, Dv, causal, block = case
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (B, Sq, H, D), dtype)
+    k = jax.random.normal(k2, (B, Skv, Hkv, D), dtype)
+    v = jax.random.normal(k3, (B, Skv, Hkv, Dv), dtype)
+    qoff = Skv - Sq if causal else 0
+    out = ops.flash_attention(q, k, v, causal, block, qoff, True)
+    expect, _ = ref.attention_ref(q, k, v, causal, qoff)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("case", FLASH_CASES[:4])
+def test_flash_attention_grads(case):
+    B, Sq, Skv, H, Hkv, D, Dv, causal, block = case
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (B, Sq, H, D), jnp.float32)
+    k = jax.random.normal(k2, (B, Skv, Hkv, D), jnp.float32)
+    v = jax.random.normal(k3, (B, Skv, Hkv, Dv), jnp.float32)
+    qoff = Skv - Sq if causal else 0
+
+    def f_kernel(q, k, v):
+        return (ops.flash_attention(q, k, v, causal, block, qoff, True)
+                * jnp.cos(jnp.arange(Dv))).sum()
+
+    def f_ref(q, k, v):
+        return (ref.attention_ref(q, k, v, causal, qoff)[0]
+                * jnp.cos(jnp.arange(Dv))).sum()
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-4, rtol=5e-4)
+
+
+def test_flash_matches_model_attention_path():
+    """Kernel vs the model code's pure-lax flash (one definition)."""
+    from repro.models.attention import flash_attention as lax_flash
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (2, 192, 6, 64), jnp.float32)
+    k = jax.random.normal(k2, (2, 192, 2, 64), jnp.float32)
+    v = jax.random.normal(k3, (2, 192, 2, 64), jnp.float32)
+    a = ops.flash_attention(q, k, v, True, 128, 0, True)
+    b = lax_flash(q, k, v, True, 128, 0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(64, 128), (3, 50, 96), (2, 7, 33, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_fwd(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    s = jax.random.normal(jax.random.PRNGKey(5), shape[-1:], dtype)
+    out = ops.rmsnorm(x, s, 1e-5, True)
+    expect = ref.rmsnorm_ref(x, s)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_rmsnorm_grads():
+    x = jax.random.normal(KEY, (40, 96), jnp.float32)
+    s = jax.random.normal(jax.random.PRNGKey(5), (96,), jnp.float32)
+    gk = jax.grad(lambda x, s: (ops.rmsnorm(x, s, 1e-5, True) ** 2).sum(),
+                  argnums=(0, 1))(x, s)
+    gr = jax.grad(lambda x, s: (ref.rmsnorm_ref(x, s) ** 2).sum(),
+                  argnums=(0, 1))(x, s)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", [
+    # (b, S, H, P, N, chunk)
+    (2, 128, 4, 16, 32, 32),
+    (1, 96, 2, 32, 16, 32),      # padded final chunk
+    (1, 64, 1, 64, 64, 64),
+])
+def test_ssd_kernel(case):
+    b, S, H, P, N, chunk = case
+    x = jax.random.normal(KEY, (b, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (b, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (H,)) * 0.3)
+    B_ = jax.random.normal(jax.random.PRNGKey(3), (b, S, N)) * 0.5
+    C_ = jax.random.normal(jax.random.PRNGKey(4), (b, S, N)) * 0.5
+    y, st = ops.ssd_scan(x, dt, A, B_, C_, chunk=chunk, interpret=True)
+    yr, str_ = ref.ssd_ref(x, dt, A, B_, C_)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(str_),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_kernel_matches_model_path():
+    """Kernel vs models.mamba.ssd_chunked (the training path)."""
+    from repro.models.mamba import ssd_chunked
+    b, S, H, P, N = 1, 128, 2, 16, 32
+    x = jax.random.normal(KEY, (b, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (b, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(2), (H,)) * 0.3)
+    B_ = jax.random.normal(jax.random.PRNGKey(3), (b, S, 1, N)) * 0.5
+    C_ = jax.random.normal(jax.random.PRNGKey(4), (b, S, 1, N)) * 0.5
+    yk, stk = ops.ssd_scan(x, dt, A, B_[:, :, 0], C_[:, :, 0],
+                           chunk=32, interpret=True)
+    ym, stm = ssd_chunked(x, dt, A, B_, C_, chunk=32)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(ym),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(stk), np.asarray(stm),
+                               atol=1e-4, rtol=1e-4)

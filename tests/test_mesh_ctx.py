@@ -1,0 +1,114 @@
+"""Property tests (hypothesis) for the sharding-resolution core.
+
+The system's central invariant: ``shard_factor`` (used by the memory
+predictor) and ``resolve_pspec`` (used by the runtime) are arithmetic twins
+— they may never disagree, or predictions drift from execution.
+"""
+
+import math
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.mesh_ctx import (DEFAULT_RULES, assign_axes, resolve_pspec,
+                            shard_factor)
+
+AXES = [None, "batch", "seq", "vocab", "heads", "kv_heads", "ffn",
+        "experts", "layers", "embed"]
+
+dims = st.integers(min_value=1, max_value=4096)
+axis_names = st.sampled_from(AXES)
+mesh_sizes = st.fixed_dictionaries({
+    "pod": st.sampled_from([1, 2]),
+    "data": st.sampled_from([1, 2, 4, 8, 16]),
+    "model": st.sampled_from([1, 2, 4, 8, 16]),
+})
+
+
+@st.composite
+def shaped(draw):
+    rank = draw(st.integers(min_value=1, max_value=4))
+    shape = tuple(draw(dims) for _ in range(rank))
+    axes = tuple(draw(axis_names) for _ in range(rank))
+    return shape, axes
+
+
+@given(shaped(), mesh_sizes)
+@settings(max_examples=200, deadline=None)
+def test_shard_factor_divides_size(sa, sizes):
+    shape, axes = sa
+    f = shard_factor(shape, axes, sizes)
+    total = math.prod(shape)
+    assert f >= 1
+    assert total % f == 0, "shard factor must divide the element count"
+
+
+@given(shaped(), mesh_sizes)
+@settings(max_examples=200, deadline=None)
+def test_per_dim_divisibility(sa, sizes):
+    shape, axes = sa
+    per_dim = assign_axes(shape, axes, sizes, dict(DEFAULT_RULES))
+    for dim, assigned in zip(shape, per_dim):
+        k = math.prod(sizes[a] for a in assigned)
+        assert dim % k == 0
+    flat = [a for d in per_dim for a in d]
+    assert len(flat) == len(set(flat)), "a mesh axis may appear only once"
+
+
+@given(shaped(), mesh_sizes)
+@settings(max_examples=200, deadline=None)
+def test_fsdp_extra_never_on_layers(sa, sizes):
+    shape, axes = sa
+    per_dim = assign_axes(shape, axes, sizes, dict(DEFAULT_RULES),
+                          extra=("data",))
+    for ax, assigned in zip(axes, per_dim):
+        if ax == "layers":
+            assert "data" not in assigned
+
+
+@given(shaped(), mesh_sizes)
+@settings(max_examples=100, deadline=None)
+def test_factor_bounded_by_mesh(sa, sizes):
+    shape, axes = sa
+    f = shard_factor(shape, axes, sizes)
+    assert f <= math.prod(sizes.values())
+
+
+@given(shaped())
+@settings(max_examples=50, deadline=None)
+def test_empty_mesh_means_replicated(sa):
+    shape, axes = sa
+    assert shard_factor(shape, axes, {}) == 1
+
+
+def test_twin_consistency_on_live_mesh():
+    """resolve_pspec sharding == shard_factor arithmetic on a real mesh."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sizes = {"data": 1, "model": 1}
+    for shape, axes in [((16, 64), ("batch", "embed")),
+                        ((4, 128, 30), ("batch", "seq", "heads"))]:
+        spec = resolve_pspec(shape, axes, mesh)
+        f = shard_factor(shape, axes, sizes)
+        sharded = math.prod(
+            sizes[a] for entry in spec
+            for a in ((entry,) if isinstance(entry, str) else entry or ()))
+        assert sharded == f
+
+
+def test_known_cases():
+    sizes = {"data": 16, "model": 16}
+    # batch 4 not divisible by data=16 -> replicated; merged heads 960 shard
+    assert shard_factor((4, 128, 960), ("batch", "seq", "heads"),
+                        sizes) == 16
+    # batch divisible -> both axes engage
+    assert shard_factor((64, 128, 960), ("batch", "seq", "heads"),
+                        sizes) == 256
+    # smollm's 4-D head layout: 15 heads do NOT divide model=16 -> replicate
+    assert shard_factor((64, 128, 15, 64),
+                        ("batch", "seq", "heads", None), sizes) == 16
+    # sequence parallelism rule override
+    rules = dict(DEFAULT_RULES, seq=("model",))
+    assert shard_factor((64, 4096, 1024), ("batch", "seq", "embed"),
+                        sizes, rules) == 256

@@ -1,0 +1,181 @@
+"""End-to-end system tests: serving consistency, sharded-vs-unsharded
+training equivalence (4 fake devices, subprocess), MoE expert parallelism,
+and a miniature dry-run (the deliverable-(e) machinery on a tiny mesh)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_with_devices, tiny_batch
+from repro.configs import ShapeConfig, get_config
+from repro.models import build_model
+from repro.serve import generate
+
+
+def test_generate_greedy_consistency():
+    """generate() equals argmax teacher-forcing over the model's own
+    choices (prefill + incremental decode correctness end-to-end)."""
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0, cfg.vocab)
+    out = generate(model, params, {"tokens": tokens}, max_new_tokens=6)
+    assert out.shape == (2, 6)
+
+    # oracle: re-run full forward over (prompt + generated prefix)
+    seq = tokens
+    for t in range(6):
+        logits, _ = jax.jit(model.prefill)(params, {"tokens": seq})
+        nxt = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(out[:, t:t + 1]),
+                                      np.asarray(nxt))
+        seq = jnp.concatenate([seq, nxt], axis=1)
+
+
+def test_sharded_training_matches_single_device():
+    """The production sharding path (mesh + ZeRO + TP + SP constraints)
+    computes the SAME numbers as the unsharded program."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import ShapeConfig, get_config
+from repro.core.spec import FULL_TRAIN
+from repro.launch import mesh as M
+from repro.mesh_ctx import mesh_context
+from repro.models import build_model, param as PM
+from repro.train import OptimizerConfig, TrainState, make_train_step
+from repro.train.optimizer import init_opt_state
+
+cfg = get_config('smollm-360m').reduced()
+model = build_model(cfg)
+shape = ShapeConfig('t', 32, 4, 'train')
+key = jax.random.PRNGKey(0)
+params = model.init(key)
+mask = PM.trainable_mask(model.spec, FULL_TRAIN)
+tr, _ = PM.partition_params(params, mask)
+opt = init_opt_state(tr, OptimizerConfig())
+state = TrainState(params=params, opt=opt, step=jnp.int32(0))
+tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab)
+batch = {'tokens': tokens, 'labels': tokens}
+
+# unsharded
+step = jax.jit(make_train_step(model, FULL_TRAIN, OptimizerConfig()))
+s1, m1 = step(state, batch)
+
+# sharded on a (2, 2) mesh with the full production rules
+mesh = M.make_smoke_mesh(2, 2)
+with mesh_context(mesh, M.arch_rules(cfg)):
+    step2 = jax.jit(make_train_step(model, FULL_TRAIN, OptimizerConfig()))
+    s2, m2 = step2(state, batch)
+
+assert abs(float(m1['loss']) - float(m2['loss'])) < 1e-3, (m1, m2)
+d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+    a.astype(jnp.float32) - b.astype(jnp.float32)))), s1.params, s2.params)
+worst = max(jax.tree.leaves(d))
+assert worst < 5e-2, worst
+print('SHARDED_OK', float(m1['loss']), float(m2['loss']), worst)
+"""
+    out = run_with_devices(code, n_devices=4)
+    assert "SHARDED_OK" in out
+
+
+def test_moe_ep_matches_dense_fallback():
+    """Expert-parallel all_to_all dispatch == dense fallback when no
+    tokens are dropped (high capacity factor)."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np, dataclasses
+from repro.configs import get_config
+from repro.launch import mesh as M
+from repro.mesh_ctx import mesh_context
+from repro.models.moe import moe_forward, moe_spec
+
+cfg = get_config('deepseek-v2-lite-16b').reduced()
+moe = dataclasses.replace(cfg.moe, capacity_factor=8.0)  # no drops
+spec = moe_spec('ffn', cfg.d_model, moe, cfg.dtype)
+key = jax.random.PRNGKey(0)
+p = {
+  'router': jax.random.normal(key, (cfg.d_model, moe.n_experts), jnp.float32) * 0.1,
+  'wg': jax.random.normal(jax.random.PRNGKey(1), (moe.n_experts, cfg.d_model, moe.d_expert), jnp.float32) * 0.05,
+  'wu': jax.random.normal(jax.random.PRNGKey(2), (moe.n_experts, cfg.d_model, moe.d_expert), jnp.float32) * 0.05,
+  'wd': jax.random.normal(jax.random.PRNGKey(3), (moe.n_experts, moe.d_expert, cfg.d_model), jnp.float32) * 0.05,
+}
+if moe.n_shared_experts:
+    Fs = moe.d_expert * moe.n_shared_experts
+    p.update({'shared_wg': jnp.zeros((cfg.d_model, Fs)),
+              'shared_wu': jnp.zeros((cfg.d_model, Fs)),
+              'shared_wd': jnp.zeros((Fs, cfg.d_model))})
+x = jax.random.normal(jax.random.PRNGKey(4), (2, 16, cfg.d_model), jnp.float32) * 0.5
+meta = dict(spec.meta, capacity_factor=8.0)
+
+y_dense, aux_dense = moe_forward(p, x, meta)            # no mesh -> dense
+mesh = M.make_smoke_mesh(2, 2)
+with mesh_context(mesh):
+    y_ep, aux_ep = jax.jit(lambda p, x: moe_forward(p, x, meta))(p, x)
+err = float(jnp.max(jnp.abs(y_dense - y_ep)))
+assert err < 2e-3, err
+assert abs(float(aux_dense) - float(aux_ep)) < 1e-3
+print('MOE_EP_OK', err)
+"""
+    out = run_with_devices(code, n_devices=4)
+    assert "MOE_EP_OK" in out
+
+
+def test_mini_dryrun_machinery():
+    """lower+compile+memory/cost/collective extraction on a 2x2 mesh —
+    the exact deliverable-(e) code path, reduced."""
+    code = """
+import jax, jax.numpy as jnp
+from repro.configs import ShapeConfig, get_config
+from repro.core import xla_metrics as XM
+from repro.core.spec import FULL_TRAIN
+from repro.launch import mesh as M
+from repro.mesh_ctx import mesh_context
+from repro.models import build_model, param as PM
+from repro.train import OptimizerConfig, TrainState, make_train_step
+from repro.train.optimizer import opt_state_specs
+
+cfg = get_config('llama3.2-3b').reduced()
+model = build_model(cfg)
+mesh = M.make_smoke_mesh(2, 2)
+shape = ShapeConfig('t', 64, 4, 'train')
+with mesh_context(mesh, M.arch_rules(cfg)):
+    batch = model.batch_spec(shape)
+    bsh = M.batch_shardings(mesh, batch)
+    params = model.param_specs()
+    mask = PM.trainable_mask(model.spec, FULL_TRAIN)
+    tr, _ = PM.partition_params(params, mask)
+    opt = opt_state_specs(tr, OptimizerConfig())
+    state = TrainState(params=params, opt=opt,
+                       step=jax.ShapeDtypeStruct((), jnp.int32))
+    step = make_train_step(model, FULL_TRAIN, OptimizerConfig())
+    lowered = jax.jit(step, in_shardings=(None, bsh)).lower(state, batch)
+    compiled = lowered.compile()
+mem = XM.memory_stats(compiled)
+cost = XM.cost_stats(compiled)
+coll = XM.collective_stats(compiled.as_text(), 4)
+assert mem.total_bytes > 0 and cost.flops > 0
+assert sum(coll.counts.values()) > 0, coll.counts
+print('DRYRUN_OK', mem.total_bytes, cost.flops, coll.counts)
+"""
+    out = run_with_devices(code, n_devices=4)
+    assert "DRYRUN_OK" in out
+
+
+def test_int8_grad_compression_trains():
+    from repro.core.spec import FULL_TRAIN
+    from repro.models import param as PM
+    from repro.train import OptimizerConfig, TrainState, make_train_step
+    from repro.train.optimizer import init_opt_state
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mask = PM.trainable_mask(model.spec, FULL_TRAIN)
+    tr, _ = PM.partition_params(params, mask)
+    state = TrainState(params=params,
+                       opt=init_opt_state(tr, OptimizerConfig()),
+                       step=jnp.int32(0))
+    batch = tiny_batch(model, ShapeConfig("t", 32, 2, "train"))
+    step = jax.jit(make_train_step(model, FULL_TRAIN, OptimizerConfig(),
+                                   compress_grads=True))
+    state2, metrics = step(state, batch)
+    assert jnp.isfinite(metrics["loss"])

@@ -1,0 +1,78 @@
+"""Loop-aware HLO accounting: exactness on known programs.
+
+XLA's cost_analysis counts while-loop bodies once; the roofline relies on
+our trip-count-aware walker, so its numbers must be provably right."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.xla_metrics import (collective_stats, loop_aware_stats,
+                                    shape_bytes)
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_flat_scan_flops_exact():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    x = jnp.zeros((128, 256), jnp.float32)
+    w = jnp.zeros((256, 256), jnp.float32)
+    s = loop_aware_stats(_compile(f, x, w).as_text(), 1)
+    assert s.flops == 10 * 2 * 128 * 256 * 256
+
+
+def test_nested_scan_flops_exact():
+    def g(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=5)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+
+    x = jnp.zeros((64, 128), jnp.float32)
+    w = jnp.zeros((128, 128), jnp.float32)
+    s = loop_aware_stats(_compile(g, x, w).as_text(), 1)
+    assert s.flops == 4 * 5 * 2 * 64 * 128 * 128
+
+
+def test_unlooped_dot_counted_once():
+    def f(x, w):
+        return x @ w
+
+    x = jnp.zeros((32, 64), jnp.float32)
+    w = jnp.zeros((64, 16), jnp.float32)
+    s = loop_aware_stats(_compile(f, x, w).as_text(), 1)
+    assert s.flops == 2 * 32 * 64 * 16
+
+
+def test_bytes_nonzero_and_scale_with_trip_count():
+    def make(n):
+        def f(x, w):
+            def body(c, _):
+                return jnp.tanh(c @ w), None
+            y, _ = jax.lax.scan(body, x, None, length=n)
+            return y
+        return f
+
+    x = jnp.zeros((64, 64), jnp.float32)
+    w = jnp.zeros((64, 64), jnp.float32)
+    s2 = loop_aware_stats(_compile(make(2), x, w).as_text(), 1)
+    s8 = loop_aware_stats(_compile(make(8), x, w).as_text(), 1)
+    assert s8.flops == 4 * s2.flops
+    assert s8.bytes_accessed > 2 * s2.bytes_accessed
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[2,3]") == 24
+    assert shape_bytes("bf16[10]") == 20
+    assert shape_bytes("(f32[2], s32[4])") == 24
+    assert shape_bytes("pred[]") == 1
