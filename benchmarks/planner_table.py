@@ -1,26 +1,34 @@
-"""OoM-guard fit table: TPU-native predicted peak vs 16 GiB v5e HBM for
+"""OoM-guard fit table: TPU-native predicted peak vs per-chip HBM for
 every (arch x shape) on the production 16x16 mesh, with the planner's
 rescue (grad accumulation) where the baseline would OoM.  This is the
-paper's framework doing its actual job — preventing OoM before launch."""
+paper's framework doing its actual job — preventing OoM before launch.
+
+All cells share one memoized SweepEngine (core/sweep.py), so the table is
+a few hundred cache-assembled evaluations rather than fresh builds."""
 
 from __future__ import annotations
 
 from benchmarks.common import GiB
 from repro.configs import cells
-from repro.core import planner
+from repro.core import planner, sweep as SW
 
 
-def run(verbose: bool = True):
+def run(verbose: bool = True, chip: str = "v5e"):
     mesh_shape = {"data": 16, "model": 16}
+    budget = int(planner.chip_hbm(chip) * planner.HEADROOM)
+    engine = SW.SweepEngine()
     rows = []
     for arch, shape in cells():
-        base = planner.check(arch, shape, mesh_shape, backend="tpu")
+        base = engine.report(arch, shape, mesh_shape, backend="tpu",
+                             budget_bytes=budget)
         planned = base if base.fits else planner.plan(
-            arch, shape, mesh_shape, backend="tpu")
+            arch, shape, mesh_shape, backend="tpu", chip=chip,
+            engine=engine)
         rows.append((base, planned))
     if verbose:
-        print("\n=== OoM guard (TPU-native prediction vs 16 GiB v5e, "
-              "16x16 mesh) ===")
+        hbm_gib = planner.chip_hbm(chip) / GiB
+        print(f"\n=== OoM guard (TPU-native prediction vs {hbm_gib:.0f} "
+              f"GiB {chip}, 16x16 mesh) ===")
         print(f"{'arch':<24s}{'shape':<13s}{'peak GiB':>9s}{'fits':>6s}"
               f"{'planned':>22s}")
         for base, planned in rows:

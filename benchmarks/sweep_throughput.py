@@ -1,0 +1,72 @@
+"""Sweep-engine throughput: a 1,000+-cell capacity grid must clear in
+well under a second on CPU (ISSUE 1 acceptance), and every fit/OOM verdict
+must match a cell-by-cell ``planner.check`` exactly.
+
+    PYTHONPATH=src python benchmarks/sweep_throughput.py [--verify]
+
+The grid is the paper's model (llava15-7b) over every 2-axis mesh
+factorization of a 256-chip pod x grad-accum x remat x global batch.
+``--verify`` additionally re-evaluates every cell through the slow
+un-memoized path (minutes, not timed) to prove byte-identical verdicts;
+the nightly tier-1 suite runs the same comparison on a smaller grid
+(tests/test_sweep.py).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.configs import ShapeConfig
+from repro.core import planner, sweep as SW
+
+
+def build_grid() -> SW.SweepGrid:
+    return SW.SweepGrid(
+        arch="llava15-7b",
+        chips=256,                              # 9 (data, model) splits
+        remats=("none", "block", "dots"),
+        grad_accums=(1, 2, 4, 8),
+        global_batches=(8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096),
+        seq_lens=(2048,),
+        chip="v5e",
+        backend="tpu")
+
+
+def run(verbose: bool = True, verify: bool = False):
+    grid = build_grid()
+    res = SW.sweep(grid)
+    n = len(res)
+    assert n >= 1000, f"grid only produced {n} cells"
+    if verbose:
+        print(f"sweep_throughput,cells,{n}")
+        print(f"sweep_throughput,elapsed_s,{res.elapsed_s:.3f}")
+        print(f"sweep_throughput,cells_per_sec,{res.cells_per_sec:.0f}")
+        print(f"sweep_throughput,under_1s,{res.elapsed_s < 1.0}")
+        print(f"sweep_throughput,cells_fit,{len(res.fitting())}")
+        for chips, batch in res.frontier():
+            print(f"sweep_throughput,frontier,{chips},{batch}")
+    if verify:
+        t0 = time.perf_counter()
+        mismatches = 0
+        for r in res:
+            shape = ShapeConfig("cell", r.seq_len, r.global_batch, r.kind)
+            ref = planner.check(r.arch, shape, r.mesh_shape,
+                                backend=r.backend, grad_accum=r.grad_accum,
+                                remat=r.remat, chip=r.chip)
+            if ref.peak_bytes != r.peak_bytes or ref.fits != r.fits:
+                mismatches += 1
+                if verbose:
+                    print(f"MISMATCH: {r} vs {ref}")
+        if verbose:
+            print(f"sweep_throughput,verify_cells,{n}")
+            print(f"sweep_throughput,verify_mismatches,{mismatches}")
+            print(f"sweep_throughput,verify_s,"
+                  f"{time.perf_counter() - t0:.1f}")
+        assert mismatches == 0, f"{mismatches} cells diverged from check()"
+    return res
+
+
+if __name__ == "__main__":
+    res = run(verify="--verify" in sys.argv)
+    sys.exit(0 if res.elapsed_s < 1.0 else 1)

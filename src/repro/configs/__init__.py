@@ -204,12 +204,31 @@ _MODULES = {
     "zamba2-2.7b": "zamba2_2_7b",
     "seamless-m4t-large-v2": "seamless_m4t_large_v2",
     "llava15-7b": "llava15_7b",
+    "llama3.1-8b": "llama3_1_8b",
 }
+
+# runtime-registered configs (register_config); checked before _MODULES
+_RUNTIME: dict[str, ArchConfig] = {}
+
+
+def register_config(cfg: ArchConfig, name: Optional[str] = None) -> None:
+    """Register an architecture at runtime so ``get_config``/the sweep
+    engine can plan for it without a module under repro/configs/.  See
+    docs/configs.md for the file-based registration path."""
+    _RUNTIME[name or cfg.name] = cfg
+
+
+def registered_archs() -> list[str]:
+    """All arch names ``get_config`` accepts (file-based + runtime)."""
+    return sorted(set(_MODULES) | set(_RUNTIME))
 
 
 def get_config(name: str) -> ArchConfig:
+    if name in _RUNTIME:
+        return _RUNTIME[name]
     if name not in _MODULES:
-        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+        raise KeyError(
+            f"unknown arch {name!r}; known: {registered_archs()}")
     mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
     return mod.CONFIG
 

@@ -1,0 +1,53 @@
+"""Print the registered-architecture table (markdown).
+
+    PYTHONPATH=src python -m repro.configs
+
+docs/configs.md embeds this output; re-run after registering a new arch.
+"""
+
+from __future__ import annotations
+
+from repro.configs import get_config, registered_archs
+
+
+def _attention_kind(cfg) -> str:
+    if cfg.mla:
+        return "MLA"
+    if cfg.family == "ssm":
+        return "SSM (mamba2)"
+    if cfg.family == "hybrid":
+        return "SSM + shared attn"
+    base = "GQA" if cfg.n_kv_heads < cfg.n_heads else "MHA"
+    if cfg.family == "encdec":
+        return f"{base} + cross"
+    return base
+
+
+def _modality(cfg) -> str:
+    return {"vlm": "vision+text", "encdec": "audio+text"}.get(
+        cfg.family, "text")
+
+
+def _params(cfg) -> str:
+    from repro.core.parser import parse_model, total_params
+    from repro.core.spec import FULL_TRAIN
+    from repro.models import build_model
+    n = total_params(parse_model(build_model(cfg).spec, FULL_TRAIN))
+    return f"{n / 1e9:.2f}B" if n >= 1e9 else f"{n / 1e6:.0f}M"
+
+
+def table() -> str:
+    from repro.core.report import markdown_table
+    headers = ("arch", "family", "params", "modality", "attention",
+               "optimizer", "remat", "fsdp")
+    rows = []
+    for name in registered_archs():
+        cfg = get_config(name)
+        rows.append((name, cfg.family, _params(cfg), _modality(cfg),
+                     _attention_kind(cfg), cfg.optimizer, cfg.remat,
+                     "yes" if cfg.fsdp else "no"))
+    return markdown_table(headers, rows)
+
+
+if __name__ == "__main__":
+    print(table())

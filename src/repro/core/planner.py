@@ -4,7 +4,10 @@
 launch and compares it to the chip's HBM.  ``plan`` searches the cheap
 knobs (gradient accumulation, remat policy) for the first configuration
 that fits, using only Eq.1 arithmetic — microseconds per candidate, vs a
-failed cluster launch per guess without it.
+failed cluster launch per guess without it.  For searches over the FULL
+knob space (mesh factorizations x optimizer x remat x accum x batch x
+seq_len x chip), use the vectorized/memoized engine in
+:mod:`repro.core.sweep`, which ``plan`` delegates to.
 
 This is also where arctic-480b's published memory plan comes from: Adam's
 fp32 states alone (~5.2 TiB) can never fit a 256-chip v5e pod, which the
@@ -14,7 +17,7 @@ guard flags analytically; the shipped config therefore uses Adafactor +
 
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import Optional
 
 from repro.core import factors as F
@@ -22,9 +25,43 @@ from repro.core import predictor as PR
 from repro.core.spec import FULL_TRAIN, TrainPolicy
 
 GiB = 1024 ** 3
-V5E_HBM = 16 * GiB
+
+
+# ---------------------------------------------------------------------------
+# chip catalogue: per-device HBM for the accelerators the planner targets.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    hbm_bytes: int
+    vendor: str = "google"
+
+    @property
+    def hbm_gib(self) -> float:
+        return self.hbm_bytes / GiB
+
+
+CHIPS: dict[str, ChipSpec] = {
+    "v5e": ChipSpec("v5e", 16 * GiB),
+    "v5p": ChipSpec("v5p", 95 * GiB),
+    "v6e": ChipSpec("v6e", 32 * GiB),
+    "a100-40g": ChipSpec("a100-40g", 40 * GiB, vendor="nvidia"),
+    "a100-80g": ChipSpec("a100-80g", 80 * GiB, vendor="nvidia"),
+    "h100": ChipSpec("h100", 80 * GiB, vendor="nvidia"),
+    "h200": ChipSpec("h200", 141 * GiB, vendor="nvidia"),
+}
+
+V5E_HBM = CHIPS["v5e"].hbm_bytes      # backward-compat alias
 # XLA reserves working space; plan against a fraction of physical HBM.
 HEADROOM = 0.92
+
+
+def chip_hbm(chip: str) -> int:
+    if chip not in CHIPS:
+        raise KeyError(f"unknown chip {chip!r}; known: {sorted(CHIPS)}")
+    return CHIPS[chip].hbm_bytes
 
 
 @dataclass
@@ -49,57 +86,93 @@ class PlanReport:
                 + (f" — {self.note}" if self.note else ""))
 
 
-def _context(cfg, shape, mesh_shape, *, backend="tpu", grad_accum=1,
-             remat=None, optimizer=None) -> F.PredictContext:
+def make_context(cfg, mesh_shape: dict, *, kind: str, global_batch: int,
+                 seq_len: int, backend: str = "tpu", grad_accum: int = 1,
+                 remat: Optional[str] = None,
+                 optimizer: Optional[str] = None) -> F.PredictContext:
+    """The ONE place a planner/sweep cell becomes a PredictContext — the
+    sweep engine and ``check`` share it, so their predictions can never
+    diverge on context construction."""
     from repro.launch import mesh as M
     opt = optimizer or cfg.optimizer
     return F.PredictContext(
-        mesh_shape=mesh_shape, rules=M.arch_rules(cfg, shape.kind),
+        mesh_shape=mesh_shape, rules=M.arch_rules(cfg, kind),
         optimizer=opt, fsdp=cfg.fsdp, master_fp32=opt != "adafactor",
         remat=remat or cfg.remat, backend=backend,
-        global_batch=shape.global_batch, seq_len=shape.seq_len,
-        enc_seq=int(shape.seq_len * cfg.encdec.enc_seq_ratio)
+        global_batch=global_batch, seq_len=seq_len,
+        enc_seq=int(seq_len * cfg.encdec.enc_seq_ratio)
         if cfg.encdec else 0,
-        kind=shape.kind, max_len=shape.seq_len, grad_accum=grad_accum)
+        kind=kind, max_len=seq_len, grad_accum=grad_accum)
 
 
-def check(arch: str, shape_name: str, mesh_shape: dict,
-          hbm_bytes: int = V5E_HBM, policy: TrainPolicy = FULL_TRAIN,
+def _resolve_shape(shape):
+    """Accept a registered shape name or an ad-hoc ShapeConfig."""
+    from repro.configs import SHAPES, ShapeConfig
+    if isinstance(shape, ShapeConfig):
+        return shape
+    return SHAPES[shape]
+
+
+def check(arch: str, shape_name, mesh_shape: dict,
+          hbm_bytes: Optional[int] = None, policy: TrainPolicy = FULL_TRAIN,
           backend: str = "tpu", grad_accum: int = 1,
-          remat: Optional[str] = None) -> PlanReport:
-    from repro.configs import SHAPES, get_config
+          remat: Optional[str] = None, optimizer: Optional[str] = None,
+          chip: str = "v5e", headroom: float = HEADROOM) -> PlanReport:
+    """Reference single-cell evaluation: fresh build, no caches.
+
+    ``shape_name`` may be a registered shape name ("train_4k") or a
+    ShapeConfig; ``hbm_bytes`` overrides the ``chip`` lookup when given.
+    """
+    from repro.configs import get_config
     from repro.models import build_model
 
     cfg = get_config(arch)
-    shape = SHAPES[shape_name]
+    shape = _resolve_shape(shape_name)
     model = build_model(cfg)
-    ctx = _context(cfg, shape, mesh_shape, backend=backend,
-                   grad_accum=grad_accum, remat=remat)
+    ctx = make_context(cfg, mesh_shape, kind=shape.kind,
+                       global_batch=shape.global_batch,
+                       seq_len=shape.seq_len, backend=backend,
+                       grad_accum=grad_accum, remat=remat,
+                       optimizer=optimizer)
     pred = PR.predict(model, policy, ctx)
-    budget = int(hbm_bytes * HEADROOM)
-    return PlanReport(arch=arch, shape=shape_name,
+    budget = int((hbm_bytes if hbm_bytes is not None
+                  else chip_hbm(chip)) * headroom)
+    return PlanReport(arch=arch, shape=shape.name,
                       fits=pred.peak_bytes <= budget,
                       peak_bytes=pred.peak_bytes, budget_bytes=budget,
                       grad_accum=grad_accum, remat=remat or cfg.remat,
                       prediction=pred)
 
 
-def plan(arch: str, shape_name: str, mesh_shape: dict,
-         hbm_bytes: int = V5E_HBM, policy: TrainPolicy = FULL_TRAIN,
-         backend: str = "tpu") -> PlanReport:
-    """First-fit search over (remat, grad_accum); pure arithmetic."""
-    from repro.configs import SHAPES, get_config
-    shape = SHAPES[shape_name]
-    base = check(arch, shape_name, mesh_shape, hbm_bytes, policy, backend)
+def plan(arch: str, shape_name, mesh_shape: dict,
+         hbm_bytes: Optional[int] = None, policy: TrainPolicy = FULL_TRAIN,
+         backend: str = "tpu", chip: str = "v5e",
+         headroom: float = HEADROOM, engine=None) -> PlanReport:
+    """First-fit search over (remat, grad_accum); pure arithmetic.
+
+    Delegates to the memoized sweep engine so the candidate evaluations
+    share the parsed model and the batch-independent factor sums; pass
+    ``engine`` (a SweepEngine) to share those caches across calls.
+    """
+    from repro.core import sweep as SW
+    from repro.configs import get_config
+
+    shape = _resolve_shape(shape_name)
+    budget = int((hbm_bytes if hbm_bytes is not None
+                  else chip_hbm(chip)) * headroom)
+    engine = engine or SW.SweepEngine()
+    base = engine.report(arch, shape, mesh_shape, policy=policy,
+                         backend=backend, budget_bytes=budget)
     if base.fits or shape.kind != "train":
         return base
     cfg = get_config(arch)
-    for remat in (cfg.remat, "block"):
+    for remat in dict.fromkeys((cfg.remat, "block")):
         for accum in (1, 2, 4, 8, 16, 32):
             if shape.global_batch % accum:
                 continue
-            r = check(arch, shape_name, mesh_shape, hbm_bytes, policy,
-                      backend, grad_accum=accum, remat=remat)
+            r = engine.report(arch, shape, mesh_shape, policy=policy,
+                              backend=backend, budget_bytes=budget,
+                              grad_accum=accum, remat=remat)
             if r.fits:
                 r.note = f"planner: accum x{accum} fits the budget"
                 return r

@@ -194,59 +194,157 @@ def _embed_gather_bytes(rows: list[ParsedLayer],
     return total
 
 
-def predict(model, policy: TrainPolicy, ctx: F.PredictContext,
-            shape_kind: str = None) -> PredictedMemory:
-    cfg: ArchConfig = model.cfg
-    rows = parse_model(model.spec, policy)
-    kind = shape_kind or ctx.kind
-    out = PredictedMemory()
+# ---------------------------------------------------------------------------
+# Component terms.  ``predict`` is a pure composition of the three term
+# groups below; they are split out (and returned as immutable dataclasses)
+# so the capacity-planning sweep engine (core.sweep) can memoize each group
+# independently — the static terms don't change with batch/remat, the
+# activation terms don't change with optimizer — while staying byte-identical
+# to a monolithic evaluation, because this is the only implementation.
+# ---------------------------------------------------------------------------
 
-    worst_transient = 0
+
+@dataclass(frozen=True)
+class StaticTerms:
+    """Per-run-invariant factors: params, grads, optimizer states.
+
+    Depends on (rows, mesh, rules, optimizer, fsdp, master_fp32,
+    eff_grad_bytes, kind) — NOT on batch size, seq_len, or remat.
+    """
+
+    param_bytes: int
+    grad_bytes: int
+    opt_bytes: int
+    output_copy_bytes: int
+    # ((module_path, param, grad, opt, trainable), ...) in row order
+    per_module: tuple = ()
+
+
+@dataclass(frozen=True)
+class ActTermsAgg:
+    """Activation factors: saved-for-backward + worst transient working set.
+
+    Depends on (rows, mesh, rules, micro_batch, seq_len, remat, backend,
+    kind) — NOT on the optimizer.
+    """
+
+    saved_bytes: int
+    transient_bytes: int
+    # ((module_path, act_bytes), ...) in row order
+    per_module: tuple = ()
+
+
+@dataclass(frozen=True)
+class OverheadTerms:
+    """Loss head, batch inputs, serve caches, embed all-gathers."""
+
+    loss_bytes: int
+    input_bytes: int
+    cache_bytes: int
+    embed_gather_bytes: int
+
+
+def compute_static(rows: list[ParsedLayer],
+                   ctx: F.PredictContext) -> StaticTerms:
+    param = grad = opt = out_copy = 0
+    per: dict[str, list] = {}
     for r in rows:
         p = F.param_factor(r, ctx)
         g = F.grad_factor(r, ctx)
         o = F.opt_factor(r, ctx)
-        a = F.act_factor_saved(r, ctx)
         if ctx.kind == "train" and r.trainable:
-            out.output_copy_bytes += p
-        out.param_bytes += p
-        out.grad_bytes += g
-        out.opt_bytes += o
-        out.act_saved_bytes += a
-        mod = out.per_module.setdefault(
-            r.module_path, {"param": 0, "grad": 0, "opt": 0, "act": 0,
-                            "trainable": r.trainable})
-        mod["param"] += p
-        mod["grad"] += g
-        mod["opt"] += o
-        mod["act"] += a
-        if ctx.kind == "train":
-            # one block's recomputed backward (or fwd-only if frozen) is the
-            # live transient while the scan walks backward
-            block = sum(F.act_factor_transient(rr, ctx) for rr in rows
-                        if rr.module_path == r.module_path and rr.scanned) \
-                if r.scanned else F.act_factor_transient(r, ctx)
-            worst_transient = max(worst_transient, block)
+            out_copy += p
+        param += p
+        grad += g
+        opt += o
+        m = per.setdefault(r.module_path, [0, 0, 0, r.trainable])
+        m[0] += p
+        m[1] += g
+        m[2] += o
+    return StaticTerms(
+        param_bytes=param, grad_bytes=grad, opt_bytes=opt,
+        output_copy_bytes=out_copy,
+        per_module=tuple((k, v[0], v[1], v[2], v[3])
+                         for k, v in per.items()))
+
+
+def compute_acts(rows: list[ParsedLayer], ctx: F.PredictContext,
+                 kind: str) -> ActTermsAgg:
+    saved = 0
+    per: dict[str, int] = {}
+    for r in rows:
+        a = F.act_factor_saved(r, ctx)
+        saved += a
+        per[r.module_path] = per.get(r.module_path, 0) + a
 
     if ctx.kind == "train":
-        out.act_transient_bytes = worst_transient
+        # one block's recomputed backward (or fwd-only if frozen) is the
+        # live transient while the scan walks backward: scanned rows sum
+        # per module (the whole block recomputes), unscanned rows stand
+        # alone
+        worst = 0
+        block_sums: dict[str, int] = {}
+        for r in rows:
+            t = F.act_factor_transient(r, ctx)
+            if r.scanned:
+                block_sums[r.module_path] = \
+                    block_sums.get(r.module_path, 0) + t
+            else:
+                worst = max(worst, t)
+        transient = max(worst, max(block_sums.values(), default=0))
     elif kind == "decode":
-        out.act_transient_bytes = _decode_transients(rows, ctx)
+        transient = _decode_transients(rows, ctx)
     else:  # prefill: no backward — transient = one block's forward set
         per_block: dict[str, int] = {}
         for r in rows:
             if r.scanned:
                 per_block[r.module_path] = per_block.get(r.module_path, 0) \
                     + F.act_factor_transient(r, ctx)
-        out.act_transient_bytes = max(per_block.values()) if per_block else 0
+        transient = max(per_block.values()) if per_block else 0
+    return ActTermsAgg(saved_bytes=saved, transient_bytes=transient,
+                       per_module=tuple(per.items()))
 
-    out.loss_bytes = _loss_terms(cfg, ctx)
-    out.input_bytes = _input_bytes(model, kind, ctx)
-    out.cache_bytes = _cache_bytes(model, ctx, rows)
-    out.act_transient_bytes += _embed_gather_bytes(rows, ctx)
-    # optimizer-update in-flight fp32 stacks (cpu oracle; ZeRO-sharded)
-    out.act_transient_bytes += int(ctx.opt_transient_frac * out.opt_bytes)
+
+def compute_overheads(model, rows: list[ParsedLayer],
+                      ctx: F.PredictContext, kind: str) -> OverheadTerms:
+    return OverheadTerms(
+        loss_bytes=_loss_terms(model.cfg, ctx),
+        input_bytes=_input_bytes(model, kind, ctx),
+        cache_bytes=_cache_bytes(model, ctx, rows),
+        embed_gather_bytes=_embed_gather_bytes(rows, ctx))
+
+
+def assemble(static: StaticTerms, acts: ActTermsAgg, over: OverheadTerms,
+             ctx: F.PredictContext) -> PredictedMemory:
+    out = PredictedMemory(
+        param_bytes=static.param_bytes, grad_bytes=static.grad_bytes,
+        opt_bytes=static.opt_bytes,
+        act_saved_bytes=acts.saved_bytes,
+        # optimizer-update in-flight fp32 stacks (cpu oracle; ZeRO-sharded)
+        act_transient_bytes=(acts.transient_bytes
+                             + over.embed_gather_bytes
+                             + int(ctx.opt_transient_frac
+                                   * static.opt_bytes)),
+        loss_bytes=over.loss_bytes, input_bytes=over.input_bytes,
+        cache_bytes=over.cache_bytes,
+        output_copy_bytes=static.output_copy_bytes)
+    for path, p, g, o, trainable in static.per_module:
+        out.per_module[path] = {"param": p, "grad": g, "opt": o, "act": 0,
+                                "trainable": trainable}
+    for path, a in acts.per_module:
+        out.per_module[path]["act"] = a
     return out
+
+
+def predict(model, policy: TrainPolicy, ctx: F.PredictContext,
+            shape_kind: str = None,
+            rows: list[ParsedLayer] = None) -> PredictedMemory:
+    if rows is None:
+        rows = parse_model(model.spec, policy)
+    kind = shape_kind or ctx.kind
+    return assemble(compute_static(rows, ctx),
+                    compute_acts(rows, ctx, kind),
+                    compute_overheads(model, rows, ctx, kind), ctx)
 
 
 def per_device(pred: PredictedMemory) -> int:

@@ -43,6 +43,37 @@ def table(records: list[PredictionRecord], title: str = "") -> str:
     return "\n".join(lines)
 
 
+# ---------------------------------------------------------------------------
+# Generic table writers (used by core.sweep's report output).
+# ---------------------------------------------------------------------------
+
+
+def markdown_table(headers, rows, title: str = "") -> str:
+    """GitHub-flavoured markdown table from header names + row tuples."""
+    headers = [str(h) for h in headers]
+    body = [[str(c) for c in r] for r in rows]
+    widths = [max(len(h), *(len(r[i]) for r in body)) if body else len(h)
+              for i, h in enumerate(headers)]
+    def line(cells):
+        return "| " + " | ".join(c.ljust(w) for c, w in zip(cells, widths)) \
+            + " |"
+    out = []
+    if title:
+        out += [f"## {title}", ""]
+    out.append(line(headers))
+    out.append("|" + "|".join("-" * (w + 2) for w in widths) + "|")
+    out.extend(line(r) for r in body)
+    return "\n".join(out)
+
+
+def csv_table(headers, rows) -> str:
+    """CSV from header names + row tuples (no quoting — numeric/simple
+    cells only, which is all the sweep emits)."""
+    out = [",".join(str(h) for h in headers)]
+    out.extend(",".join(str(c) for c in r) for r in rows)
+    return "\n".join(out)
+
+
 def csv(records: list[PredictionRecord]) -> str:
     out = ["label,predicted_bytes,actual_bytes,ape_pct"]
     for r in records:

@@ -1,0 +1,540 @@
+"""Capacity-planning sweep engine: the full knob space, in milliseconds.
+
+The paper's estimator answers "will this config OOM?" for ONE cell;
+capacity planning (xMem-style scheduler admission, cluster sizing) needs
+that answer for THOUSANDS of candidate configurations at once: every mesh
+factorization of a chip count x optimizer x remat policy x grad-accum x
+global batch x sequence length x chip type.  ``sweep(SweepGrid(...))``
+evaluates such a grid through a memoized :class:`SweepEngine` that
+
+* parses/builds each architecture ONCE and reuses the parse table,
+* caches the batch-independent factor sums (params / grads / optimizer
+  states) per (mesh, optimizer) so they are not recomputed per batch cell,
+* caches the optimizer-independent activation sums per
+  (mesh, micro-batch, remat),
+
+and composes cells from the cached component terms through the exact same
+``core.predictor`` component functions a cell-by-cell ``planner.check``
+uses — so the sweep is byte-identical to the slow path (asserted by
+tests/test_sweep.py and benchmarks/sweep_throughput.py) while running a
+1,000-cell grid in well under a second on CPU.
+
+Results are structured :class:`SweepResult` objects wrapped in a
+:class:`SweepResults` container with Pareto-frontier queries ("max global
+batch that fits on N chips", "min chips for this shape") and markdown/CSV
+report writers built on :mod:`repro.core.report`.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.core.sweep --arch llava15_7b --chips 8 \
+        --chip v5e --batch 16,32,64,128 --accum 1,2,4 --seq-len 2048
+"""
+
+from __future__ import annotations
+
+import re
+import time
+from dataclasses import dataclass, field
+from typing import Iterator, Optional, Sequence, Union
+
+from repro.core import planner as PL
+from repro.core import predictor as PR
+from repro.core import report as RPT
+from repro.core.parser import parse_model
+from repro.core.spec import (FULL_TRAIN, LLAVA_STAGE1, LLAVA_STAGE2,
+                             TrainPolicy)
+
+GiB = 1024 ** 3
+
+POLICIES: dict[str, TrainPolicy] = {
+    "full": FULL_TRAIN,
+    "llava_stage1": LLAVA_STAGE1,
+    "llava_stage2": LLAVA_STAGE2,
+}
+
+
+def normalize_arch(name: str) -> str:
+    """Accept module-ish spellings ("llava15_7b") for registered archs."""
+    from repro.configs import registered_archs
+    known = registered_archs()
+    if name in known:
+        return name
+    canon = lambda s: re.sub(r"[^a-z0-9]", "", s.lower())
+    matches = [a for a in known if canon(a) == canon(name)]
+    if len(matches) == 1:
+        return matches[0]
+    raise KeyError(f"unknown arch {name!r}; known: {known}")
+
+
+# ---------------------------------------------------------------------------
+# grid + result data model
+# ---------------------------------------------------------------------------
+
+
+def _seq(x) -> tuple:
+    if x is None:
+        return (None,)
+    if isinstance(x, (str, int, float, dict)):
+        return (x,)
+    return tuple(x)
+
+
+@dataclass
+class SweepGrid:
+    """The knob space of one sweep.  Every list-valued field is a grid
+    axis; ``None`` entries mean "the architecture's default"."""
+
+    arch: Union[str, Sequence[str]] = "llava15-7b"
+    # mesh axes: either explicit mesh_shapes, or a chip count (chips) whose
+    # factorizations over mesh_axes are enumerated via launch.mesh
+    chips: Union[int, Sequence[int], None] = None
+    mesh_axes: tuple[str, ...] = ("data", "model")
+    mesh_shapes: Optional[Sequence[dict]] = None
+    max_axis: Optional[dict] = None        # e.g. {"model": 16} ICI cap
+    chip: Union[str, Sequence[str]] = "v5e"
+    optimizers: Sequence[Optional[str]] = (None,)
+    remats: Sequence[Optional[str]] = (None,)
+    grad_accums: Sequence[int] = (1,)
+    global_batches: Sequence[int] = (256,)
+    seq_lens: Sequence[int] = (4096,)
+    kind: str = "train"
+    policy: TrainPolicy = FULL_TRAIN
+    backend: str = "tpu"
+    headroom: float = PL.HEADROOM
+    keep_predictions: bool = False
+
+    def meshes(self) -> list[dict]:
+        from repro.launch.mesh import enumerate_meshes
+        if self.mesh_shapes is not None:
+            return [dict(m) for m in self.mesh_shapes]
+        if self.chips is None:
+            raise ValueError("SweepGrid needs `chips` or `mesh_shapes`")
+        out = []
+        for n in _seq(self.chips):
+            out.extend(enumerate_meshes(int(n), self.mesh_axes,
+                                        self.max_axis))
+        return out
+
+    def cells(self) -> Iterator["SweepCell"]:
+        """Deterministic cell enumeration (first-fit order: cheap knobs
+        vary fastest)."""
+        meshes = self.meshes()
+        for arch in _seq(self.arch):
+            arch = normalize_arch(arch)
+            for chip in _seq(self.chip):
+                for mesh in meshes:
+                    for opt in _seq(self.optimizers):
+                        for remat in _seq(self.remats):
+                            for accum in _seq(self.grad_accums):
+                                for gb in _seq(self.global_batches):
+                                    if gb % accum:
+                                        continue
+                                    for seq in _seq(self.seq_lens):
+                                        yield SweepCell(
+                                            arch=arch, chip=chip,
+                                            mesh=tuple(sorted(
+                                                mesh.items())),
+                                            optimizer=opt, remat=remat,
+                                            grad_accum=int(accum),
+                                            global_batch=int(gb),
+                                            seq_len=int(seq),
+                                            kind=self.kind,
+                                            backend=self.backend)
+
+
+@dataclass(frozen=True)
+class SweepCell:
+    """One point of the grid (hashable; mesh stored as sorted items)."""
+
+    arch: str
+    chip: str
+    mesh: tuple                    # (("data", 8), ("model", 2))
+    optimizer: Optional[str]
+    remat: Optional[str]
+    grad_accum: int
+    global_batch: int
+    seq_len: int
+    kind: str
+    backend: str
+
+    @property
+    def mesh_shape(self) -> dict:
+        return dict(self.mesh)
+
+    @property
+    def n_chips(self) -> int:
+        from repro.launch.mesh import mesh_chips
+        return mesh_chips(self.mesh_shape)
+
+
+@dataclass
+class SweepResult:
+    """Verdict for one cell: the knobs, the predicted peak, fit/OOM."""
+
+    arch: str
+    chip: str
+    mesh_shape: dict
+    n_chips: int
+    optimizer: str                 # resolved (never None)
+    remat: str                     # resolved
+    grad_accum: int
+    global_batch: int
+    seq_len: int
+    kind: str
+    backend: str
+    peak_bytes: int
+    budget_bytes: int
+    fits: bool
+    prediction: Optional[PR.PredictedMemory] = None
+
+    @property
+    def micro_batch(self) -> int:
+        return max(self.global_batch // max(self.grad_accum, 1), 1)
+
+    @property
+    def mesh_str(self) -> str:
+        return "x".join(f"{k}={v}" for k, v in sorted(
+            self.mesh_shape.items()))
+
+    def __str__(self) -> str:
+        verdict = "FITS" if self.fits else "OOM "
+        return (f"[{verdict}] {self.arch} {self.kind} on {self.n_chips}x"
+                f"{self.chip} ({self.mesh_str}): batch {self.global_batch}"
+                f" seq {self.seq_len} opt {self.optimizer} remat "
+                f"{self.remat} accum {self.grad_accum} -> peak "
+                f"{self.peak_bytes / GiB:.2f} GiB vs "
+                f"{self.budget_bytes / GiB:.2f} GiB")
+
+
+_COLUMNS = ("arch", "chip", "mesh", "optimizer", "remat", "accum",
+            "batch", "seq", "peak_gib", "budget_gib", "fits")
+
+
+def _row_of(r: SweepResult) -> tuple:
+    return (r.arch, r.chip, r.mesh_str, r.optimizer, r.remat,
+            r.grad_accum, r.global_batch, r.seq_len,
+            f"{r.peak_bytes / GiB:.3f}", f"{r.budget_bytes / GiB:.3f}",
+            "yes" if r.fits else "NO")
+
+
+@dataclass
+class SweepResults:
+    """Structured sweep output + Pareto-frontier queries."""
+
+    grid: SweepGrid
+    results: list[SweepResult] = field(default_factory=list)
+    elapsed_s: float = 0.0
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __iter__(self) -> Iterator[SweepResult]:
+        return iter(self.results)
+
+    @property
+    def cells_per_sec(self) -> float:
+        return len(self.results) / self.elapsed_s if self.elapsed_s else 0.0
+
+    def fitting(self) -> list[SweepResult]:
+        return [r for r in self.results if r.fits]
+
+    # -- Pareto queries ------------------------------------------------------
+    def max_global_batch(self, n_chips: Optional[int] = None,
+                         chip: Optional[str] = None
+                         ) -> Optional[SweepResult]:
+        """Largest global batch that fits (optionally on exactly N chips /
+        a given chip type); ties broken by smallest peak."""
+        cand = [r for r in self.fitting()
+                if (n_chips is None or r.n_chips == n_chips)
+                and (chip is None or r.chip == chip)]
+        if not cand:
+            return None
+        return max(cand, key=lambda r: (r.global_batch, -r.peak_bytes))
+
+    def min_chips(self, global_batch: Optional[int] = None,
+                  chip: Optional[str] = None) -> Optional[SweepResult]:
+        """Smallest chip count with a fitting config (optionally at a given
+        global batch / chip type); ties broken by smallest peak."""
+        cand = [r for r in self.fitting()
+                if (global_batch is None or r.global_batch == global_batch)
+                and (chip is None or r.chip == chip)]
+        if not cand:
+            return None
+        return min(cand, key=lambda r: (r.n_chips, r.peak_bytes))
+
+    def frontier(self) -> list[tuple[int, int]]:
+        """(n_chips, max fitting global batch) pairs, ascending chips."""
+        best: dict[int, int] = {}
+        for r in self.fitting():
+            best[r.n_chips] = max(best.get(r.n_chips, 0), r.global_batch)
+        return sorted(best.items())
+
+    # -- report writers ------------------------------------------------------
+    def sorted_results(self) -> list[SweepResult]:
+        return sorted(self.results,
+                      key=lambda r: (not r.fits, -r.global_batch,
+                                     r.peak_bytes))
+
+    def to_markdown(self, limit: Optional[int] = None,
+                    title: str = "") -> str:
+        rows = self.sorted_results()
+        dropped = 0
+        if limit is not None and len(rows) > limit:
+            dropped = len(rows) - limit
+            rows = rows[:limit]
+        out = RPT.markdown_table(_COLUMNS, [_row_of(r) for r in rows],
+                                 title=title)
+        if dropped:
+            out += f"\n\n_... {dropped} more cells (use to_csv() for all)_"
+        return out
+
+    def to_csv(self) -> str:
+        return RPT.csv_table(_COLUMNS,
+                             [_row_of(r) for r in self.sorted_results()])
+
+
+# ---------------------------------------------------------------------------
+# the memoized engine
+# ---------------------------------------------------------------------------
+
+
+class SweepEngine:
+    """Memoized cell evaluator.
+
+    Caches, per (arch, policy): the built model + parse table; and the
+    three predictor component groups keyed by exactly the context fields
+    each group reads (see core.predictor docstrings).  Composition goes
+    through :func:`repro.core.predictor.assemble` — the same function the
+    un-memoized path uses — so cached and fresh cells are byte-identical.
+    """
+
+    def __init__(self):
+        self._arch: dict = {}        # (arch, policy) -> (cfg, model, rows)
+        self._static: dict = {}
+        self._acts: dict = {}
+        self._over: dict = {}
+
+    # -- caches --------------------------------------------------------------
+    def _arch_state(self, arch: str, policy: TrainPolicy):
+        key = (arch, policy)
+        hit = self._arch.get(key)
+        if hit is None:
+            from repro.configs import get_config
+            from repro.models import build_model
+            cfg = get_config(arch)
+            model = build_model(cfg)
+            rows = parse_model(model.spec, policy)
+            hit = self._arch[key] = (cfg, model, rows)
+        return hit
+
+    def predict_cell(self, arch: str, policy: TrainPolicy,
+                     ctx) -> PR.PredictedMemory:
+        """Memoized twin of ``PR.predict(model, policy, ctx)``."""
+        cfg, model, rows = self._arch_state(arch, policy)
+        mkey = tuple(sorted(ctx.mesh_shape.items()))
+        base = (arch, policy, ctx.kind, mkey, ctx.backend)
+
+        skey = base + (ctx.optimizer, ctx.eff_grad_bytes)
+        static = self._static.get(skey)
+        if static is None:
+            static = self._static[skey] = PR.compute_static(rows, ctx)
+
+        akey = base + (ctx.remat, ctx.micro_batch, ctx.seq_len, ctx.enc_seq)
+        if ctx.kind != "train":
+            akey += (ctx.global_batch, ctx.max_len)
+        acts = self._acts.get(akey)
+        if acts is None:
+            acts = self._acts[akey] = PR.compute_acts(rows, ctx, ctx.kind)
+
+        okey = base + (ctx.global_batch, ctx.micro_batch, ctx.seq_len,
+                       ctx.enc_seq, ctx.max_len)
+        over = self._over.get(okey)
+        if over is None:
+            over = self._over[okey] = PR.compute_overheads(
+                model, rows, ctx, ctx.kind)
+
+        return PR.assemble(static, acts, over, ctx)
+
+    # -- cell evaluation -----------------------------------------------------
+    def evaluate(self, cell: SweepCell, policy: TrainPolicy = FULL_TRAIN,
+                 headroom: float = PL.HEADROOM,
+                 keep_prediction: bool = False) -> SweepResult:
+        cfg, _, _ = self._arch_state(cell.arch, policy)
+        ctx = PL.make_context(cfg, cell.mesh_shape, kind=cell.kind,
+                              global_batch=cell.global_batch,
+                              seq_len=cell.seq_len, backend=cell.backend,
+                              grad_accum=cell.grad_accum, remat=cell.remat,
+                              optimizer=cell.optimizer)
+        pred = self.predict_cell(cell.arch, policy, ctx)
+        budget = int(PL.chip_hbm(cell.chip) * headroom)
+        return SweepResult(
+            arch=cell.arch, chip=cell.chip, mesh_shape=cell.mesh_shape,
+            n_chips=cell.n_chips,
+            optimizer=cell.optimizer or cfg.optimizer,
+            remat=cell.remat or cfg.remat, grad_accum=cell.grad_accum,
+            global_batch=cell.global_batch, seq_len=cell.seq_len,
+            kind=cell.kind, backend=cell.backend,
+            peak_bytes=pred.peak_bytes, budget_bytes=budget,
+            fits=pred.peak_bytes <= budget,
+            prediction=pred if keep_prediction else None)
+
+    def report(self, arch: str, shape, mesh_shape: dict, *,
+               policy: TrainPolicy = FULL_TRAIN, backend: str = "tpu",
+               budget_bytes: int, grad_accum: int = 1,
+               remat: Optional[str] = None,
+               optimizer: Optional[str] = None) -> PL.PlanReport:
+        """PlanReport-shaped single-cell evaluation (planner.plan's
+        memoized backend); byte-identical to ``planner.check``."""
+        shape = PL._resolve_shape(shape)
+        cfg, _, _ = self._arch_state(arch, policy)
+        ctx = PL.make_context(cfg, mesh_shape, kind=shape.kind,
+                              global_batch=shape.global_batch,
+                              seq_len=shape.seq_len, backend=backend,
+                              grad_accum=grad_accum, remat=remat,
+                              optimizer=optimizer)
+        pred = self.predict_cell(arch, policy, ctx)
+        return PL.PlanReport(arch=arch, shape=shape.name,
+                             fits=pred.peak_bytes <= budget_bytes,
+                             peak_bytes=pred.peak_bytes,
+                             budget_bytes=budget_bytes,
+                             grad_accum=grad_accum,
+                             remat=remat or cfg.remat, prediction=pred)
+
+    def sweep(self, grid: SweepGrid) -> SweepResults:
+        t0 = time.perf_counter()
+        results = [self.evaluate(cell, grid.policy, grid.headroom,
+                                 grid.keep_predictions)
+                   for cell in grid.cells()]
+        return SweepResults(grid=grid, results=results,
+                            elapsed_s=time.perf_counter() - t0)
+
+
+def sweep(grid: SweepGrid,
+          engine: Optional[SweepEngine] = None) -> SweepResults:
+    """Run a capacity-planning sweep (fresh engine unless one is passed)."""
+    return (engine or SweepEngine()).sweep(grid)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _int_list(s: str) -> tuple[int, ...]:
+    return tuple(int(x) for x in s.split(",") if x)
+
+
+def _str_list(s: Optional[str]) -> tuple:
+    if not s:
+        return (None,)
+    return tuple(None if x in ("default", "arch") else x
+                 for x in s.split(",") if x)
+
+
+def _parse_mesh(s: str) -> dict:
+    out = {}
+    for part in s.split(","):
+        k, _, v = part.partition("=")
+        if not k.strip() or not v.isdigit():
+            raise ValueError(
+                f"bad --mesh entry {part!r}: expected axis=int "
+                f"(e.g. data=8,model=2)")
+        out[k.strip()] = int(v)
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+    p = argparse.ArgumentParser(
+        prog="python -m repro.core.sweep",
+        description="Capacity-planning sweep: mesh x optimizer x remat x "
+                    "accum x batch x seq_len grids, memoized Eq.1 "
+                    "arithmetic per cell.")
+    p.add_argument("--arch", required=True,
+                   help="architecture (e.g. llava15_7b / llava15-7b)")
+    p.add_argument("--chips", type=_int_list, default=None,
+                   help="chip count(s); all mesh factorizations are swept")
+    p.add_argument("--mesh", action="append", metavar="data=8,model=2",
+                   help="explicit mesh shape (repeatable; overrides "
+                        "--chips enumeration)")
+    p.add_argument("--mesh-axes", default="data,model",
+                   help="axes used for --chips factorization")
+    p.add_argument("--max-model", type=int, default=None,
+                   help="cap the model (TP) axis size")
+    p.add_argument("--chip", default="v5e",
+                   help=f"chip type(s), comma list of {sorted(PL.CHIPS)}")
+    p.add_argument("--optimizer", default=None,
+                   help="comma list (adamw,adafactor,adamw8bit); "
+                        "default: arch optimizer")
+    p.add_argument("--remat", default=None,
+                   help="comma list (none,block,dots); default: arch remat")
+    p.add_argument("--accum", type=_int_list, default=(1, 2, 4, 8),
+                   help="gradient-accumulation factors")
+    p.add_argument("--batch", type=_int_list, default=(256,),
+                   help="global batch sizes")
+    p.add_argument("--seq-len", type=_int_list, default=(4096,),
+                   help="sequence lengths")
+    p.add_argument("--kind", default="train",
+                   choices=("train", "prefill", "decode"))
+    p.add_argument("--policy", default="full", choices=sorted(POLICIES))
+    p.add_argument("--backend", default="tpu", choices=("tpu", "cpu"))
+    p.add_argument("--headroom", type=float, default=PL.HEADROOM)
+    p.add_argument("--top", type=int, default=20,
+                   help="rows to print (full grid goes to --csv/--md)")
+    p.add_argument("--csv", metavar="PATH", help="write full CSV report")
+    p.add_argument("--md", metavar="PATH", help="write markdown report")
+    args = p.parse_args(argv)
+
+    if args.chips is None and not args.mesh:
+        p.error("need --chips N or at least one --mesh")
+
+    try:
+        arch = normalize_arch(args.arch)
+        for c in args.chip.split(","):
+            PL.chip_hbm(c)
+        meshes = [_parse_mesh(m) for m in args.mesh] if args.mesh else None
+    except (KeyError, ValueError) as e:
+        p.error(str(e))
+    grid = SweepGrid(
+        arch=arch,
+        chips=args.chips,
+        mesh_axes=tuple(args.mesh_axes.split(",")),
+        mesh_shapes=meshes,
+        max_axis={"model": args.max_model} if args.max_model else None,
+        chip=tuple(args.chip.split(",")),
+        optimizers=_str_list(args.optimizer),
+        remats=_str_list(args.remat),
+        grad_accums=args.accum, global_batches=args.batch,
+        seq_lens=args.seq_len, kind=args.kind,
+        policy=POLICIES[args.policy], backend=args.backend,
+        headroom=args.headroom)
+
+    res = sweep(grid)
+    n_fit = len(res.fitting())
+    title = (f"capacity sweep: {arch} {args.kind} on {args.chip} "
+             f"({args.backend} prediction)")
+    print(f"# {title}")
+    print(f"{len(res)} cells in {res.elapsed_s:.3f}s "
+          f"({res.cells_per_sec:,.0f} cells/s); {n_fit} fit")
+    if res.frontier():
+        print("\nPareto frontier (chips -> max fitting global batch):")
+        for chips, batch in res.frontier():
+            print(f"  {chips:>6d} chips : batch {batch}")
+    best = res.max_global_batch()
+    if best is not None:
+        print(f"\nbest: {best}")
+    print()
+    print(res.to_markdown(limit=args.top))
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write(res.to_csv() + "\n")
+        print(f"\nwrote {args.csv}")
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(res.to_markdown(title=title) + "\n")
+        print(f"wrote {args.md}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -32,6 +32,70 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
         shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
 
 
+def divisors(n: int) -> list[int]:
+    """Positive divisors of ``n``, ascending."""
+    small, large = [], []
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            small.append(d)
+            if d != n // d:
+                large.append(n // d)
+        d += 1
+    return small + large[::-1]
+
+
+def factorizations(n: int, k: int) -> list[tuple[int, ...]]:
+    """All ordered ``k``-tuples of positive ints whose product is ``n``.
+
+    Ordered means (2, 8) and (8, 2) are distinct — mesh axes are named, so
+    data=2/model=8 and data=8/model=2 are different parallelism plans.
+    """
+    if n < 1 or k < 1:
+        raise ValueError(f"need n >= 1, k >= 1; got n={n}, k={k}")
+    if k == 1:
+        return [(n,)]
+    out = []
+    for d in divisors(n):
+        for rest in factorizations(n // d, k - 1):
+            out.append((d,) + rest)
+    return out
+
+
+def enumerate_meshes(n_chips: int,
+                     axes: tuple[str, ...] = ("data", "model"),
+                     max_axis: Optional[dict] = None) -> list[dict]:
+    """Every mesh shape that lays ``n_chips`` out over the named ``axes``.
+
+    The capacity-planning sweep feeds each of these to the memory predictor
+    to find which parallelism plans fit.  ``max_axis`` caps individual axes
+    (e.g. ``{"model": 16}`` — an ICI-connected TP axis rarely exceeds a
+    pod's torus dimension).  Results are deduplicated and sorted by
+    descending data-parallel degree (the conventional preference: DP is the
+    cheapest axis, collectives-wise).
+    """
+    seen: set[tuple[int, ...]] = set()
+    out: list[dict] = []
+    for f in factorizations(n_chips, len(axes)):
+        if f in seen:
+            continue
+        seen.add(f)
+        if max_axis and any(f[i] > max_axis.get(a, f[i])
+                            for i, a in enumerate(axes)):
+            continue
+        out.append(dict(zip(axes, f)))
+    out.sort(key=lambda m: tuple(-m[a] for a in axes))
+    return out
+
+
+def mesh_chips(mesh_shape: dict) -> int:
+    """Total chip count of a mesh-shape dict."""
+    total = 1
+    for v in mesh_shape.values():
+        total *= v
+    return total
+
+
 def make_smoke_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Tiny mesh for CPU tests (exercises the same code paths)."""
     return jax.make_mesh(

@@ -10,6 +10,11 @@ import math
 import jax
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis; `pip install hypothesis` "
+           "(see requirements.txt) to run them")
 from hypothesis import given, settings, strategies as st
 
 from repro.mesh_ctx import (DEFAULT_RULES, assign_axes, resolve_pspec,

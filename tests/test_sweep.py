@@ -1,0 +1,230 @@
+"""Capacity-planning sweep engine (core/sweep.py + launch/mesh.py).
+
+Covers the ISSUE-1 test checklist: exhaustive + deduplicated mesh
+enumeration, byte-identical memoized vs cell-by-cell evaluation, monotone
+Pareto queries, and a CLI smoke run.
+"""
+
+import math
+
+import pytest
+
+from repro.configs import ShapeConfig
+from repro.core import planner, sweep as SW
+from repro.launch.mesh import (divisors, enumerate_meshes, factorizations,
+                               mesh_chips)
+
+# ---------------------------------------------------------------------------
+# mesh factorization enumeration
+# ---------------------------------------------------------------------------
+
+
+def test_divisors():
+    assert divisors(1) == [1]
+    assert divisors(16) == [1, 2, 4, 8, 16]
+    assert divisors(12) == [1, 2, 3, 4, 6, 12]
+
+
+@pytest.mark.parametrize("n,k", [(16, 2), (256, 2), (8, 3), (12, 3)])
+def test_factorizations_exhaustive_and_deduplicated(n, k):
+    facts = factorizations(n, k)
+    # every tuple multiplies back to n
+    assert all(math.prod(f) == n for f in facts)
+    # deduplicated
+    assert len(facts) == len(set(facts))
+    # exhaustive: brute-force count over all k-tuples of divisors
+    divs = divisors(n)
+    brute = {t for t in _tuples(divs, k) if math.prod(t) == n}
+    assert set(facts) == brute
+
+
+def _tuples(vals, k):
+    if k == 0:
+        yield ()
+        return
+    for v in vals:
+        for rest in _tuples(vals, k - 1):
+            yield (v,) + rest
+
+
+def test_enumerate_meshes_named_axes():
+    meshes = enumerate_meshes(16, ("data", "model"))
+    assert len(meshes) == 5          # 1x16, 2x8, 4x4, 8x2, 16x1
+    assert all(mesh_chips(m) == 16 for m in meshes)
+    # named axes: data=8/model=2 and data=2/model=8 are distinct plans
+    assert {"data": 8, "model": 2} in meshes
+    assert {"data": 2, "model": 8} in meshes
+    # deduplicated
+    keyed = [tuple(sorted(m.items())) for m in meshes]
+    assert len(keyed) == len(set(keyed))
+
+
+def test_enumerate_meshes_max_axis_cap():
+    meshes = enumerate_meshes(256, ("data", "model"),
+                              max_axis={"model": 16})
+    assert all(m["model"] <= 16 for m in meshes)
+    assert {"data": 16, "model": 16} in meshes
+
+
+def test_enumerate_meshes_three_axes():
+    meshes = enumerate_meshes(8, ("pod", "data", "model"))
+    assert len(meshes) == 10         # ordered exponent splits of 2^3
+    assert all(mesh_chips(m) == 8 for m in meshes)
+
+
+# ---------------------------------------------------------------------------
+# memoized sweep == cell-by-cell check, byte for byte
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_matches_cell_by_cell_check():
+    grid = SW.SweepGrid(
+        arch="smollm-360m", chips=8,
+        optimizers=(None, "adafactor"),
+        remats=(None, "none"),
+        grad_accums=(1, 2),
+        global_batches=(16, 32),
+        seq_lens=(512,),
+        backend="tpu", keep_predictions=True)
+    res = SW.sweep(grid)
+    assert len(res) > 50
+    for r in res:
+        shape = ShapeConfig("cell", r.seq_len, r.global_batch, r.kind)
+        ref = planner.check(r.arch, shape, r.mesh_shape, backend=r.backend,
+                            grad_accum=r.grad_accum, remat=r.remat,
+                            optimizer=r.optimizer, chip=r.chip)
+        assert ref.peak_bytes == r.peak_bytes
+        assert ref.fits == r.fits
+        # the full prediction (all Eq.1 terms + per-module breakdown)
+        # must be identical, not just the total
+        assert ref.prediction == r.prediction
+
+
+def test_sweep_cache_hits_are_identical_to_cold():
+    cell = next(SW.SweepGrid(arch="smollm-360m", chips=4,
+                             global_batches=(16,), seq_lens=(256,)).cells())
+    engine = SW.SweepEngine()
+    cold = engine.evaluate(cell, keep_prediction=True)
+    warm = engine.evaluate(cell, keep_prediction=True)
+    assert cold == warm
+
+
+def test_report_matches_check():
+    mesh = {"data": 4, "model": 2}
+    budget = int(planner.chip_hbm("v5e") * planner.HEADROOM)
+    eng = SW.SweepEngine()
+    a = eng.report("smollm-360m", "train_4k", mesh, backend="tpu",
+                   budget_bytes=budget, grad_accum=2)
+    b = planner.check("smollm-360m", "train_4k", mesh, backend="tpu",
+                      grad_accum=2)
+    assert (a.peak_bytes, a.fits, a.budget_bytes) == \
+        (b.peak_bytes, b.fits, b.budget_bytes)
+    assert a.prediction == b.prediction
+
+
+# ---------------------------------------------------------------------------
+# Pareto queries
+# ---------------------------------------------------------------------------
+
+
+def _grid_for(chips):
+    # batches are multiples of every chip count so DP divisibility never
+    # degrades to replication at higher chip counts
+    return SW.SweepGrid(arch="smollm-360m", chips=chips,
+                        grad_accums=(1, 2, 4),
+                        global_batches=(32, 64, 128, 256, 512),
+                        seq_lens=(1024,), backend="tpu")
+
+
+def test_pareto_max_batch_monotone_in_chips():
+    engine = SW.SweepEngine()
+    prev = 0
+    for chips in (4, 8, 16, 32):
+        res = engine.sweep(_grid_for(chips))
+        best = res.max_global_batch()
+        batch = best.global_batch if best else 0
+        assert batch >= prev, \
+            f"{chips} chips fits batch {batch} < {prev} on fewer chips"
+        prev = batch
+
+
+def test_pareto_queries_consistent():
+    res = SW.sweep(_grid_for((8, 16)))
+    fit = res.fitting()
+    if not fit:
+        pytest.skip("nothing fits this grid")
+    best = res.max_global_batch()
+    assert best.fits
+    assert best.global_batch == max(r.global_batch for r in fit)
+    nb = res.max_global_batch(n_chips=8)
+    if nb is not None:
+        assert nb.n_chips == 8
+    least = res.min_chips()
+    assert least.n_chips == min(r.n_chips for r in fit)
+    frontier = res.frontier()
+    assert frontier == sorted(frontier)
+    for chips, batch in frontier:
+        assert res.max_global_batch(n_chips=chips).global_batch == batch
+
+
+def test_min_chips_at_fixed_batch():
+    res = SW.sweep(_grid_for((8, 16)))
+    r = res.min_chips(global_batch=64)
+    if r is not None:
+        assert r.global_batch == 64
+        assert r.fits
+
+
+# ---------------------------------------------------------------------------
+# chip table + report writers + CLI
+# ---------------------------------------------------------------------------
+
+
+def test_chip_table():
+    assert planner.chip_hbm("v5e") == 16 * 1024 ** 3
+    assert planner.V5E_HBM == planner.chip_hbm("v5e")
+    assert planner.chip_hbm("h100") == 80 * 1024 ** 3
+    with pytest.raises(KeyError):
+        planner.chip_hbm("abacus")
+
+
+def test_bigger_chip_fits_more():
+    mesh = {"data": 2, "model": 2}
+    shape = ShapeConfig("cell", 1024, 16, "train")
+    v5e = planner.check("llama3.2-3b", shape, mesh, chip="v5e")
+    h200 = planner.check("llama3.2-3b", shape, mesh, chip="h200")
+    assert h200.budget_bytes > v5e.budget_bytes
+    assert h200.peak_bytes == v5e.peak_bytes      # prediction is chip-free
+
+
+def test_report_writers():
+    res = SW.sweep(SW.SweepGrid(arch="smollm-360m", chips=4,
+                                global_batches=(16,), seq_lens=(256,)))
+    md = res.to_markdown(limit=3)
+    assert "| arch" in md and "smollm-360m" in md
+    csv = res.to_csv()
+    assert csv.splitlines()[0].startswith("arch,chip,mesh")
+    assert len(csv.splitlines()) == len(res) + 1
+
+
+def test_normalize_arch():
+    assert SW.normalize_arch("llava15_7b") == "llava15-7b"
+    assert SW.normalize_arch("llama3_2_3b") == "llama3.2-3b"
+    assert SW.normalize_arch("smollm-360m") == "smollm-360m"
+    with pytest.raises(KeyError):
+        SW.normalize_arch("gpt17")
+
+
+def test_cli_smoke(capsys):
+    rc = SW.main(["--arch", "smollm_360m", "--chips", "4",
+                  "--batch", "16,32", "--accum", "1,2",
+                  "--seq-len", "512", "--top", "5"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "cells in" in out
+    assert "smollm-360m" in out
+
+
+def test_cli_requires_mesh_or_chips():
+    with pytest.raises(SystemExit):
+        SW.main(["--arch", "smollm-360m"])
