@@ -1,0 +1,115 @@
+"""Calibration accuracy benchmark: fit + evaluate on the bundled fixture
+set, write BENCH_calibration.json (+ markdown MAPE report).
+
+    PYTHONPATH=src python benchmarks/calibration_mape.py [--out DIR]
+        [--regen-fixture]
+
+The fixture (benchmarks/fixtures/calibration_measurements.json) is the
+deterministic synthetic measurement set — the same generator CI uses, so
+the bench trajectory tracks prediction ACCURACY (per-arch-family MAPE,
+calibrated vs raw), not just throughput.  Exit code is non-zero unless
+calibrated predictions achieve strictly lower MAPE than uncalibrated ones
+for EVERY arch family in the fixture (the ISSUE-2 acceptance gate).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "calibration_measurements.json")
+
+
+def regen_fixture(path: str = FIXTURE) -> None:
+    from repro.calibrate import generate
+    store = generate()
+    store.save(path)
+    print(f"wrote {path} ({len(store)} measurements)")
+
+
+def run(verbose: bool = True, out_dir: str = None) -> dict:
+    import time
+
+    from repro.calibrate import MeasurementStore, evaluate, fit_profile
+    from repro.core import sweep as SW
+
+    out_dir = out_dir or str(_repo_root())
+    engine = SW.SweepEngine()
+    store = MeasurementStore.load(FIXTURE)
+
+    t0 = time.perf_counter()
+    profile = fit_profile(store, engine=engine,
+                          source={"fixture": os.path.basename(FIXTURE)})
+    fit_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    by_family = evaluate(store, profile, by="family", engine=engine)
+    by_arch = evaluate(store, profile, by="arch", engine=engine)
+    eval_s = time.perf_counter() - t0
+
+    payload = {
+        "benchmark": "calibration_mape",
+        "fixture": os.path.basename(FIXTURE),
+        "n_measurements": len(store),
+        "profile": profile.to_dict(),
+        "profile_hash": profile.profile_hash,
+        "fit_seconds": round(fit_s, 4),
+        "eval_seconds": round(eval_s, 4),
+        "by_family": by_family.to_json_dict(),
+        "by_arch": by_arch.to_json_dict(),
+        "all_families_improved": by_family.all_groups_improved,
+    }
+    json_path = os.path.join(out_dir, "BENCH_calibration.json")
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    md_path = os.path.join(out_dir, "BENCH_calibration.md")
+    with open(md_path, "w") as f:
+        f.write(by_family.to_markdown(
+            title="calibration accuracy by family (bundled synthetic "
+                  "fixtures)") + "\n\n")
+        f.write(by_arch.to_markdown(
+            title="calibration accuracy by arch") + "\n\n")
+        f.write(f"profile: `{profile.summary()}`\n")
+
+    if verbose:
+        print(f"calibration_mape,n_measurements,{len(store)}")
+        print(f"calibration_mape,fit_s,{fit_s:.3f}")
+        print(f"calibration_mape,mape_raw_pct,{by_family.mape_raw:.2f}")
+        print(f"calibration_mape,mape_calibrated_pct,"
+              f"{by_family.mape_calibrated:.2f}")
+        for row in by_family.rows:
+            print(f"calibration_mape,{row.group}_raw_pct,"
+                  f"{row.mape_raw:.2f}")
+            print(f"calibration_mape,{row.group}_calibrated_pct,"
+                  f"{row.mape_calibrated:.2f}")
+        print(f"calibration_mape,all_families_improved,"
+              f"{by_family.all_groups_improved}")
+        print(f"wrote {json_path}")
+        print(f"wrote {md_path}")
+    return payload
+
+
+def _repo_root():
+    from repro.calibrate.paths import repo_root
+    return repo_root()
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="output dir for BENCH_calibration.{json,md} "
+                         "(default: repo root)")
+    ap.add_argument("--regen-fixture", action="store_true",
+                    help="regenerate the bundled fixture set and exit")
+    args = ap.parse_args()
+    if args.regen_fixture:
+        regen_fixture()
+        sys.exit(0)
+    result = run(out_dir=args.out)
+    sys.exit(0 if result["all_families_improved"] else 1)

@@ -7,7 +7,18 @@ import glob
 import os
 
 GiB = 1024 ** 3
-EXP_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def _exp_dir() -> str:
+    # shared repo-root resolution (same dir dryrun writes + calibrate reads)
+    try:
+        from repro.calibrate.paths import experiments_dir
+        return str(experiments_dir())
+    except ImportError:      # benchmarks invoked without PYTHONPATH=src
+        return os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+EXP_DIR = _exp_dir()
 DRYRUN_DIR = os.path.join(EXP_DIR, "dryrun")
 
 

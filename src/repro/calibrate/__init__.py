@@ -1,0 +1,63 @@
+"""Measurement-driven calibration of the analytic memory predictor.
+
+Closes the loop the paper's evaluation opens: dry-run/real measurements
+flow into a :class:`MeasurementStore`, the prediction-vs-measured residual
+is decomposed per Eq.1 component group, a :class:`CalibrationProfile`
+(per-term multiplicative coefficients + per-chip constant overhead) is
+fitted by non-negative least squares, and the profile threads through
+``predictor.assemble`` / ``planner.check`` / the sweep engine so every
+verdict can be measurement-corrected.
+
+    python -m repro.calibrate fit --synthetic --out profile.json
+    python -m repro.calibrate report --profile profile.json --synthetic
+    python -m repro.calibrate apply --profile profile.json \
+        --arch llava15-7b --mesh data=8,model=2 --chip v5e
+
+See docs/calibration.md for the walkthrough and the JSON schemas.
+
+Exports resolve lazily (PEP 562) so light consumers — launch/dryrun.py
+and benchmarks/common.py import only ``repro.calibrate.paths`` for the
+shared artifact-directory resolution — never pay for (or depend on) the
+fit/report stack's imports.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "fit_profile": "repro.calibrate.fit",
+    "fit_rows": "repro.calibrate.fit",
+    "nnls": "repro.calibrate.fit",
+    "Measurement": "repro.calibrate.measurements",
+    "MeasurementStore": "repro.calibrate.measurements",
+    "dryrun_dir": "repro.calibrate.paths",
+    "profiles_dir": "repro.calibrate.paths",
+    "repo_root": "repro.calibrate.paths",
+    "TERMS": "repro.calibrate.profile",
+    "CalibrationProfile": "repro.calibrate.profile",
+    "AccuracyReport": "repro.calibrate.report",
+    "evaluate": "repro.calibrate.report",
+    "TermRow": "repro.calibrate.residual",
+    "decompose": "repro.calibrate.residual",
+    "predict_measurement": "repro.calibrate.residual",
+    "SYNTHETIC_ARCHS": "repro.calibrate.synthetic",
+    "TRUE_PROFILE": "repro.calibrate.synthetic",
+    "generate": "repro.calibrate.synthetic",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(
+            f"module 'repro.calibrate' has no attribute {name!r}")
+    value = getattr(importlib.import_module(mod), name)
+    globals()[name] = value        # cache for subsequent lookups
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

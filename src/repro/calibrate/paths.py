@@ -1,0 +1,33 @@
+"""Repo-anchored artifact paths shared by the measurement pipeline.
+
+``launch/dryrun.py`` (the artifact writer) and the calibration
+``MeasurementStore`` (the artifact reader) must agree on where dry-run
+records live; both resolve through here instead of fragile
+``os.path.join(.., "..", "..")`` chains.  Import-light on purpose: no
+jax, no repro modules.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+
+def repo_root() -> Path:
+    """The repository root (parent of ``src/``), resolved from this file:
+    src/repro/calibrate/paths.py -> three levels up."""
+    return Path(__file__).resolve().parents[3]
+
+
+def experiments_dir() -> Path:
+    return repo_root() / "experiments"
+
+
+def dryrun_dir() -> Path:
+    """Where ``python -m repro.launch.dryrun`` writes its artifacts and
+    where ``MeasurementStore.ingest_dryrun_dir`` reads them by default."""
+    return experiments_dir() / "dryrun"
+
+
+def profiles_dir() -> Path:
+    """Default home of fitted CalibrationProfile JSON files."""
+    return experiments_dir() / "profiles"

@@ -1,0 +1,132 @@
+"""Paper-style accuracy evaluation: per-group MAPE, calibrated vs raw.
+
+``evaluate(store, profile)`` predicts every measured cell twice — once
+uncalibrated, once through the profile — and aggregates absolute
+percentage errors against the measured peaks into the paper's evaluation
+table, grouped by architecture or by family.  Output goes through the
+:mod:`repro.core.report` writers (markdown / CSV / the MAPE arithmetic),
+so this table and the paper-repro benchmarks render identically.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.calibrate.measurements import MeasurementStore
+from repro.calibrate.profile import CalibrationProfile
+from repro.calibrate.residual import predict_measurement
+from repro.core import report as RPT
+
+GiB = 1024 ** 3
+
+
+@dataclass
+class AccuracyRow:
+    group: str
+    n: int
+    mape_raw: float
+    mape_calibrated: float
+
+    @property
+    def improvement_pp(self) -> float:
+        return self.mape_raw - self.mape_calibrated
+
+
+@dataclass
+class AccuracyReport:
+    by: str                        # "arch" | "family"
+    profile_hash: str
+    rows: list = field(default_factory=list)
+    mape_raw: float = 0.0
+    mape_calibrated: float = 0.0
+    n: int = 0
+
+    def to_markdown(self, title: str = "") -> str:
+        headers = ("group", "cells", "MAPE raw %", "MAPE calibrated %",
+                   "improvement pp")
+        body = [(r.group, r.n, f"{r.mape_raw:.2f}",
+                 f"{r.mape_calibrated:.2f}", f"{r.improvement_pp:+.2f}")
+                for r in self.rows]
+        body.append(("ALL", self.n, f"{self.mape_raw:.2f}",
+                     f"{self.mape_calibrated:.2f}",
+                     f"{self.mape_raw - self.mape_calibrated:+.2f}"))
+        return RPT.markdown_table(
+            headers, body,
+            title=title or f"calibration accuracy by {self.by} "
+                           f"(profile {self.profile_hash})")
+
+    def to_csv(self) -> str:
+        headers = ("group", "cells", "mape_raw_pct", "mape_calibrated_pct")
+        body = [(r.group, r.n, f"{r.mape_raw:.3f}",
+                 f"{r.mape_calibrated:.3f}") for r in self.rows]
+        body.append(("ALL", self.n, f"{self.mape_raw:.3f}",
+                     f"{self.mape_calibrated:.3f}"))
+        return RPT.csv_table(headers, body)
+
+    def to_json_dict(self) -> dict:
+        return {
+            "by": self.by,
+            "profile_hash": self.profile_hash,
+            "n_measurements": self.n,
+            "mape_raw_pct": round(self.mape_raw, 4),
+            "mape_calibrated_pct": round(self.mape_calibrated, 4),
+            "groups": {r.group: {
+                "n": r.n,
+                "mape_raw_pct": round(r.mape_raw, 4),
+                "mape_calibrated_pct": round(r.mape_calibrated, 4),
+            } for r in self.rows},
+        }
+
+    def save_json(self, path) -> None:
+        from pathlib import Path
+        Path(path).write_text(
+            json.dumps(self.to_json_dict(), indent=1, sort_keys=True)
+            + "\n")
+
+    @property
+    def all_groups_improved(self) -> bool:
+        return all(r.mape_calibrated < r.mape_raw for r in self.rows)
+
+
+def _family_of(arch: str) -> str:
+    from repro.configs import get_config
+    return get_config(arch).family
+
+
+def evaluate(store: MeasurementStore,
+             profile: CalibrationProfile,
+             by: str = "family",
+             engine=None) -> AccuracyReport:
+    """Per-group MAPE of raw vs calibrated predictions over a store."""
+    if by not in ("arch", "family"):
+        raise ValueError(f"by={by!r}; expected 'arch' or 'family'")
+    from repro.core import sweep as SW
+    engine = engine or SW.SweepEngine()
+    raw_groups: dict[str, list] = {}
+    cal_groups: dict[str, list] = {}
+    raw_all: list = []
+    cal_all: list = []
+    for m in store:
+        group = m.arch if by == "arch" else _family_of(m.arch)
+        raw = predict_measurement(m, engine)
+        cal = predict_measurement(m, engine, profile=profile)
+        label = f"{m.arch}|{m.kind}|b{m.global_batch}|s{m.seq_len}"
+        r_rec = RPT.PredictionRecord(label, raw.peak_bytes,
+                                     m.measured_bytes)
+        c_rec = RPT.PredictionRecord(label, cal.peak_bytes,
+                                     m.measured_bytes)
+        raw_groups.setdefault(group, []).append(r_rec)
+        cal_groups.setdefault(group, []).append(c_rec)
+        raw_all.append(r_rec)
+        cal_all.append(c_rec)
+    cal_by_group = dict(
+        (g, mp) for g, _, mp in RPT.grouped_mape(cal_groups))
+    rows = [AccuracyRow(group=g, n=n, mape_raw=mp,
+                        mape_calibrated=cal_by_group[g])
+            for g, n, mp in RPT.grouped_mape(raw_groups)]
+    return AccuracyReport(by=by, profile_hash=profile.profile_hash,
+                          rows=rows, mape_raw=RPT.mape(raw_all),
+                          mape_calibrated=RPT.mape(cal_all),
+                          n=len(raw_all))

@@ -1,13 +1,23 @@
 """Print the registered-architecture table (markdown).
 
     PYTHONPATH=src python -m repro.configs
+    PYTHONPATH=src python -m repro.configs --profile profile.json \
+        --chip v5e --mesh data=16,model=16 --shape train_4k
 
-docs/configs.md embeds this output; re-run after registering a new arch.
+docs/configs.md embeds the plain output; re-run after registering a new
+arch.  With ``--profile`` (a fitted repro.calibrate CalibrationProfile)
+two extra columns show each architecture's predicted peak on the
+reference cell, raw and calibrated.
 """
 
 from __future__ import annotations
 
+import argparse
+from typing import Optional
+
 from repro.configs import get_config, registered_archs
+
+GiB = 1024 ** 3
 
 
 def _attention_kind(cfg) -> str:
@@ -36,18 +46,80 @@ def _params(cfg) -> str:
     return f"{n / 1e9:.2f}B" if n >= 1e9 else f"{n / 1e6:.0f}M"
 
 
-def table() -> str:
+def table(profile=None, chip: str = "v5e",
+          mesh: Optional[dict] = None, shape: str = "train_4k") -> str:
+    """The arch table; with a CalibrationProfile, adds raw + calibrated
+    predicted-peak columns for the reference (shape, mesh, chip) cell."""
     from repro.core.report import markdown_table
-    headers = ("arch", "family", "params", "modality", "attention",
-               "optimizer", "remat", "fsdp")
+    headers = ["arch", "family", "params", "modality", "attention",
+               "optimizer", "remat", "fsdp"]
+    engine = None
+    if profile is not None:
+        from repro.core import sweep as SW
+        engine = SW.SweepEngine()
+        mesh = mesh or {"data": 16, "model": 16}
+        headers += [f"peak GiB ({shape})", "calibrated GiB"]
     rows = []
     for name in registered_archs():
         cfg = get_config(name)
-        rows.append((name, cfg.family, _params(cfg), _modality(cfg),
-                     _attention_kind(cfg), cfg.optimizer, cfg.remat,
-                     "yes" if cfg.fsdp else "no"))
+        row = [name, cfg.family, _params(cfg), _modality(cfg),
+               _attention_kind(cfg), cfg.optimizer, cfg.remat,
+               "yes" if cfg.fsdp else "no"]
+        if profile is not None:
+            from repro.core import planner as PL
+            budget = int(PL.chip_hbm(chip) * PL.HEADROOM)
+            raw = engine.report(name, shape, mesh, budget_bytes=budget,
+                                chip=chip)
+            cal = engine.report(name, shape, mesh, budget_bytes=budget,
+                                chip=chip, profile=profile)
+            row += [f"{raw.peak_bytes / GiB:.2f}",
+                    f"{cal.peak_bytes / GiB:.2f}"]
+        rows.append(tuple(row))
     return markdown_table(headers, rows)
 
 
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.configs")
+    ap.add_argument("--profile", metavar="PATH", default=None,
+                    help="CalibrationProfile JSON: adds raw + calibrated "
+                         "predicted-peak columns")
+    ap.add_argument("--chip", default=None,
+                    help="reference chip (with --profile; default v5e)")
+    ap.add_argument("--mesh", default=None, metavar="data=16,model=16",
+                    help="reference mesh (with --profile)")
+    ap.add_argument("--shape", default=None,
+                    help="reference shape (with --profile; "
+                         "default train_4k)")
+    args = ap.parse_args(argv)
+    if args.profile is None:
+        given = [f for f in ("chip", "mesh", "shape")
+                 if getattr(args, f) is not None]
+        if given:
+            ap.error(f"--{'/--'.join(given)} only apply to the "
+                     f"--profile reference cell")
+        print(table())
+        return 0
+    from repro.calibrate.profile import CalibrationProfile
+    from repro.configs import SHAPES
+    from repro.core import planner as PL
+    from repro.core.sweep import _parse_mesh
+    chip = args.chip or "v5e"
+    shape = args.shape or "train_4k"
+    mesh_str = args.mesh or "data=16,model=16"
+    try:
+        profile = CalibrationProfile.load(args.profile)
+        mesh = _parse_mesh(mesh_str)
+        PL.chip_hbm(chip)
+        if shape not in SHAPES:
+            raise ValueError(f"unknown shape {shape!r}; "
+                             f"known: {sorted(SHAPES)}")
+    except (OSError, KeyError, ValueError) as e:
+        ap.error(str(e))
+    print(f"_profile {profile.profile_hash}: reference cell "
+          f"{shape} on {mesh_str} ({chip})_\n")
+    print(table(profile=profile, chip=chip, mesh=mesh, shape=shape))
+    return 0
+
+
 if __name__ == "__main__":
-    print(table())
+    raise SystemExit(main())

@@ -117,11 +117,15 @@ def check(arch: str, shape_name, mesh_shape: dict,
           hbm_bytes: Optional[int] = None, policy: TrainPolicy = FULL_TRAIN,
           backend: str = "tpu", grad_accum: int = 1,
           remat: Optional[str] = None, optimizer: Optional[str] = None,
-          chip: str = "v5e", headroom: float = HEADROOM) -> PlanReport:
+          chip: str = "v5e", headroom: float = HEADROOM,
+          profile=None) -> PlanReport:
     """Reference single-cell evaluation: fresh build, no caches.
 
     ``shape_name`` may be a registered shape name ("train_4k") or a
-    ShapeConfig; ``hbm_bytes`` overrides the ``chip`` lookup when given.
+    ShapeConfig; ``hbm_bytes`` overrides the ``chip`` lookup when given;
+    ``profile`` (a repro.calibrate CalibrationProfile) corrects the
+    prediction with measurement-fitted per-term coefficients + the
+    ``chip`` constant.
     """
     from repro.configs import get_config
     from repro.models import build_model
@@ -134,7 +138,7 @@ def check(arch: str, shape_name, mesh_shape: dict,
                        seq_len=shape.seq_len, backend=backend,
                        grad_accum=grad_accum, remat=remat,
                        optimizer=optimizer)
-    pred = PR.predict(model, policy, ctx)
+    pred = PR.predict(model, policy, ctx, profile=profile, chip=chip)
     budget = int((hbm_bytes if hbm_bytes is not None
                   else chip_hbm(chip)) * headroom)
     return PlanReport(arch=arch, shape=shape.name,
@@ -147,12 +151,14 @@ def check(arch: str, shape_name, mesh_shape: dict,
 def plan(arch: str, shape_name, mesh_shape: dict,
          hbm_bytes: Optional[int] = None, policy: TrainPolicy = FULL_TRAIN,
          backend: str = "tpu", chip: str = "v5e",
-         headroom: float = HEADROOM, engine=None) -> PlanReport:
+         headroom: float = HEADROOM, engine=None,
+         profile=None) -> PlanReport:
     """First-fit search over (remat, grad_accum); pure arithmetic.
 
     Delegates to the memoized sweep engine so the candidate evaluations
     share the parsed model and the batch-independent factor sums; pass
-    ``engine`` (a SweepEngine) to share those caches across calls.
+    ``engine`` (a SweepEngine) to share those caches across calls and
+    ``profile`` to plan against calibrated predictions.
     """
     from repro.core import sweep as SW
     from repro.configs import get_config
@@ -162,7 +168,8 @@ def plan(arch: str, shape_name, mesh_shape: dict,
                   else chip_hbm(chip)) * headroom)
     engine = engine or SW.SweepEngine()
     base = engine.report(arch, shape, mesh_shape, policy=policy,
-                         backend=backend, budget_bytes=budget)
+                         backend=backend, budget_bytes=budget,
+                         chip=chip, profile=profile)
     if base.fits or shape.kind != "train":
         return base
     cfg = get_config(arch)
@@ -172,7 +179,8 @@ def plan(arch: str, shape_name, mesh_shape: dict,
                 continue
             r = engine.report(arch, shape, mesh_shape, policy=policy,
                               backend=backend, budget_bytes=budget,
-                              grad_accum=accum, remat=remat)
+                              grad_accum=accum, remat=remat,
+                              chip=chip, profile=profile)
             if r.fits:
                 r.note = f"planner: accum x{accum} fits the budget"
                 return r

@@ -41,6 +41,9 @@ class PredictedMemory:
     # donated inputs are still live, so they cannot alias — one extra copy
     # of the trainable params exists at the end of every train step.
     output_copy_bytes: int = 0
+    # per-chip constant overhead added by an applied CalibrationProfile
+    # (repro.calibrate); 0 on the uncalibrated path.
+    calibration_bytes: int = 0
     per_module: dict = field(default_factory=dict)
 
     @property
@@ -48,7 +51,7 @@ class PredictedMemory:
         return (self.param_bytes + self.grad_bytes + self.opt_bytes
                 + self.act_saved_bytes + self.act_transient_bytes
                 + self.loss_bytes + self.input_bytes + self.cache_bytes
-                + self.output_copy_bytes)
+                + self.output_copy_bytes + self.calibration_bytes)
 
     def summary(self) -> str:
         rows = [("params", self.param_bytes), ("grads", self.grad_bytes),
@@ -57,6 +60,7 @@ class PredictedMemory:
                 ("loss", self.loss_bytes), ("inputs", self.input_bytes),
                 ("cache", self.cache_bytes),
                 ("out_copy", self.output_copy_bytes),
+                ("calib", self.calibration_bytes),
                 ("PEAK", self.peak_bytes)]
         return "\n".join(f"  {k:<10s} {v / GiB:9.3f} GiB" for k, v in rows)
 
@@ -315,7 +319,12 @@ def compute_overheads(model, rows: list[ParsedLayer],
 
 
 def assemble(static: StaticTerms, acts: ActTermsAgg, over: OverheadTerms,
-             ctx: F.PredictContext) -> PredictedMemory:
+             ctx: F.PredictContext, profile=None,
+             chip: str = None) -> PredictedMemory:
+    """Compose the component groups into a prediction; when a
+    CalibrationProfile (repro.calibrate.profile) is given, its per-term
+    corrections + the ``chip`` constant are applied to the RAW composition
+    (duck-typed — the profile scales, this module never imports it)."""
     out = PredictedMemory(
         param_bytes=static.param_bytes, grad_bytes=static.grad_bytes,
         opt_bytes=static.opt_bytes,
@@ -333,18 +342,22 @@ def assemble(static: StaticTerms, acts: ActTermsAgg, over: OverheadTerms,
                                 "trainable": trainable}
     for path, a in acts.per_module:
         out.per_module[path]["act"] = a
+    if profile is not None:
+        out = profile.apply(out, chip)
     return out
 
 
 def predict(model, policy: TrainPolicy, ctx: F.PredictContext,
             shape_kind: str = None,
-            rows: list[ParsedLayer] = None) -> PredictedMemory:
+            rows: list[ParsedLayer] = None, profile=None,
+            chip: str = None) -> PredictedMemory:
     if rows is None:
         rows = parse_model(model.spec, policy)
     kind = shape_kind or ctx.kind
     return assemble(compute_static(rows, ctx),
                     compute_acts(rows, ctx, kind),
-                    compute_overheads(model, rows, ctx, kind), ctx)
+                    compute_overheads(model, rows, ctx, kind), ctx,
+                    profile=profile, chip=chip)
 
 
 def per_device(pred: PredictedMemory) -> int:

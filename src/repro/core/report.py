@@ -30,6 +30,13 @@ def mape(records: list[PredictionRecord]) -> float:
     return float(np.mean([r.ape for r in records]))
 
 
+def grouped_mape(groups: dict[str, list[PredictionRecord]]
+                 ) -> list[tuple[str, int, float]]:
+    """(group, n, MAPE%) rows, sorted by group — the per-arch/per-family
+    accuracy table the calibration reporter emits (paper section 4)."""
+    return [(k, len(v), mape(v)) for k, v in sorted(groups.items())]
+
+
 def table(records: list[PredictionRecord], title: str = "") -> str:
     lines = []
     if title:

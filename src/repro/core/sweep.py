@@ -102,6 +102,9 @@ class SweepGrid:
     backend: str = "tpu"
     headroom: float = PL.HEADROOM
     keep_predictions: bool = False
+    # measurement-fitted CalibrationProfile (repro.calibrate) applied to
+    # every cell; its hash participates in the engine's memo keys
+    profile: object = None
 
     def meshes(self) -> list[dict]:
         from repro.launch.mesh import enumerate_meshes
@@ -313,6 +316,7 @@ class SweepEngine:
         self._static: dict = {}
         self._acts: dict = {}
         self._over: dict = {}
+        self._pred: dict = {}        # assembled cells, keyed + profile hash
 
     # -- caches --------------------------------------------------------------
     def _arch_state(self, arch: str, policy: TrainPolicy):
@@ -328,8 +332,19 @@ class SweepEngine:
         return hit
 
     def predict_cell(self, arch: str, policy: TrainPolicy,
-                     ctx) -> PR.PredictedMemory:
-        """Memoized twin of ``PR.predict(model, policy, ctx)``."""
+                     ctx, profile=None,
+                     chip: Optional[str] = None) -> PR.PredictedMemory:
+        """Memoized twin of ``PR.predict(model, policy, ctx)``.
+
+        The component caches are keyed WITHOUT the profile — the cached
+        StaticTerms/ActTermsAgg/OverheadTerms are raw Eq.1 values a
+        profile never touches, so raw and calibrated evaluations share
+        them.  The profile (repro.calibrate CalibrationProfile) is
+        applied at assemble time, and its hash keys the assembled-cell
+        cache: a cell assembled under one profile can never be served
+        under another (or under the uncalibrated path).  Cached
+        predictions are shared objects — treat them as read-only, as all
+        callers do."""
         cfg, model, rows = self._arch_state(arch, policy)
         mkey = tuple(sorted(ctx.mesh_shape.items()))
         base = (arch, policy, ctx.kind, mkey, ctx.backend)
@@ -353,19 +368,31 @@ class SweepEngine:
             over = self._over[okey] = PR.compute_overheads(
                 model, rows, ctx, ctx.kind)
 
-        return PR.assemble(static, acts, over, ctx)
+        # assemble() reads only the components + ctx.opt_transient_frac
+        # (backend-derived, already in base); chip only matters once a
+        # profile can add a chip constant
+        phash = None if profile is None else profile.profile_hash
+        pkey = (skey, akey, okey, phash,
+                chip if phash is not None else None)
+        pred = self._pred.get(pkey)
+        if pred is None:
+            pred = self._pred[pkey] = PR.assemble(
+                static, acts, over, ctx, profile=profile, chip=chip)
+        return pred
 
     # -- cell evaluation -----------------------------------------------------
     def evaluate(self, cell: SweepCell, policy: TrainPolicy = FULL_TRAIN,
                  headroom: float = PL.HEADROOM,
-                 keep_prediction: bool = False) -> SweepResult:
+                 keep_prediction: bool = False,
+                 profile=None) -> SweepResult:
         cfg, _, _ = self._arch_state(cell.arch, policy)
         ctx = PL.make_context(cfg, cell.mesh_shape, kind=cell.kind,
                               global_batch=cell.global_batch,
                               seq_len=cell.seq_len, backend=cell.backend,
                               grad_accum=cell.grad_accum, remat=cell.remat,
                               optimizer=cell.optimizer)
-        pred = self.predict_cell(cell.arch, policy, ctx)
+        pred = self.predict_cell(cell.arch, policy, ctx, profile=profile,
+                                 chip=cell.chip)
         budget = int(PL.chip_hbm(cell.chip) * headroom)
         return SweepResult(
             arch=cell.arch, chip=cell.chip, mesh_shape=cell.mesh_shape,
@@ -382,7 +409,8 @@ class SweepEngine:
                policy: TrainPolicy = FULL_TRAIN, backend: str = "tpu",
                budget_bytes: int, grad_accum: int = 1,
                remat: Optional[str] = None,
-               optimizer: Optional[str] = None) -> PL.PlanReport:
+               optimizer: Optional[str] = None, chip: str = "v5e",
+               profile=None) -> PL.PlanReport:
         """PlanReport-shaped single-cell evaluation (planner.plan's
         memoized backend); byte-identical to ``planner.check``."""
         shape = PL._resolve_shape(shape)
@@ -392,7 +420,8 @@ class SweepEngine:
                               seq_len=shape.seq_len, backend=backend,
                               grad_accum=grad_accum, remat=remat,
                               optimizer=optimizer)
-        pred = self.predict_cell(arch, policy, ctx)
+        pred = self.predict_cell(arch, policy, ctx, profile=profile,
+                                 chip=chip)
         return PL.PlanReport(arch=arch, shape=shape.name,
                              fits=pred.peak_bytes <= budget_bytes,
                              peak_bytes=pred.peak_bytes,
@@ -403,7 +432,8 @@ class SweepEngine:
     def sweep(self, grid: SweepGrid) -> SweepResults:
         t0 = time.perf_counter()
         results = [self.evaluate(cell, grid.policy, grid.headroom,
-                                 grid.keep_predictions)
+                                 grid.keep_predictions,
+                                 profile=grid.profile)
                    for cell in grid.cells()]
         return SweepResults(grid=grid, results=results,
                             elapsed_s=time.perf_counter() - t0)
@@ -479,6 +509,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("--policy", default="full", choices=sorted(POLICIES))
     p.add_argument("--backend", default="tpu", choices=("tpu", "cpu"))
     p.add_argument("--headroom", type=float, default=PL.HEADROOM)
+    p.add_argument("--profile", metavar="PATH", default=None,
+                   help="CalibrationProfile JSON (python -m repro.calibrate"
+                        " fit) applied to every cell's prediction")
     p.add_argument("--top", type=int, default=20,
                    help="rows to print (full grid goes to --csv/--md)")
     p.add_argument("--csv", metavar="PATH", help="write full CSV report")
@@ -495,6 +528,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         meshes = [_parse_mesh(m) for m in args.mesh] if args.mesh else None
     except (KeyError, ValueError) as e:
         p.error(str(e))
+    profile = None
+    if args.profile:
+        from repro.calibrate.profile import CalibrationProfile
+        try:
+            profile = CalibrationProfile.load(args.profile)
+        except (OSError, ValueError) as e:
+            p.error(f"--profile: {e}")
     grid = SweepGrid(
         arch=arch,
         chips=args.chips,
@@ -507,12 +547,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         grad_accums=args.accum, global_batches=args.batch,
         seq_lens=args.seq_len, kind=args.kind,
         policy=POLICIES[args.policy], backend=args.backend,
-        headroom=args.headroom)
+        headroom=args.headroom, profile=profile)
 
     res = sweep(grid)
     n_fit = len(res.fitting())
     title = (f"capacity sweep: {arch} {args.kind} on {args.chip} "
-             f"({args.backend} prediction)")
+             f"({args.backend} prediction)"
+             + (f" [profile {profile.profile_hash}]" if profile else ""))
     print(f"# {title}")
     print(f"{len(res)} cells in {res.elapsed_s:.3f}s "
           f"({res.cells_per_sec:,.0f} cells/s); {n_fit} fit")

@@ -1,5 +1,14 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# APPEND the host-platform device-count flag (must happen before the jax
+# import below); a user-supplied XLA_FLAGS is preserved, and an existing
+# device-count setting wins over ours.
+_DEVICE_COUNT_FLAG = "--xla_force_host_platform_device_count=512"
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = " ".join(
+        filter(None, [os.environ.get("XLA_FLAGS", ""),
+                      _DEVICE_COUNT_FLAG]))
 
 """Multi-pod dry-run: lower + compile every (arch x shape) cell on the
 production meshes with ShapeDtypeStruct stand-ins (no allocation), record
@@ -10,8 +19,9 @@ prediction side by side.
     python -m repro.launch.dryrun --all            # every cell, subprocesses
     python -m repro.launch.dryrun --all --multi-pod
 
-Artifacts land in experiments/dryrun/<arch>__<shape>__<mesh>.json and are
-consumed by benchmarks/ and EXPERIMENTS.md.
+Artifacts land in experiments/dryrun/<arch>__<shape>__<mesh>.json
+(the same directory repro.calibrate's MeasurementStore ingests by
+default) and are consumed by benchmarks/ and EXPERIMENTS.md.
 """
 
 import argparse
@@ -37,8 +47,11 @@ from repro.models import param as PM
 from repro.train import OptimizerConfig, TrainState, make_train_step
 from repro.train.optimizer import opt_state_specs
 
-OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                       "experiments", "dryrun")
+from repro.calibrate.paths import dryrun_dir
+
+# pathlib repo-root resolution shared with the calibration MeasurementStore
+# (write side and ingest side can never disagree on the artifact home)
+OUT_DIR = str(dryrun_dir())
 
 
 def input_specs(arch: str, shape_name: str) -> dict:
@@ -141,6 +154,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
     record = {
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
+        "mesh_shape": mesh_axis_sizes(mesh),
         "n_devices": n_dev, "kind": shape.kind,
         "compile_seconds": round(compile_s, 2),
         "memory": {

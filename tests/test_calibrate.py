@@ -1,0 +1,413 @@
+"""Calibration subsystem (repro/calibrate/): ISSUE-2 checklist.
+
+Profile round-trip + staleness rules, deterministic synthetic oracle,
+NNLS recovery of a hidden ground-truth profile, strictly-lower calibrated
+MAPE per arch family, identity-profile byte-identity, memoized-sweep vs
+cell-by-cell parity WITH a profile applied, dry-run artifact ingest, and
+CLI smoke runs.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.calibrate import (TERMS, CalibrationProfile, Measurement,
+                             MeasurementStore, decompose, evaluate,
+                             fit_profile, generate, nnls,
+                             predict_measurement)
+from repro.calibrate import synthetic as SYN
+from repro.calibrate.paths import dryrun_dir, repo_root
+from repro.configs import ShapeConfig
+from repro.core import planner, sweep as SW
+
+# one shared engine: measurements decompose through the same caches the
+# sweep uses, so the whole module runs in seconds
+ENGINE = SW.SweepEngine()
+
+SMALL_ARCHS = ("smollm-360m", "mamba2-1.3b")
+
+
+def small_store(noise=0.01, **kw):
+    return generate(archs=SMALL_ARCHS, engine=ENGINE, noise=noise, **kw)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    store = generate(engine=ENGINE)
+    return store, fit_profile(store, engine=ENGINE)
+
+
+# ---------------------------------------------------------------------------
+# profile: round-trip, hashing, staleness rules
+# ---------------------------------------------------------------------------
+
+
+def test_profile_roundtrip(tmp_path):
+    p = CalibrationProfile(
+        coefficients={"static": 1.05, "act_saved": 1.2,
+                      "act_transient": 0.9, "overhead": 1.1},
+        chip_constant_bytes={"v5e": 123456789, "*": 1000},
+        created="2026-07-30T00:00:00Z", source={"n_measurements": 7})
+    path = p.save(tmp_path / "p.json")
+    q = CalibrationProfile.load(path)
+    assert q == p
+    assert q.profile_hash == p.profile_hash
+
+
+def test_profile_hash_ignores_metadata():
+    a = CalibrationProfile(created="2020-01-01", source={"x": 1})
+    b = CalibrationProfile(created="2026-07-30", source={"y": 2})
+    assert a.profile_hash == b.profile_hash
+    c = CalibrationProfile(
+        coefficients={"static": 1.01, "act_saved": 1.0,
+                      "act_transient": 1.0, "overhead": 1.0})
+    assert c.profile_hash != a.profile_hash
+
+
+def test_profile_rejects_missing_or_negative_terms():
+    with pytest.raises(ValueError):
+        CalibrationProfile(coefficients={"static": 1.0})
+    with pytest.raises(ValueError):
+        CalibrationProfile(coefficients={t: -1.0 for t in TERMS})
+
+
+def test_profile_staleness_rules(tmp_path):
+    d = CalibrationProfile().to_dict()
+    bad_version = dict(d, schema_version=99)
+    with pytest.raises(ValueError, match="schema_version"):
+        CalibrationProfile.from_dict(bad_version)
+    bad_terms = dict(d, terms=["static", "act_saved"])
+    with pytest.raises(ValueError, match="stale"):
+        CalibrationProfile.from_dict(bad_terms)
+    with pytest.raises(ValueError, match="kind"):
+        CalibrationProfile.from_dict(dict(d, kind="other"))
+
+
+def test_chip_offset_fallback():
+    p = CalibrationProfile(chip_constant_bytes={"v5e": 10, "*": 3})
+    assert p.chip_offset("v5e") == 10
+    assert p.chip_offset("h100") == 3
+    assert p.chip_offset(None) == 3
+    q = CalibrationProfile(chip_constant_bytes={"v5e": 10})
+    assert q.chip_offset("h100") == 0       # unknown chip: never a guess
+
+
+# ---------------------------------------------------------------------------
+# identity: no profile == identity profile, byte for byte
+# ---------------------------------------------------------------------------
+
+
+def test_identity_profile_is_noop():
+    ident = CalibrationProfile.identity()
+    assert ident.is_identity
+    mesh = {"data": 4, "model": 2}
+    raw = planner.check("smollm-360m", "train_4k", mesh)
+    cal = planner.check("smollm-360m", "train_4k", mesh, profile=ident)
+    assert raw.prediction == cal.prediction
+    assert raw.peak_bytes == cal.peak_bytes
+    assert cal.prediction.calibration_bytes == 0
+
+
+def test_uncalibrated_prediction_unchanged_by_new_field():
+    # the calibration_bytes field defaults to 0 and must not move peaks
+    pred = planner.check("smollm-360m", "train_4k",
+                         {"data": 4, "model": 2}).prediction
+    assert pred.calibration_bytes == 0
+    total = (pred.param_bytes + pred.grad_bytes + pred.opt_bytes
+             + pred.act_saved_bytes + pred.act_transient_bytes
+             + pred.loss_bytes + pred.input_bytes + pred.cache_bytes
+             + pred.output_copy_bytes)
+    assert pred.peak_bytes == total
+
+
+# ---------------------------------------------------------------------------
+# synthetic oracle: deterministic, distorted by the hidden profile
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_deterministic():
+    a = small_store()
+    b = small_store()
+    assert [m.to_dict() for m in a] == [m.to_dict() for m in b]
+    assert all(m.measured_bytes > 0 for m in a)
+
+
+def test_synthetic_noise_bounded():
+    clean = small_store(noise=0.0)
+    noisy = small_store(noise=0.05)
+    for c, n in zip(clean, noisy):
+        assert c.key == n.key
+        assert abs(n.measured_bytes - c.measured_bytes) \
+            <= 0.05 * c.measured_bytes + 1
+
+
+def test_bundled_fixture_matches_generator():
+    """The checked-in benchmark fixture IS the generator's output —
+    regeneration must reproduce it bit-for-bit."""
+    path = repo_root() / "benchmarks" / "fixtures" / \
+        "calibration_measurements.json"
+    bundled = MeasurementStore.load(path)
+    fresh = generate(engine=ENGINE)
+    assert bundled.to_dict() == fresh.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# residual decomposition
+# ---------------------------------------------------------------------------
+
+
+def test_decompose_terms_sum_to_raw_peak():
+    store = small_store()
+    for row in decompose(store, ENGINE):
+        assert set(row.terms) == set(TERMS)
+        assert sum(row.terms.values()) == row.raw_peak_bytes
+        assert row.residual_bytes == \
+            row.measurement.measured_bytes - row.raw_peak_bytes
+
+
+# ---------------------------------------------------------------------------
+# fitting: NNLS recovers the hidden ground truth
+# ---------------------------------------------------------------------------
+
+
+def test_nnls_nonnegative_exact_recovery():
+    rng = np.random.RandomState(0)
+    A = rng.rand(40, 4)
+    x_true = np.array([1.2, 0.0, 0.7, 2.0])
+    x, rnorm = nnls(A, A @ x_true)
+    assert np.allclose(x, x_true, atol=1e-8)
+    assert rnorm < 1e-8
+
+
+def test_fit_recovers_true_profile_noiseless():
+    store = generate(engine=ENGINE, noise=0.0)
+    prof = fit_profile(store, engine=ENGINE)
+    for t in TERMS:
+        assert prof.coefficients[t] == \
+            pytest.approx(SYN.TRUE_PROFILE.coefficients[t], rel=0.02)
+    for chip, k in SYN.TRUE_PROFILE.chip_constant_bytes.items():
+        assert prof.chip_constant_bytes[chip] == pytest.approx(k, rel=0.05)
+
+
+def test_fit_with_noise_still_close(fitted):
+    _, prof = fitted
+    for t in TERMS:
+        assert prof.coefficients[t] == \
+            pytest.approx(SYN.TRUE_PROFILE.coefficients[t], rel=0.05)
+
+
+def test_fit_refuses_empty_store():
+    with pytest.raises(ValueError):
+        fit_profile(MeasurementStore(), engine=ENGINE)
+
+
+def test_unsupported_term_stays_identity():
+    """A measurement set that exercises no cache/loss/input bytes must
+    leave the overhead coefficient at 1.0, not NNLS's zero."""
+    from repro.calibrate.fit import fit_rows
+    from repro.calibrate.residual import TermRow
+    store = small_store()
+    rows = []
+    for r in decompose(store, ENGINE):
+        terms = dict(r.terms, overhead=0)
+        rows.append(TermRow(measurement=r.measurement, terms=terms,
+                            raw_peak_bytes=sum(terms.values())))
+    prof = fit_rows(rows)
+    assert prof.coefficients["overhead"] == 1.0
+    assert "overhead" in prof.fit_info["inactive_terms"]
+
+
+# ---------------------------------------------------------------------------
+# accuracy: calibrated strictly better than raw, per family AND per arch
+# ---------------------------------------------------------------------------
+
+
+def test_calibrated_mape_strictly_lower_everywhere(fitted):
+    store, prof = fitted
+    by_family = evaluate(store, prof, by="family", engine=ENGINE)
+    assert len(by_family.rows) == 6          # all six arch families
+    for row in by_family.rows:
+        assert row.mape_calibrated < row.mape_raw, row.group
+    assert by_family.mape_calibrated < by_family.mape_raw
+    by_arch = evaluate(store, prof, by="arch", engine=ENGINE)
+    for row in by_arch.rows:
+        assert row.mape_calibrated < row.mape_raw, row.group
+
+
+def test_accuracy_report_writers(fitted, tmp_path):
+    store, prof = fitted
+    rep = evaluate(store, prof, by="family", engine=ENGINE)
+    md = rep.to_markdown()
+    assert "MAPE raw %" in md and "ALL" in md
+    csv = rep.to_csv()
+    assert csv.splitlines()[0].startswith("group,cells")
+    rep.save_json(tmp_path / "r.json")
+    loaded = json.loads((tmp_path / "r.json").read_text())
+    assert loaded["n_measurements"] == rep.n
+    assert set(loaded["groups"]) == {r.group for r in rep.rows}
+
+
+# ---------------------------------------------------------------------------
+# profile threading: memoized sweep == cell-by-cell check, byte for byte
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_with_profile_matches_check(fitted):
+    _, prof = fitted
+    grid = SW.SweepGrid(
+        arch="smollm-360m", chips=8,
+        optimizers=(None, "adafactor"), remats=(None, "none"),
+        grad_accums=(1, 2), global_batches=(16, 32), seq_lens=(512,),
+        chip=("v5e", "h100"), backend="tpu",
+        keep_predictions=True, profile=prof)
+    res = SW.sweep(grid)
+    assert len(res) > 50
+    for r in res:
+        shape = ShapeConfig("cell", r.seq_len, r.global_batch, r.kind)
+        ref = planner.check(r.arch, shape, r.mesh_shape, backend=r.backend,
+                            grad_accum=r.grad_accum, remat=r.remat,
+                            optimizer=r.optimizer, chip=r.chip,
+                            profile=prof)
+        assert ref.peak_bytes == r.peak_bytes
+        assert ref.fits == r.fits
+        assert ref.prediction == r.prediction
+
+
+def test_engine_does_not_leak_across_profiles(fitted):
+    _, prof = fitted
+    engine = SW.SweepEngine()
+    cell = next(SW.SweepGrid(arch="smollm-360m", chips=4,
+                             global_batches=(16,),
+                             seq_lens=(256,)).cells())
+    raw = engine.evaluate(cell, keep_prediction=True)
+    cal = engine.evaluate(cell, keep_prediction=True, profile=prof)
+    raw2 = engine.evaluate(cell, keep_prediction=True)
+    assert raw == raw2                       # warm == cold, same profile
+    assert cal.peak_bytes != raw.peak_bytes  # profile actually applied
+    assert cal.prediction.calibration_bytes == prof.chip_offset(cell.chip)
+
+
+def test_chip_constant_lands_in_prediction(fitted):
+    _, prof = fitted
+    mesh = {"data": 2, "model": 2}
+    v5e = planner.check("smollm-360m", "train_4k", mesh, chip="v5e",
+                        profile=prof)
+    h100 = planner.check("smollm-360m", "train_4k", mesh, chip="h100",
+                         profile=prof)
+    assert v5e.prediction.calibration_bytes == prof.chip_offset("v5e")
+    assert h100.prediction.calibration_bytes == prof.chip_offset("h100")
+    assert v5e.peak_bytes - v5e.prediction.calibration_bytes == \
+        h100.peak_bytes - h100.prediction.calibration_bytes
+
+
+def test_planner_plan_accepts_profile(fitted):
+    _, prof = fitted
+    r = planner.plan("smollm-360m", "train_4k", {"data": 4, "model": 2},
+                     profile=prof)
+    assert r.peak_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# measurement store: round-trip + dryrun ingest
+# ---------------------------------------------------------------------------
+
+
+def test_store_roundtrip(tmp_path):
+    store = small_store()
+    path = store.save(tmp_path / "store.json")
+    loaded = MeasurementStore.load(path)
+    assert loaded.to_dict() == store.to_dict()
+    assert loaded.archs() == store.archs()
+    assert loaded.chips() == ["h100", "v5e"]
+
+
+def test_store_rejects_wrong_schema(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps({"kind": "measurement_store",
+                             "schema_version": 42, "measurements": []}))
+    with pytest.raises(ValueError):
+        MeasurementStore.load(p)
+
+
+def _fake_dryrun_record(arch="smollm-360m", shape="train_4k",
+                        mesh="16x16", total=7 * 1024 ** 3):
+    return {"arch": arch, "shape": shape, "mesh": mesh, "kind": "train",
+            "compile_seconds": 1.0,
+            "memory": {"argument_bytes": 1, "output_bytes": 2,
+                       "temp_bytes": 3, "alias_bytes": 0,
+                       "total_bytes": total}}
+
+
+def test_dryrun_ingest(tmp_path):
+    (tmp_path / "a.json").write_text(json.dumps(_fake_dryrun_record()))
+    (tmp_path / "b.json").write_text(json.dumps(
+        _fake_dryrun_record(mesh="2x16x16", total=5 * 1024 ** 3)))
+    (tmp_path / "junk.json").write_text("{\"not\": \"an artifact\"}")
+    half = dict(_fake_dryrun_record(), memory=None)   # partially written
+    (tmp_path / "half.json").write_text(json.dumps(half))
+    store = MeasurementStore.ingest_dryrun_dir(tmp_path)
+    assert len(store) == 2                  # junk + half skipped, not fatal
+    m = store.measurements[0]
+    assert m.arch == "smollm-360m"
+    assert m.mesh_shape == {"data": 16, "model": 16}
+    assert m.backend == "cpu"
+    assert m.measured_bytes == 7 * 1024 ** 3
+    assert store.measurements[1].mesh_shape == \
+        {"pod": 2, "data": 16, "model": 16}
+    with pytest.raises((KeyError, TypeError, ValueError)):
+        MeasurementStore.ingest_dryrun_dir(tmp_path, strict=True)
+    # ingested measurements decompose + predict like any other
+    pred = predict_measurement(m, ENGINE)
+    assert pred.peak_bytes > 0
+
+
+def test_dryrun_ingest_explicit_mesh_shape(tmp_path):
+    rec = _fake_dryrun_record()
+    rec["mesh_shape"] = {"data": 8, "model": 4}    # new-format artifacts
+    (tmp_path / "c.json").write_text(json.dumps(rec))
+    store = MeasurementStore.ingest_dryrun_dir(tmp_path)
+    assert store.measurements[0].mesh_shape == {"data": 8, "model": 4}
+
+
+def test_dryrun_default_dir_is_shared():
+    import repro.launch.dryrun as DR
+    assert DR.OUT_DIR == str(dryrun_dir())
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke
+# ---------------------------------------------------------------------------
+
+
+def test_cli_fit_apply_report(tmp_path, capsys):
+    from repro.calibrate.__main__ import main
+    prof_path = tmp_path / "prof.json"
+    rc = main(["fit", "--synthetic", "--out", str(prof_path)])
+    assert rc == 0
+    assert prof_path.exists()
+    rc = main(["apply", "--profile", str(prof_path),
+               "--arch", "smollm_360m", "--mesh", "data=4,model=2",
+               "--chip", "v5e"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "raw :" in out and "cal :" in out
+    rc = main(["report", "--profile", str(prof_path), "--synthetic",
+               "--by", "family", "--md", str(tmp_path / "r.md"),
+               "--json", str(tmp_path / "r.json")])
+    assert rc == 0
+    assert (tmp_path / "r.md").exists()
+    assert (tmp_path / "r.json").exists()
+
+
+def test_configs_table_with_profile(fitted, tmp_path, capsys):
+    _, prof = fitted
+    from repro.configs.__main__ import main as cfg_main
+    path = prof.save(tmp_path / "p.json")
+    rc = cfg_main(["--profile", str(path), "--chip", "v5e"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "calibrated GiB" in out
+    rc = cfg_main([])
+    assert rc == 0
+    assert "calibrated" not in capsys.readouterr().out

@@ -76,3 +76,103 @@ def test_shape_bytes():
     assert shape_bytes("bf16[10]") == 20
     assert shape_bytes("(f32[2], s32[4])") == 24
     assert shape_bytes("pred[]") == 1
+
+
+# ---------------------------------------------------------------------------
+# shape_bytes edge cases + collective_stats text parsing (pure-text ground
+# truth the calibration MeasurementStore ingest now depends on)
+# ---------------------------------------------------------------------------
+
+
+def test_shape_bytes_scalar_empty_dims():
+    # empty dims = rank-0 scalar: one element of the dtype
+    assert shape_bytes("f32[]") == 4
+    assert shape_bytes("bf16[]") == 2
+    assert shape_bytes("s64[]") == 8
+
+
+def test_shape_bytes_zero_dim():
+    assert shape_bytes("f32[0]") == 0
+    assert shape_bytes("f32[4,0,8]") == 0
+
+
+def test_shape_bytes_f8_dtypes():
+    assert shape_bytes("f8e4m3fn[16]") == 16
+    assert shape_bytes("f8e5m2[4,4]") == 16
+    # f8 inside a tuple alongside wider dtypes
+    assert shape_bytes("(f8e4m3fn[8], f32[8])") == 8 + 32
+
+
+def test_shape_bytes_nested_tuples_and_noise():
+    # every typed shape in the string counts, once each
+    assert shape_bytes("(f32[2,2], (bf16[4], s32[1]))") == 16 + 8 + 4
+    # surrounding HLO noise does not confuse the scan
+    line = "%x = f32[128,64] dot(%a, %b), lhs_contracting_dims={1}"
+    assert shape_bytes("f32[128,64]") == 128 * 64 * 4
+    assert shape_bytes(line.split("=")[1].split("dot")[0].strip()) \
+        == 128 * 64 * 4
+
+
+def test_shape_bytes_no_match():
+    assert shape_bytes("") == 0
+    assert shape_bytes("tuple()") == 0
+    assert shape_bytes("token[]") == 0          # untyped token: no bytes
+
+
+ASYNC_HLO = """\
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024] parameter(0)
+  %ar-start = f32[1024] all-reduce-start(%p0), replica_groups={{0,1,2,3}}
+  %ar-done = f32[1024] all-reduce-done(%ar-start)
+  %ag = f32[4096] all-gather(%ar-done), replica_groups={{0,1,2,3}}
+  ROOT %cp = f32[4096] collective-permute(%ag), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_collective_stats_start_done_counted_once():
+    s = collective_stats(ASYNC_HLO, n_devices=4)
+    # the -start/-done pair is ONE all-reduce, counted at -start
+    assert s.counts == {"all-reduce": 1, "all-gather": 1,
+                        "collective-permute": 1}
+    assert s.operand_bytes["all-reduce"] == 1024 * 4
+    # ring wire estimates: AR 2x(g-1)/g, AG (g-1)/g, permute 1x
+    assert s.wire_bytes["all-reduce"] == int(2 * 4096 * 3 / 4)
+    assert s.wire_bytes["all-gather"] == int(4096 * 4 * 3 / 4)
+    assert s.wire_bytes["collective-permute"] == 4096 * 4
+
+
+def test_collective_stats_group_size_from_replica_groups():
+    hlo = ("%ar = f32[256] all-reduce(%x), replica_groups={{0,1}}\n"
+           "%ar2 = f32[256] all-reduce(%y), replica_groups={{0,1,2,3,4,5,6,7}}\n")
+    s = collective_stats(hlo, n_devices=64)
+    assert s.counts["all-reduce"] == 2
+    # first group has 2 members, second 8 — wire bytes reflect each
+    expected = int(2 * 1024 * 1 / 2) + int(2 * 1024 * 7 / 8)
+    assert s.wire_bytes["all-reduce"] == expected
+
+
+def test_collective_stats_default_group_size():
+    # no replica_groups annotation -> all n_devices participate
+    hlo = "%ar = f32[100] all-reduce(%x)\n"
+    s = collective_stats(hlo, n_devices=8)
+    assert s.wire_bytes["all-reduce"] == int(2 * 400 * 7 / 8)
+    assert s.total_operand_bytes == 400
+    assert s.total_wire_bytes == int(2 * 400 * 7 / 8)
+
+
+def test_collective_stats_tuple_result_start():
+    # async starts often carry tuple results (buffer pairs): both count
+    hlo = ("%rs-start = (f32[64], f32[64]) reduce-scatter(%x), "
+           "replica_groups={{0,1}}\n")
+    s = collective_stats(hlo, n_devices=2)
+    assert s.counts == {"reduce-scatter": 1}
+    assert s.operand_bytes["reduce-scatter"] == 2 * 64 * 4
+
+
+def test_collective_stats_ignores_non_collectives():
+    hlo = ("%d = f32[8,8] dot(%a, %b)\n"
+           "%t = f32[8,8] transpose(%d)\n")
+    s = collective_stats(hlo, n_devices=4)
+    assert s.counts == {}
+    assert s.total_wire_bytes == 0
