@@ -15,11 +15,11 @@ for EVERY arch family in the fixture (the ISSUE-2 acceptance gate).
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.dirname(__file__))
 
 FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
                        "calibration_measurements.json")
@@ -35,10 +35,11 @@ def regen_fixture(path: str = FIXTURE) -> None:
 def run(verbose: bool = True, out_dir: str = None) -> dict:
     import time
 
+    from common import write_bench
+
     from repro.calibrate import MeasurementStore, evaluate, fit_profile
     from repro.core import sweep as SW
 
-    out_dir = out_dir or str(_repo_root())
     engine = SW.SweepEngine()
     store = MeasurementStore.load(FIXTURE)
 
@@ -64,18 +65,13 @@ def run(verbose: bool = True, out_dir: str = None) -> dict:
         "by_arch": by_arch.to_json_dict(),
         "all_families_improved": by_family.all_groups_improved,
     }
-    json_path = os.path.join(out_dir, "BENCH_calibration.json")
-    with open(json_path, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=True)
-        f.write("\n")
-    md_path = os.path.join(out_dir, "BENCH_calibration.md")
-    with open(md_path, "w") as f:
-        f.write(by_family.to_markdown(
-            title="calibration accuracy by family (bundled synthetic "
-                  "fixtures)") + "\n\n")
-        f.write(by_arch.to_markdown(
-            title="calibration accuracy by arch") + "\n\n")
-        f.write(f"profile: `{profile.summary()}`\n")
+    md = (by_family.to_markdown(
+              title="calibration accuracy by family (bundled synthetic "
+                    "fixtures)") + "\n\n"
+          + by_arch.to_markdown(title="calibration accuracy by arch")
+          + "\n\n" + f"profile: `{profile.summary()}`\n")
+    json_path, md_path = write_bench("calibration", payload, md,
+                                     out_dir=out_dir)
 
     if verbose:
         print(f"calibration_mape,n_measurements,{len(store)}")
@@ -93,11 +89,6 @@ def run(verbose: bool = True, out_dir: str = None) -> dict:
         print(f"wrote {json_path}")
         print(f"wrote {md_path}")
     return payload
-
-
-def _repo_root():
-    from repro.calibrate.paths import repo_root
-    return repo_root()
 
 
 if __name__ == "__main__":

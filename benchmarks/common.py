@@ -22,6 +22,34 @@ EXP_DIR = _exp_dir()
 DRYRUN_DIR = os.path.join(EXP_DIR, "dryrun")
 
 
+def bench_out_dir() -> str:
+    """Default output dir for BENCH_* artifacts: the repo root (where CI
+    uploads them from)."""
+    try:
+        from repro.calibrate.paths import repo_root
+        return str(repo_root())
+    except ImportError:
+        return os.path.join(os.path.dirname(__file__), "..")
+
+
+def write_bench(name: str, payload: dict, md_text: str = None,
+                out_dir: str = None) -> tuple:
+    """Write BENCH_<name>.json (+ optional .md) so the perf/accuracy
+    trajectory is tracked across PRs; returns the written paths."""
+    out_dir = out_dir or bench_out_dir()
+    os.makedirs(out_dir, exist_ok=True)
+    json_path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    md_path = None
+    if md_text is not None:
+        md_path = os.path.join(out_dir, f"BENCH_{name}.md")
+        with open(md_path, "w") as f:
+            f.write(md_text if md_text.endswith("\n") else md_text + "\n")
+    return json_path, md_path
+
+
 def load_dryrun(mesh: str = "16x16") -> list[dict]:
     out = []
     for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):

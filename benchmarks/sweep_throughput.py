@@ -1,72 +1,274 @@
-"""Sweep-engine throughput: a 1,000+-cell capacity grid must clear in
-well under a second on CPU (ISSUE 1 acceptance), and every fit/OOM verdict
-must match a cell-by-cell ``planner.check`` exactly.
+"""Sweep-engine throughput + columnar-vs-cell parity benchmark.
 
-    PYTHONPATH=src python benchmarks/sweep_throughput.py [--verify]
+    PYTHONPATH=src python benchmarks/sweep_throughput.py
+        [--scale large|smoke|pr1] [--verify] [--jobs N] [--out DIR]
+        [--min-cells-per-sec N] [--min-speedup X]
 
-The grid is the paper's model (llava15-7b) over every 2-axis mesh
-factorization of a 256-chip pod x grad-accum x remat x global batch.
-``--verify`` additionally re-evaluates every cell through the slow
-un-memoized path (minutes, not timed) to prove byte-identical verdicts;
-the nightly tier-1 suite runs the same comparison on a smaller grid
-(tests/test_sweep.py).
+Times the SAME grid through both sweep modes:
+
+* ``columnar`` — the structure-of-arrays batch path (core/batch.py),
+* ``cell``    — the per-cell reference path (PR 1's memoized engine),
+
+asserts their verdicts and per-device peak bytes are byte-identical on
+every cell, and writes ``BENCH_sweep.json``/``.md`` (cells/sec, wall
+time, grid size, speedup per mode) via ``benchmarks/common.write_bench``
+so the perf trajectory is tracked across PRs.  Scales:
+
+* ``large`` (default): 124,416 cells — the ISSUE-3 acceptance grid
+  (>= 100k cells, >= 50x columnar speedup);
+* ``smoke``: ~18k cells — the CI perf gate (use with
+  ``--min-cells-per-sec`` / ``--min-speedup`` floors);
+* ``pr1``: the original 1,080-cell PR-1 grid (under_1s trajectory).
+
+``--verify`` additionally replays the 4,416-cell parity set — every
+arch x kind x backend x policy, with and without a calibration profile —
+through un-memoized ``planner.check`` cell by cell and fails on any
+byte difference (minutes, not timed).
 """
 
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import time
 
-from repro.configs import ShapeConfig
-from repro.core import planner, sweep as SW
+sys.path.insert(0, os.path.dirname(__file__))
+
+from common import write_bench  # noqa: E402
+
+from repro.configs import ShapeConfig, registered_archs  # noqa: E402
+from repro.core import planner, sweep as SW  # noqa: E402
+
+PARITY_CELLS = 4416
 
 
-def build_grid() -> SW.SweepGrid:
-    return SW.SweepGrid(
-        arch="llava15-7b",
-        chips=256,                              # 9 (data, model) splits
+def _bench_profile():
+    """Deterministic non-identity profile for the calibrated parity legs."""
+    from repro.calibrate.profile import CalibrationProfile
+    return CalibrationProfile(
+        coefficients={"static": 1.0173, "act_saved": 0.9641,
+                      "act_transient": 1.2089, "overhead": 0.8732},
+        chip_constant_bytes={"v5e": 201326592, "*": 67108864})
+
+
+def build_grid(scale: str = "large") -> SW.SweepGrid:
+    """The timed grid: the paper's model (llava15-7b) over every 2-axis
+    mesh factorization of 64/128/256-chip pods x optimizer x remat x
+    grad-accum x global batch x seq len x chip type."""
+    if scale == "pr1":                      # PR 1's original 1,080 cells
+        return SW.SweepGrid(
+            arch="llava15-7b", chips=256,
+            remats=("none", "block", "dots"),
+            grad_accums=(1, 2, 4, 8),
+            global_batches=(8, 16, 32, 64, 128, 256, 512, 1024, 2048,
+                            4096),
+            seq_lens=(2048,), chip="v5e", backend="tpu")
+    if scale == "smoke":                    # ~18k cells: CI perf gate
+        return SW.SweepGrid(
+            arch="llava15-7b", chips=(64, 256), chip="v5e",
+            optimizers=(None, "adafactor"),
+            remats=("none", "block", "dots"),
+            grad_accums=(1, 2, 4, 8),
+            global_batches=(8, 16, 32, 64, 128, 256, 512, 1024, 2048,
+                            4096, 8192, 16384),
+            seq_lens=(512, 1024, 2048, 4096), backend="tpu")
+    return SW.SweepGrid(                    # large: 124,416 cells
+        arch="llava15-7b", chips=(64, 128, 256),
+        chip=("v5e", "v6e", "h100"),
+        optimizers=(None, "adafactor", "adamw8bit"),
         remats=("none", "block", "dots"),
         grad_accums=(1, 2, 4, 8),
-        global_batches=(8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096),
-        seq_lens=(2048,),
-        chip="v5e",
-        backend="tpu")
+        global_batches=(8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096,
+                        8192, 16384),
+        seq_lens=(512, 1024, 2048, 4096), backend="tpu")
 
 
-def run(verbose: bool = True, verify: bool = False):
-    grid = build_grid()
-    res = SW.sweep(grid)
-    n = len(res)
-    assert n >= 1000, f"grid only produced {n} cells"
-    if verbose:
-        print(f"sweep_throughput,cells,{n}")
-        print(f"sweep_throughput,elapsed_s,{res.elapsed_s:.3f}")
-        print(f"sweep_throughput,cells_per_sec,{res.cells_per_sec:.0f}")
-        print(f"sweep_throughput,under_1s,{res.elapsed_s < 1.0}")
-        print(f"sweep_throughput,cells_fit,{len(res.fitting())}")
-        for chips, batch in res.frontier():
-            print(f"sweep_throughput,frontier,{chips},{batch}")
-    if verify:
-        t0 = time.perf_counter()
-        mismatches = 0
-        for r in res:
+def parity_set() -> list:
+    """The 4,416-cell parity set: PR 1's 1,080-cell throughput grid plus
+    per-arch train/serve grids on both oracle backends, the LLaVA frozen
+    policies, and calibrated variants — every cell re-checkable against
+    un-memoized ``planner.check``."""
+    profile = _bench_profile()
+    grids = [build_grid("pr1")]                               # 1,080
+    for arch in registered_archs():                           # 12 x 272
+        for backend in ("tpu", "cpu"):
+            for prof in ((None, profile) if backend == "tpu"
+                         else (None,)):
+                grids.append(SW.SweepGrid(                    # 64 train
+                    arch=arch, chips=8, remats=(None, "none"),
+                    grad_accums=(1, 2), global_batches=(8, 32),
+                    seq_lens=(512, 1024), backend=backend,
+                    profile=prof))
+        for kind in ("prefill", "decode"):
+            for backend in ("tpu", "cpu"):
+                grids.append(SW.SweepGrid(                    # 16 serve
+                    arch=arch, chips=8, kind=kind,
+                    global_batches=(4, 8), seq_lens=(1024, 2048),
+                    backend=backend))
+        grids.append(SW.SweepGrid(                            # 16 decode
+            arch=arch, chips=8, kind="decode",                # calibrated
+            global_batches=(4, 8), seq_lens=(1024, 2048),
+            backend="tpu", profile=profile))
+    from repro.core.sweep import LLAVA_STAGE1, LLAVA_STAGE2   # 2 x 36
+    for pol in (LLAVA_STAGE1, LLAVA_STAGE2):
+        grids.append(SW.SweepGrid(
+            arch="llava15-7b", chips=8, policy=pol,
+            grad_accums=(1, 3), global_batches=(8, 12),
+            seq_lens=(512, 1024, 2048), backend="cpu"))
+    return grids
+
+
+def _columns(res) -> list:
+    """(peak, fits, resolved knobs) per cell, for exact comparison."""
+    return [(r.peak_bytes, r.fits, r.arch, r.chip, r.optimizer, r.remat,
+             r.grad_accum, r.global_batch, r.seq_len,
+             tuple(sorted(r.mesh_shape.items()))) for r in res.results]
+
+
+def _verify_parity(verbose: bool) -> dict:
+    """Replay the parity set: columnar == cell == planner.check."""
+    t0 = time.perf_counter()
+    total = mismatches = 0
+    for grid in parity_set():
+        col = SW.SweepEngine().sweep(grid, mode="columnar")
+        cell = SW.SweepEngine().sweep(grid, mode="cell")
+        assert len(col) == len(cell)
+        if _columns(col) != _columns(cell):
+            mismatches += 1
+            if verbose:
+                print(f"MISMATCH columnar vs cell: {grid.arch} "
+                      f"{grid.kind} {grid.backend}")
+        for r in col.results:
             shape = ShapeConfig("cell", r.seq_len, r.global_batch, r.kind)
-            ref = planner.check(r.arch, shape, r.mesh_shape,
-                                backend=r.backend, grad_accum=r.grad_accum,
-                                remat=r.remat, chip=r.chip)
+            ref = planner.check(
+                r.arch, shape, r.mesh_shape, policy=grid.policy,
+                backend=r.backend, grad_accum=r.grad_accum, remat=r.remat,
+                optimizer=r.optimizer, chip=r.chip,
+                headroom=grid.headroom, profile=grid.profile)
             if ref.peak_bytes != r.peak_bytes or ref.fits != r.fits:
                 mismatches += 1
-                if verbose:
-                    print(f"MISMATCH: {r} vs {ref}")
-        if verbose:
-            print(f"sweep_throughput,verify_cells,{n}")
-            print(f"sweep_throughput,verify_mismatches,{mismatches}")
-            print(f"sweep_throughput,verify_s,"
-                  f"{time.perf_counter() - t0:.1f}")
-        assert mismatches == 0, f"{mismatches} cells diverged from check()"
-    return res
+                if verbose and mismatches < 5:
+                    print(f"MISMATCH vs check(): {r} vs {ref}")
+        total += len(col)
+    assert total == PARITY_CELLS, \
+        f"parity set drifted: {total} cells != {PARITY_CELLS}"
+    return {"cells": total, "mismatches": mismatches,
+            "seconds": round(time.perf_counter() - t0, 1)}
+
+
+def run(verbose: bool = True, verify: bool = False, scale: str = "large",
+        jobs: int = 1, out_dir: str = None) -> dict:
+    grid = build_grid(scale)
+    n = grid.size()
+
+    col = SW.SweepEngine().sweep(grid, mode="columnar", jobs=jobs)
+    assert col.columns is not None, "columnar mode did not engage"
+    cell = SW.SweepEngine().sweep(grid, mode="cell")
+    assert len(col) == len(cell) == n
+
+    # full-grid parity (arrays first, then every materialized field)
+    import numpy as np
+    peaks = np.array([r.peak_bytes for r in cell.results])
+    fits = np.array([r.fits for r in cell.results])
+    grid_mismatches = int((peaks != col.columns.peak_bytes).sum()
+                          + (fits != col.columns.fits).sum())
+    if _columns(col) != _columns(cell):
+        grid_mismatches = max(grid_mismatches, 1)
+    speedup = col.cells_per_sec / max(cell.cells_per_sec, 1e-9)
+
+    payload = {
+        "benchmark": "sweep_throughput",
+        "scale": scale,
+        "grid_cells": n,
+        "jobs": jobs,
+        "modes": {
+            "columnar": {"elapsed_s": round(col.elapsed_s, 4),
+                         "cells_per_sec": round(col.cells_per_sec)},
+            "cell": {"elapsed_s": round(cell.elapsed_s, 4),
+                     "cells_per_sec": round(cell.cells_per_sec)},
+        },
+        "speedup": round(speedup, 1),
+        "grid_parity_mismatches": grid_mismatches,
+        "cells_fit": col.fit_count,
+        "frontier": col.frontier(),
+    }
+    if verify:
+        payload["verify"] = _verify_parity(verbose)
+
+    md = [f"# sweep throughput ({scale} grid: {n:,} cells)", "",
+          "| mode | wall time (s) | cells/sec |",
+          "|------|---------------|-----------|",
+          f"| columnar | {col.elapsed_s:.3f} "
+          f"| {col.cells_per_sec:,.0f} |",
+          f"| cell | {cell.elapsed_s:.3f} "
+          f"| {cell.cells_per_sec:,.0f} |", "",
+          f"speedup: **{speedup:.1f}x** — parity mismatches: "
+          f"{grid_mismatches}"]
+    if verify:
+        v = payload["verify"]
+        md.append(f"\nverify: {v['cells']:,} parity-set cells vs "
+                  f"planner.check, {v['mismatches']} mismatches "
+                  f"({v['seconds']}s)")
+    json_path, md_path = write_bench("sweep", payload, "\n".join(md),
+                                     out_dir=out_dir)
+
+    if verbose:
+        print(f"sweep_throughput,scale,{scale}")
+        print(f"sweep_throughput,cells,{n}")
+        print(f"sweep_throughput,columnar_elapsed_s,{col.elapsed_s:.3f}")
+        print(f"sweep_throughput,columnar_cells_per_sec,"
+              f"{col.cells_per_sec:.0f}")
+        print(f"sweep_throughput,cell_elapsed_s,{cell.elapsed_s:.3f}")
+        print(f"sweep_throughput,cell_cells_per_sec,"
+              f"{cell.cells_per_sec:.0f}")
+        print(f"sweep_throughput,speedup,{speedup:.1f}")
+        print(f"sweep_throughput,grid_parity_mismatches,{grid_mismatches}")
+        print(f"sweep_throughput,cells_fit,{col.fit_count}")
+        for chips, batch in col.frontier():
+            print(f"sweep_throughput,frontier,{chips},{batch}")
+        if verify:
+            v = payload["verify"]
+            print(f"sweep_throughput,verify_cells,{v['cells']}")
+            print(f"sweep_throughput,verify_mismatches,{v['mismatches']}")
+            print(f"sweep_throughput,verify_s,{v['seconds']}")
+        print(f"wrote {json_path}")
+        print(f"wrote {md_path}")
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=("large", "smoke", "pr1"),
+                    default="large")
+    ap.add_argument("--verify", action="store_true",
+                    help="replay the 4,416-cell parity set through "
+                         "un-memoized planner.check (slow)")
+    ap.add_argument("--jobs", type=int, default=1)
+    ap.add_argument("--out", default=None,
+                    help="output dir for BENCH_sweep.{json,md} "
+                         "(default: repo root)")
+    ap.add_argument("--min-cells-per-sec", type=float, default=0,
+                    help="fail unless columnar throughput >= this floor")
+    ap.add_argument("--min-speedup", type=float, default=0,
+                    help="fail unless columnar/cell speedup >= this floor")
+    args = ap.parse_args(argv)
+    payload = run(verify=args.verify, scale=args.scale, jobs=args.jobs,
+                  out_dir=args.out)
+    ok = payload["grid_parity_mismatches"] == 0
+    if args.verify:
+        ok = ok and payload["verify"]["mismatches"] == 0
+    col_cps = payload["modes"]["columnar"]["cells_per_sec"]
+    if args.min_cells_per_sec and col_cps < args.min_cells_per_sec:
+        print(f"FAIL: columnar {col_cps:,.0f} cells/s below floor "
+              f"{args.min_cells_per_sec:,.0f}")
+        ok = False
+    if args.min_speedup and payload["speedup"] < args.min_speedup:
+        print(f"FAIL: speedup {payload['speedup']:.1f}x below floor "
+              f"{args.min_speedup:.1f}x")
+        ok = False
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":
-    res = run(verify="--verify" in sys.argv)
-    sys.exit(0 if res.elapsed_s < 1.0 else 1)
+    sys.exit(main())

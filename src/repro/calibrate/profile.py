@@ -103,6 +103,16 @@ class CalibrationProfile:
             cache_bytes=scale(pred.cache_bytes, self.coef("overhead")),
             calibration_bytes=self.chip_offset(chip))
 
+    def scale_batch(self, values, term: str):
+        """Vectorized affine twin of the per-field scaling in ``apply``:
+        ``int(round(v * coef(term)))`` over an int64 array.  Same float64
+        product, same round-half-even — the columnar sweep path
+        (repro.core.batch) stays byte-identical to per-cell application.
+        """
+        import numpy as np
+        c = self.coef(term)
+        return np.rint(np.asarray(values, np.float64) * c).astype(np.int64)
+
     # -- identity/serialization ---------------------------------------------
     def to_dict(self) -> dict:
         return {

@@ -1,0 +1,665 @@
+"""Columnar batch evaluation of the Eq.1 memory model.
+
+The per-cell path (``SweepEngine.evaluate`` -> ``predictor.assemble``)
+costs tens of microseconds of Python per cell; a real pre-launch capacity
+search covers 10^5-10^6 cells (every mesh factorization x remat x
+optimizer x grad-accum x batch x seq-len x chip type), where interpreter
+overhead — not arithmetic — is the bound.  This module lowers the
+predictor's component groups into structure-of-arrays NumPy kernels that
+evaluate ALL cells of a :class:`repro.core.sweep.SweepGrid` at once:
+
+* per-layer byte terms are factored into (arch-dependent,
+  cell-independent) :class:`repro.core.factors.TermSpec` coefficient
+  tuples built once per arch x policy — the SAME specs the scalar path
+  evaluates, so the two paths share one source of truth;
+* cell-dependent knobs (micro-batch, seq-len, encoder len, loss/flash
+  chunks) become int64 column arrays over the grid's unique knob
+  triples, contracted against the specs in ``O(layers x cells)`` array
+  ops;
+* mesh shard counts come from :func:`batch_shard_factor`, an exact
+  broadcast transliteration of ``mesh_ctx.assign_axes`` — divisibility,
+  axis-reuse and FSDP/ZeRO greedy assignment are computed per cell with
+  boolean masks, in integer arithmetic;
+* :class:`~repro.calibrate.profile.CalibrationProfile` application is a
+  vectorized affine transform (one multiply + round per term group).
+
+Everything is exact int64 + floor-division arithmetic (float enters only
+where the scalar path itself uses floats: the calibration coefficients
+and the optimizer-transient fraction, reproduced operation-for-operation)
+so the columnar path is BYTE-IDENTICAL to per-cell ``planner.check`` —
+asserted cell-by-cell in tests/test_batch.py and on 100k+-cell grids by
+``benchmarks/sweep_throughput.py --verify``.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core import factors as F
+from repro.core import planner as PL
+from repro.core import predictor as PR
+from repro.core import sweep as SW
+from repro.core.spec import dtype_bytes
+
+I64 = np.int64
+
+
+# ---------------------------------------------------------------------------
+# vectorized shard resolution
+# ---------------------------------------------------------------------------
+
+
+def batch_shard_factor(dims, axes, sizes: dict, rules: dict,
+                       extra=()) -> np.ndarray:
+    """Exact broadcast twin of :func:`repro.mesh_ctx.shard_factor`.
+
+    ``dims`` entries and ``sizes`` values may be ints or broadcastable
+    int64 arrays; the result has the full broadcast shape.  The greedy
+    axis assignment of ``mesh_ctx.assign_axes`` (divisibility checks,
+    one-use-per-axis, FSDP/ZeRO ``extra`` pass, the ``layers`` stack-dim
+    exclusion) is transliterated with per-cell boolean masks.
+
+    Mesh axes absent from a given mesh may be supplied as size-1 entries:
+    a size-1 axis multiplies every factor by 1 and never changes another
+    axis's divisibility, so the result equals the scalar path's
+    skip-missing behaviour (property-tested in tests/test_batch.py).
+    """
+    arrs = [np.asarray(d, I64) for d in dims]
+    svals = {a: np.asarray(v, I64) for a, v in sizes.items()}
+    shape = np.broadcast_shapes(*(a.shape for a in arrs),
+                                *(v.shape for v in svals.values()))
+    ones = np.ones(shape, I64)
+    totals = [ones] * len(arrs)        # per-dim applied shard product
+    denom = ones
+    used: dict[str, np.ndarray] = {}
+    for i, ax in enumerate(axes):
+        if not ax:
+            continue
+        for a in rules.get(ax, ()):
+            if a not in svals:
+                continue
+            ok = np.broadcast_to(arrs[i] % (totals[i] * svals[a]) == 0,
+                                 shape)
+            prev = used.get(a)
+            if prev is not None:
+                ok = ok & ~prev
+            totals[i] = np.where(ok, totals[i] * svals[a], totals[i])
+            denom = np.where(ok, denom * svals[a], denom)
+            used[a] = ok if prev is None else (prev | ok)
+    for a in extra:
+        if a not in svals:
+            continue
+        prev = used.get(a)
+        avail = ~prev if prev is not None else np.ones(shape, bool)
+        assigned = np.zeros(shape, bool)
+        for i in range(len(arrs)):
+            # never FSDP/ZeRO-shard the scan-stack dim (see mesh_ctx)
+            if axes[i] == "layers":
+                continue
+            ok = avail & ~assigned & np.broadcast_to(
+                arrs[i] % (totals[i] * svals[a]) == 0, shape)
+            totals[i] = np.where(ok, totals[i] * svals[a], totals[i])
+            denom = np.where(ok, denom * svals[a], denom)
+            assigned = assigned | ok
+        used[a] = assigned if prev is None else (prev | assigned)
+    return denom
+
+
+def eval_term_batch(spec: F.TermSpec, env: dict, sizes: dict,
+                    rules: dict) -> np.ndarray:
+    """Batch twin of :func:`repro.core.factors.eval_term`: same
+    ``mult * prod(dims) * nbytes // max(denom, 1)`` integer arithmetic,
+    broadcast over the knob columns in ``env`` and the mesh ``sizes``."""
+    dims = tuple(env[d] if isinstance(d, str) else d for d in spec.dims)
+    denom = batch_shard_factor(dims, spec.axes, sizes, rules)
+    q = np.asarray(spec.mult * spec.nbytes, I64)
+    for d in dims:
+        q = q * np.asarray(d, I64)
+    return q // np.maximum(denom, 1)
+
+
+# ---------------------------------------------------------------------------
+# grid -> column arrays
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CellColumns:
+    """Structure-of-arrays twin of ``SweepGrid.cells()``: the exact same
+    cells in the exact same order, as int64 code columns into the small
+    per-axis value tables instead of one SweepCell object per cell."""
+
+    n: int
+    arches: tuple
+    chips: tuple
+    meshes: tuple                   # of dict
+    opts: tuple                     # raw (may contain None)
+    remats: tuple                   # raw (may contain None)
+    pairs: tuple                    # (grad_accum, global_batch), enum order
+    seqs: tuple
+    kind: str
+    backend: str
+    # per-cell code columns (int64)
+    arch_c: np.ndarray
+    chip_c: np.ndarray
+    mesh_c: np.ndarray
+    opt_c: np.ndarray
+    remat_c: np.ndarray
+    pair_c: np.ndarray
+    seq_c: np.ndarray
+    # per-cell knob values (int64)
+    accum: np.ndarray
+    gb: np.ndarray
+    seq: np.ndarray
+
+
+def build_columns(grid: "SW.SweepGrid") -> CellColumns:
+    """Lower a grid to code columns.  Mirrors ``SweepGrid.cells()``:
+    arch -> chip -> mesh -> optimizer -> remat -> accum -> batch -> seq,
+    innermost fastest, with non-divisible (batch, accum) pairs dropped."""
+    arches = tuple(SW.normalize_arch(a) for a in SW._seq(grid.arch))
+    chips = tuple(SW._seq(grid.chip))
+    meshes = tuple(grid.meshes())
+    opts = tuple(SW._seq(grid.optimizers))
+    remats = tuple(SW._seq(grid.remats))
+    pairs = tuple((int(a), int(g)) for a in SW._seq(grid.grad_accums)
+                  for g in SW._seq(grid.global_batches) if not g % a)
+    seqs = tuple(int(s) for s in SW._seq(grid.seq_lens))
+
+    sizes = [len(arches), len(chips), len(meshes), len(opts), len(remats),
+             len(pairs), len(seqs)]
+    n = math.prod(sizes)
+    if n == 0:
+        z = np.zeros(0, I64)
+        return CellColumns(0, arches, chips, meshes, opts, remats, pairs,
+                           seqs, grid.kind, grid.backend,
+                           z, z, z, z, z, z, z, z, z, z)
+    idx = np.arange(n, dtype=I64)
+    codes = []
+    for s in reversed(sizes):
+        codes.append(idx % s)
+        idx //= s
+    seq_c, pair_c, remat_c, opt_c, mesh_c, chip_c, arch_c = codes
+    accum = np.array([p[0] for p in pairs], I64)[pair_c]
+    gb = np.array([p[1] for p in pairs], I64)[pair_c]
+    seq = np.array(seqs, I64)[seq_c]
+    return CellColumns(n, arches, chips, meshes, opts, remats, pairs, seqs,
+                       grid.kind, grid.backend, arch_c, chip_c, mesh_c,
+                       opt_c, remat_c, pair_c, seq_c, accum, gb, seq)
+
+
+# ---------------------------------------------------------------------------
+# lazy result store
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ColumnarResults:
+    """Array-backed sweep verdicts; ``result(i)`` materializes one
+    :class:`~repro.core.sweep.SweepResult` identical to the cell path's."""
+
+    n: int
+    kind: str
+    backend: str
+    arch_names: tuple
+    chip_names: tuple
+    meshes: tuple                    # of dict
+    n_chips_by_mesh: np.ndarray
+    opt_names: tuple                 # resolved (never None)
+    remat_names: tuple               # resolved
+    arch_c: np.ndarray
+    chip_c: np.ndarray
+    mesh_c: np.ndarray
+    opt_c: np.ndarray                # codes into opt_names
+    remat_c: np.ndarray              # codes into remat_names
+    grad_accum: np.ndarray
+    global_batch: np.ndarray
+    seq_len: np.ndarray
+    peak_bytes: np.ndarray
+    budget_bytes: np.ndarray
+    fits: np.ndarray                 # bool
+
+    @property
+    def n_chips(self) -> np.ndarray:
+        return self.n_chips_by_mesh[self.mesh_c]
+
+    def result(self, i: int) -> "SW.SweepResult":
+        return SW.SweepResult(
+            arch=self.arch_names[self.arch_c[i]],
+            chip=self.chip_names[self.chip_c[i]],
+            mesh_shape=dict(self.meshes[self.mesh_c[i]]),
+            n_chips=int(self.n_chips_by_mesh[self.mesh_c[i]]),
+            optimizer=self.opt_names[self.opt_c[i]],
+            remat=self.remat_names[self.remat_c[i]],
+            grad_accum=int(self.grad_accum[i]),
+            global_batch=int(self.global_batch[i]),
+            seq_len=int(self.seq_len[i]),
+            kind=self.kind, backend=self.backend,
+            peak_bytes=int(self.peak_bytes[i]),
+            budget_bytes=int(self.budget_bytes[i]),
+            fits=bool(self.fits[i]), prediction=None)
+
+# ---------------------------------------------------------------------------
+# per-arch component tables
+# ---------------------------------------------------------------------------
+
+
+def _act_entries(row) -> list:
+    """(name, ActTerm) entries with the exact dict semantics of
+    ``factors.layer_act_terms`` (keyed by name, last value wins, first
+    insertion order)."""
+    d = {}
+    for t in row.layer.acts:
+        d[t.name] = t
+    return list(d.items())
+
+
+_DIM_TOKENS = {"B": "mb", "S": "seq", "T": "enc"}
+
+
+def _sym_dims(term) -> tuple:
+    """ActTerm shape -> TermSpec-style symbolic dims."""
+    return tuple(_DIM_TOKENS[d] if isinstance(d, str) else int(d)
+                 for d in term.shape)
+
+
+def _resolve_dims(dims, env) -> tuple:
+    return tuple(env[d] if isinstance(d, str) else d for d in dims)
+
+
+def _dims_prod(dims) -> np.ndarray:
+    q = np.asarray(1, I64)
+    for d in dims:
+        q = q * np.asarray(d, I64)
+    return q
+
+
+@dataclass
+class _ArchTables:
+    """Component-group tables for one arch over (meshes x knob triples)."""
+
+    opt_res: tuple                  # resolved optimizer per opt code
+    remat_res: tuple                # resolved remat per remat code
+    remat_idx: np.ndarray           # remat code -> axis-0 index of `saved`
+    static_sum: np.ndarray          # (n_mesh, n_opt, 2)  [cls: eff 2 / 4]
+    opt_trans: np.ndarray           # (n_mesh, n_opt)
+    static_scaled: Optional[np.ndarray]   # profile-scaled static group
+    saved: np.ndarray               # (n_remat_eval, n_mesh, T)
+    transient: np.ndarray           # (n_mesh, T)
+    loss: np.ndarray                # (n_mesh, T)
+    inputs: np.ndarray              # (n_mesh, T)
+    cache: np.ndarray               # (n_mesh, T)
+    embed: int
+
+
+def _knob_env(cfg, cols: CellColumns) -> tuple:
+    """Int64 knob columns over the grid's unique (accum, batch, seq)
+    triples — the batch twin of ``factors.term_env``."""
+    from repro.models.transformer import LOSS_CHUNK
+    n_seq = len(cols.seqs)
+    accum_t = np.repeat(np.array([p[0] for p in cols.pairs], I64), n_seq)
+    gb_t = np.repeat(np.array([p[1] for p in cols.pairs], I64), n_seq)
+    seq_t = np.tile(np.array(cols.seqs, I64), len(cols.pairs))
+    mb_t = np.maximum(gb_t // np.maximum(accum_t, 1), 1)
+    if cfg.encdec:
+        ratio = cfg.encdec.enc_seq_ratio
+        # exact Python int(seq * ratio), as make_context computes it
+        enc_t = np.array([int(s * ratio) for s in seq_t.tolist()], I64)
+    else:
+        enc_t = np.zeros(len(seq_t), I64)
+    env = {"mb": mb_t, "gb": gb_t, "seq": seq_t, "enc": enc_t,
+           "slen": seq_t,                      # make_context: max_len=seq
+           "chunk": np.minimum(LOSS_CHUNK, seq_t),
+           "qc": np.minimum(F.FLASH_CHUNK, seq_t),
+           "tok_cross": np.where(enc_t > 0, enc_t, seq_t),
+           "cache_mult": 3 if (cols.backend == "cpu"
+                               and cols.kind == "decode") else 1}
+    return env, accum_t, gb_t, seq_t
+
+
+def _arch_tables(engine, arch: str, grid, cols: CellColumns,
+                 profile, jobs: int = 1) -> _ArchTables:
+    from repro.launch.mesh import arch_rules
+    cfg, model, rows = engine._arch_state(arch, grid.policy)
+    kind, backend = cols.kind, cols.backend
+    rules = arch_rules(cfg, kind)
+    env, accum_t, gb_t, seq_t = _knob_env(cfg, cols)
+    opt_res = tuple(o or cfg.optimizer for o in cols.opts)
+    remat_res = tuple(r or cfg.remat for r in cols.remats)
+    remat_eval = tuple(dict.fromkeys(remat_res))
+    remat_idx = np.array([remat_eval.index(r) for r in remat_res], I64)
+    # backend-derived scalars (bf16 multipliers, opt-transient fraction)
+    rep_ctx = PL.make_context(
+        cfg, dict(cols.meshes[0]), kind=kind, global_batch=int(gb_t[0]),
+        seq_len=int(seq_t[0]), backend=backend)
+
+    mesh_ids = list(range(len(cols.meshes)))
+    if jobs > 1 and len(mesh_ids) > 1:
+        from concurrent.futures import ThreadPoolExecutor
+        chunks = [c.tolist() for c in
+                  np.array_split(np.asarray(mesh_ids), jobs) if len(c)]
+        with ThreadPoolExecutor(max_workers=len(chunks)) as ex:
+            parts = list(ex.map(
+                lambda ids: _mesh_chunk_tables(
+                    cfg, model, rows, rules, rep_ctx, cols, env, profile,
+                    opt_res, remat_eval, ids), chunks))
+        first = parts[0]
+        cat = lambda pick, axis: np.concatenate(
+            [pick(p) for p in parts], axis=axis)
+        return _ArchTables(
+            opt_res=opt_res, remat_res=remat_res, remat_idx=remat_idx,
+            static_sum=cat(lambda p: p.static_sum, 0),
+            opt_trans=cat(lambda p: p.opt_trans, 0),
+            static_scaled=None if first.static_scaled is None
+            else cat(lambda p: p.static_scaled, 0),
+            saved=cat(lambda p: p.saved, 1),
+            transient=cat(lambda p: p.transient, 0),
+            loss=cat(lambda p: p.loss, 0),
+            inputs=cat(lambda p: p.inputs, 0),
+            cache=cat(lambda p: p.cache, 0),
+            embed=first.embed)
+    part = _mesh_chunk_tables(cfg, model, rows, rules, rep_ctx, cols, env,
+                              profile, opt_res, remat_eval, mesh_ids)
+    return _ArchTables(
+        opt_res=opt_res, remat_res=remat_res, remat_idx=remat_idx,
+        static_sum=part.static_sum, opt_trans=part.opt_trans,
+        static_scaled=part.static_scaled, saved=part.saved,
+        transient=part.transient, loss=part.loss, inputs=part.inputs,
+        cache=part.cache, embed=part.embed)
+
+
+@dataclass
+class _ChunkTables:
+    static_sum: np.ndarray
+    opt_trans: np.ndarray
+    static_scaled: Optional[np.ndarray]
+    saved: np.ndarray
+    transient: np.ndarray
+    loss: np.ndarray
+    inputs: np.ndarray
+    cache: np.ndarray
+    embed: int
+
+
+def _mesh_chunk_tables(cfg, model, rows, rules, rep_ctx,
+                       cols: CellColumns, env: dict, profile,
+                       opt_res: tuple, remat_eval: tuple,
+                       mesh_ids: list) -> _ChunkTables:
+    kind, backend = cols.kind, cols.backend
+    meshes = [cols.meshes[i] for i in mesh_ids]
+    n_mesh = len(meshes)
+    T = len(cols.pairs) * len(cols.seqs)
+    axes_names = sorted({a for m in meshes for a in m})
+    sizes1 = {a: np.array([m.get(a, 1) for m in meshes], I64)
+              for a in axes_names}
+    sizes2 = {a: v[:, None] for a, v in sizes1.items()}
+    shape2 = (n_mesh, T)
+    full = lambda v: np.broadcast_to(np.asarray(v, I64), shape2)
+
+    # -- static group (params / grads / optimizer states / output copy) --
+    train = kind == "train"
+    param_arr = np.zeros(n_mesh, I64)
+    outcopy_arr = np.zeros(n_mesh, I64)
+    grad_arr = np.zeros((2, n_mesh), I64)          # cls: eff_grad 2 / 4
+    opt_arr = np.zeros((len(opt_res), n_mesh), I64)
+    p_extra = ("data",) if cfg.fsdp else ()
+    for r in rows:
+        row_param = np.zeros(n_mesh, I64)
+        for p in r.layer.params.values():
+            shape, axes = F._stacked(p, r)
+            pden = batch_shard_factor(shape, axes, sizes1, rules, p_extra)
+            row_param = row_param + p.nbytes * r.repeat // pden
+            if train and r.trainable:
+                nsize = p.size * r.repeat
+                grad_arr[0] += nsize * 2 // pden
+                grad_arr[1] += nsize * 4 // pden
+                # ZeRO: opt states always shard over data on top of TP
+                oden = pden if cfg.fsdp else batch_shard_factor(
+                    shape, axes, sizes1, rules, ("data",))
+                rep_o = 1 if r.scanned else r.repeat
+                for oi, oname in enumerate(opt_res):
+                    ob = F.opt_bytes_for(p, shape, oname,
+                                         oname != "adafactor")
+                    opt_arr[oi] += ob * rep_o // oden
+        param_arr += row_param
+        if train and r.trainable:
+            outcopy_arr += row_param
+    static_sum = (param_arr + outcopy_arr)[:, None, None] \
+        + opt_arr.T[:, :, None] + grad_arr.T[:, None, :]
+    frac = rep_ctx.opt_transient_frac
+    opt_trans = np.zeros((n_mesh, len(opt_res)), I64)
+    if frac:
+        for m in range(n_mesh):
+            for oi in range(len(opt_res)):
+                opt_trans[m, oi] = int(frac * int(opt_arr[oi, m]))
+    static_scaled = None
+    if profile is not None:
+        c_s = profile.coef("static")
+        sc = lambda v: int(round(int(v) * c_s))
+        static_scaled = np.zeros((n_mesh, len(opt_res), 2), I64)
+        for m in range(n_mesh):
+            base = sc(param_arr[m]) + sc(outcopy_arr[m])
+            for oi in range(len(opt_res)):
+                for ci in range(2):
+                    static_scaled[m, oi, ci] = base \
+                        + sc(grad_arr[ci, m]) + sc(opt_arr[oi, m])
+
+    # -- activation group (saved-for-backward + worst transient) ---------
+    zeros2 = np.zeros(shape2, I64)
+    saved_stack = np.zeros((len(remat_eval), n_mesh, T), I64)
+    if kind == "train":
+        worst = zeros2
+        blocks: dict = {}
+        for r in rows:
+            entries = _act_entries(r)
+            if not entries:
+                continue
+            saved_vals, trans_vals, by_name = [], [], {}
+            for name, t in entries:
+                dims = _resolve_dims(_sym_dims(t), env)
+                taxes = t.axes if t.axes else (None,) * len(dims)
+                denom = np.maximum(
+                    batch_shard_factor(dims, taxes, sizes2, rules), 1)
+                q = _dims_prod(dims)
+                sv = q * F.eff_act_nbytes(dtype_bytes(t.dtype), rep_ctx,
+                                          True) // denom
+                tv = q * F.eff_act_nbytes(dtype_bytes(t.dtype), rep_ctx,
+                                          False) // denom
+                saved_vals.append(sv)
+                trans_vals.append(tv)
+                by_name[name] = sv
+            S_full = sum(saved_vals)
+            T_full = sum(trans_vals)
+            S_dots = sum((v for t, v in zip(r.layer.acts, saved_vals)
+                          if F._is_dot_term(t)), np.asarray(0, I64))
+            first = r.layer.acts[0]
+            S_block = by_name.get(first.name) \
+                if (first.name.endswith(".in")
+                    and r.layer.kind in ("rmsnorm", "layernorm")) else None
+            inv = r.layer.meta.get("invocation_repeat")
+            if r.trainable:
+                for ri, rname in enumerate(remat_eval):
+                    if inv:
+                        saved_stack[ri] += S_full * inv
+                    elif (not r.scanned) or rname == "none":
+                        saved_stack[ri] += S_full * r.repeat
+                    elif rname == "dots":
+                        saved_stack[ri] += S_dots * r.repeat
+                    elif S_block is not None:
+                        saved_stack[ri] += S_block * r.repeat
+            tspec = F.flash_tile_spec(r)
+            tile = 0 if tspec is None \
+                else eval_term_batch(tspec, env, sizes2, rules)
+            t_row = 2 * T_full + 2 * tile if r.trainable \
+                else T_full + tile
+            if r.scanned:
+                blocks[r.module_path] = blocks.get(r.module_path, 0) + t_row
+            else:
+                worst = np.maximum(worst, t_row)
+        bmax = zeros2
+        for v in blocks.values():
+            bmax = np.maximum(bmax, v)
+        transient = np.maximum(worst, bmax)
+    elif kind == "prefill":
+        blocks = {}
+        for r in rows:
+            if not r.scanned:
+                continue
+            t_row = np.asarray(0, I64)
+            entries = _act_entries(r)
+            if entries:
+                T_full = np.asarray(0, I64)
+                for name, t in entries:
+                    dims = _resolve_dims(_sym_dims(t), env)
+                    taxes = t.axes if t.axes else (None,) * len(dims)
+                    denom = np.maximum(
+                        batch_shard_factor(dims, taxes, sizes2, rules), 1)
+                    T_full = T_full + _dims_prod(dims) \
+                        * F.eff_act_nbytes(dtype_bytes(t.dtype), rep_ctx,
+                                           False) // denom
+                tspec = F.flash_tile_spec(r)
+                tile = 0 if tspec is None \
+                    else eval_term_batch(tspec, env, sizes2, rules)
+                t_row = T_full + tile
+            blocks[r.module_path] = blocks.get(r.module_path, 0) + t_row
+        transient = zeros2
+        for v in blocks.values():
+            transient = np.maximum(transient, v)
+    else:                                           # decode
+        transient = zeros2
+        for group in PR.decode_transient_groups(rows):
+            t = sum(eval_term_batch(s, env, sizes2, rules) for s in group)
+            transient = np.maximum(transient, t)
+
+    # -- overhead group (loss head, batch inputs, serve caches) ----------
+    loss = full(sum(eval_term_batch(s, env, sizes2, rules)
+                    for s in PR.loss_specs(cfg, kind)))
+    if kind == "train":
+        cache = full(0)
+    else:
+        cache = full(sum((eval_term_batch(s, env, sizes2, rules)
+                          for s in PR.cache_specs(rows)),
+                         np.asarray(0, I64)))
+    embed = PR.embed_gather_const(rows, backend)
+
+    from repro.configs import ShapeConfig
+    gs_index: dict = {}
+    gs_order: list = []
+    for _, g in cols.pairs:
+        for s in cols.seqs:
+            if (g, s) not in gs_index:
+                gs_index[(g, s)] = len(gs_order)
+                gs_order.append((g, s))
+    gb_t, seq_t = env["gb"], env["seq"]
+    t_to_gs = np.array([gs_index[(int(g), int(s))]
+                        for g, s in zip(gb_t.tolist(), seq_t.tolist())],
+                       I64)
+    input_gs = np.zeros((n_mesh, len(gs_order)), I64)
+    for gi, (g, s) in enumerate(gs_order):
+        tot = np.zeros(n_mesh, I64)
+        for arr in model.batch_spec(ShapeConfig("tmp", s, g, kind)).values():
+            ax = ("batch",) + (None,) * (len(arr.shape) - 1)
+            den = batch_shard_factor(arr.shape, ax, sizes1, rules)
+            tot += math.prod(arr.shape) * arr.dtype.itemsize \
+                // np.maximum(den, 1)
+        input_gs[:, gi] = tot
+    inputs = input_gs[:, t_to_gs]
+
+    return _ChunkTables(
+        static_sum=static_sum, opt_trans=opt_trans,
+        static_scaled=static_scaled,
+        saved=np.ascontiguousarray(
+            np.broadcast_to(saved_stack, (len(remat_eval),) + shape2)),
+        transient=full(transient), loss=loss, inputs=inputs, cache=cache,
+        embed=embed)
+
+
+# ---------------------------------------------------------------------------
+# the columnar sweep driver
+# ---------------------------------------------------------------------------
+
+
+def _intern(table: dict, names: list, name: str) -> int:
+    if name not in table:
+        table[name] = len(names)
+        names.append(name)
+    return table[name]
+
+
+def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
+    """Evaluate every cell of ``grid`` columnarly; byte-identical to the
+    per-cell path (``SweepEngine.evaluate`` per ``grid.cells()`` cell)."""
+    t0 = time.perf_counter()
+    cols = build_columns(grid)
+    if cols.n == 0:
+        return SW.SweepResults(grid=grid, results=[],
+                               elapsed_s=time.perf_counter() - t0)
+    profile = grid.profile
+    n = cols.n
+    n_seq = len(cols.seqs)
+    peak = np.zeros(n, I64)
+    opt_names: list = []
+    remat_names: list = []
+    opt_tbl: dict = {}
+    remat_tbl: dict = {}
+    res_opt_c = np.zeros(n, I64)
+    res_remat_c = np.zeros(n, I64)
+    block = n // len(cols.arches)
+    for ai, arch in enumerate(cols.arches):
+        sl = slice(ai * block, (ai + 1) * block)
+        tabs = _arch_tables(engine, arch, grid, cols, profile, jobs=jobs)
+        m_c = cols.mesh_c[sl]
+        o_c = cols.opt_c[sl]
+        t_c = cols.pair_c[sl] * n_seq + cols.seq_c[sl]
+        cls_c = (cols.accum[sl] > 1).astype(I64)
+        r_c = tabs.remat_idx[cols.remat_c[sl]]
+        saved = tabs.saved[r_c, m_c, t_c]
+        trans = tabs.transient[m_c, t_c]
+        loss = tabs.loss[m_c, t_c]
+        inp = tabs.inputs[m_c, t_c]
+        cache = tabs.cache[m_c, t_c]
+        if profile is None:
+            peak[sl] = (tabs.static_sum[m_c, o_c, cls_c]
+                        + tabs.opt_trans[m_c, o_c]
+                        + saved + trans + tabs.embed + loss + inp + cache)
+        else:
+            # assemble() folds embed gathers + the optimizer-update
+            # transient into act_transient BEFORE the profile scales it;
+            # loss/input/cache round separately, exactly like apply()
+            chip_off = np.array([profile.chip_offset(c)
+                                 for c in cols.chips], I64)[cols.chip_c[sl]]
+            peak[sl] = (tabs.static_scaled[m_c, o_c, cls_c]
+                        + profile.scale_batch(saved, "act_saved")
+                        + profile.scale_batch(
+                            trans + tabs.embed + tabs.opt_trans[m_c, o_c],
+                            "act_transient")
+                        + profile.scale_batch(loss, "overhead")
+                        + profile.scale_batch(inp, "overhead")
+                        + profile.scale_batch(cache, "overhead")
+                        + chip_off)
+        per_opt = np.array([_intern(opt_tbl, opt_names, o)
+                            for o in tabs.opt_res], I64)
+        res_opt_c[sl] = per_opt[o_c]
+        per_remat = np.array([_intern(remat_tbl, remat_names, r)
+                              for r in tabs.remat_res], I64)
+        res_remat_c[sl] = per_remat[cols.remat_c[sl]]
+    budget = np.array([int(PL.chip_hbm(c) * grid.headroom)
+                       for c in cols.chips], I64)[cols.chip_c]
+    from repro.launch.mesh import mesh_chips
+    n_chips_by_mesh = np.array([mesh_chips(m) for m in cols.meshes], I64)
+    columns = ColumnarResults(
+        n=n, kind=cols.kind, backend=cols.backend,
+        arch_names=cols.arches, chip_names=cols.chips, meshes=cols.meshes,
+        n_chips_by_mesh=n_chips_by_mesh,
+        opt_names=tuple(opt_names), remat_names=tuple(remat_names),
+        arch_c=cols.arch_c, chip_c=cols.chip_c, mesh_c=cols.mesh_c,
+        opt_c=res_opt_c, remat_c=res_remat_c,
+        grad_accum=cols.accum, global_batch=cols.gb, seq_len=cols.seq,
+        peak_bytes=peak, budget_bytes=budget, fits=peak <= budget)
+    return SW.SweepResults(grid=grid, columns=columns,
+                           elapsed_s=time.perf_counter() - t0)

@@ -34,6 +34,72 @@ from repro.mesh_ctx import DEFAULT_RULES, shard_factor
 AXIS_LAYERS = "layers"
 
 
+# ---------------------------------------------------------------------------
+# Symbolic term specs: the shared vocabulary between the scalar factor
+# equations below and the columnar batch kernels (core.batch).  A TermSpec
+# is one Eq.1 byte term in unevaluated form —
+#
+#     bytes = mult * prod(dims) * nbytes // max(shard_factor(dims), 1)
+#
+# where every entry of ``dims`` is either a concrete int (arch-dependent,
+# cell-independent) or one of the TERM_VARS tokens resolved against an
+# environment of cell knobs.  The scalar path evaluates a spec with a
+# scalar env (``term_env``); the batch path evaluates the same spec with
+# int64 column arrays.  Because both paths share the spec AND the shard
+# resolution, they cannot drift apart.
+# ---------------------------------------------------------------------------
+
+#: env keys a symbolic dim may name.  ``mb``/``gb`` micro/global batch,
+#: ``seq`` sequence length, ``enc`` encoder length, ``slen`` cache length
+#: (max_len or seq), ``chunk`` loss chunk (min(LOSS_CHUNK, seq)), ``qc``
+#: flash q/kv chunk (min(FLASH_CHUNK, seq)), ``tok_cross`` cross-attention
+#: cache length (enc, falling back to slen), ``cache_mult`` the cpu-oracle
+#: decode bf16-twin multiplier (a dimension-shaped multiplier: it scales
+#: prod(dims) but carries no shardable axis).
+TERM_VARS = ("mb", "gb", "seq", "enc", "slen", "chunk", "qc", "tok_cross",
+             "cache_mult")
+
+
+@dataclass(frozen=True)
+class TermSpec:
+    """One symbolic byte term (see module comment above)."""
+
+    dims: tuple                    # ints and/or TERM_VARS tokens
+    axes: tuple                    # logical axis names (or None) per dim
+    nbytes: int                    # per-element bytes
+    mult: int = 1                  # constant multiplier INSIDE the floor div
+
+
+def term_env(ctx: "PredictContext") -> dict:
+    """Scalar evaluation environment for TermSpec dims."""
+    from repro.models.transformer import LOSS_CHUNK
+    slen = ctx.max_len or ctx.seq_len
+    return {"mb": ctx.micro_batch, "gb": ctx.global_batch,
+            "seq": ctx.seq_len, "enc": ctx.enc_seq, "slen": slen,
+            "chunk": min(LOSS_CHUNK, ctx.seq_len),
+            "qc": min(FLASH_CHUNK, ctx.seq_len),
+            "tok_cross": ctx.enc_seq or slen,
+            "cache_mult": 3 if (ctx.backend == "cpu"
+                                and ctx.kind == "decode") else 1}
+
+
+def eval_term(spec: TermSpec, env: dict, mesh_shape: dict,
+              rules: dict) -> int:
+    """Scalar TermSpec evaluation (the batch twin lives in core.batch)."""
+    dims = tuple(env[d] if isinstance(d, str) else d for d in spec.dims)
+    denom = shard_factor(dims, spec.axes, mesh_shape, rules)
+    return math.prod(dims) * spec.nbytes * spec.mult // max(denom, 1)
+
+
+def eff_act_nbytes(nbytes: int, ctx: "PredictContext", saved: bool) -> int:
+    """Backend-adjusted per-element bytes of an activation tensor: bf16
+    tensors feel the cpu-oracle float normalization (see PredictContext)."""
+    if nbytes == 2:
+        return ctx.act_saved_bytes_per_bf16 if saved \
+            else nbytes * ctx.act_transient_mult
+    return nbytes
+
+
 @dataclass(frozen=True)
 class PredictContext:
     """Everything the factor equations need to know about the run."""
@@ -192,10 +258,7 @@ def _term_bytes(t: ActTerm, ctx: PredictContext, batch: int,
     shape = t.concrete_shape(batch, ctx.seq_len, ctx.enc_seq)
     axes = t.axes if t.axes else (None,) * len(shape)
     denom = shard_factor(shape, axes, ctx.mesh_shape, ctx.rules)
-    nb = dtype_bytes(t.dtype)
-    if nb == 2:                       # bf16 tensors feel the cpu-oracle
-        nb = ctx.act_saved_bytes_per_bf16 if saved \
-            else nb * ctx.act_transient_mult
+    nb = eff_act_nbytes(dtype_bytes(t.dtype), ctx, saved)
     return math.prod(shape) * nb // max(denom, 1)
 
 
@@ -245,18 +308,23 @@ def act_factor_saved(row: ParsedLayer, ctx: PredictContext) -> int:
 FLASH_CHUNK = 1024
 
 
+def flash_tile_spec(row: ParsedLayer) -> Optional[TermSpec]:
+    """Symbolic fp32 probability tiles of the two-level blocked flash
+    attention: (B, q_chunk, H, kv_chunk) — the dominant attention
+    transient.  None for non-attention rows; callers must additionally
+    gate on ``ctx.kind != "decode"``."""
+    if row.layer.kind != "attention":
+        return None
+    h = row.layer.meta.get("n_heads", 1)
+    return TermSpec(dims=("mb", "qc", h, "qc"),
+                    axes=("batch", "seq", "heads", None), nbytes=4)
+
+
 def _flash_tile_bytes(row: ParsedLayer, ctx: PredictContext) -> int:
-    """fp32 probability tiles of the two-level blocked flash attention:
-    (B, q_chunk, H, kv_chunk) — the dominant attention transient."""
-    meta = row.layer.meta
-    if row.layer.kind != "attention" or ctx.kind == "decode":
+    spec = flash_tile_spec(row)
+    if spec is None or ctx.kind == "decode":
         return 0
-    h = meta.get("n_heads", 1)
-    qc = min(FLASH_CHUNK, ctx.seq_len)
-    b = ctx.micro_batch
-    denom = shard_factor((b, qc, h, qc), ("batch", "seq", "heads", None),
-                         ctx.mesh_shape, ctx.rules)
-    return b * qc * h * qc * 4 // max(denom, 1)
+    return eval_term(spec, term_env(ctx), ctx.mesh_shape, ctx.rules)
 
 
 def act_factor_transient(row: ParsedLayer, ctx: PredictContext) -> int:

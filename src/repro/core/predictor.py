@@ -21,7 +21,7 @@ from dataclasses import dataclass, field
 from repro.configs import ArchConfig
 from repro.core import factors as F
 from repro.core.parser import ParsedLayer, parse_model
-from repro.core.spec import TrainPolicy, dtype_bytes
+from repro.core.spec import TrainPolicy
 from repro.mesh_ctx import shard_factor
 
 GiB = 1024 ** 3
@@ -66,28 +66,123 @@ class PredictedMemory:
 
 
 # ---------------------------------------------------------------------------
+# Symbolic term-spec builders.  Each returns cell-independent
+# :class:`repro.core.factors.TermSpec` lists whose symbolic dims are
+# resolved against a knob environment (``factors.term_env`` scalar-side,
+# int64 column arrays in ``core.batch``).  The scalar helpers below
+# evaluate the SAME specs — the columnar path cannot diverge from them.
+# ---------------------------------------------------------------------------
+
+
+def loss_specs(cfg: ArchConfig, kind: str) -> list[F.TermSpec]:
+    """hidden (B,S,D) bf16 saved + one logits chunk fp32 (vocab-sharded),
+    forward + backward transient; serve steps keep one (B, 1, V) fp32
+    logits row instead."""
+    if kind != "train":
+        return [F.TermSpec(dims=("gb", 1, cfg.vocab),
+                           axes=("batch", None, "vocab"), nbytes=4)]
+    return [F.TermSpec(dims=("mb", "seq", cfg.d_model),
+                       axes=("batch", "seq", None), nbytes=2),
+            F.TermSpec(dims=("mb", "chunk", cfg.vocab),
+                       axes=("batch", None, "vocab"), nbytes=4, mult=2)]
+
+
+def cache_specs(rows: list[ParsedLayer]) -> list[F.TermSpec]:
+    """KV / latent / SSM cache byte terms for serving steps.
+
+    Shapes/axes mirror the runtime cache layouts exactly (5-D GQA stacks,
+    4-D MLA latents, 5-D SSM states) so non-divisible head counts replicate
+    in prediction just as they do in execution.  On the cpu oracle a decode
+    step's bf16 KV stacks additionally exist as a hoisted fp32 twin
+    (XLA:CPU float normalization + LICM) — the ``cache_mult`` env dim.
+    """
+    specs: list[F.TermSpec] = []
+    for r in rows:
+        meta = r.layer.meta
+        rep = meta.get("cache_repeat", r.repeat)
+        if r.layer.kind == "attention" and "kv_bytes_per_token" in meta:
+            tok = "tok_cross" if meta.get("cross") else "slen"
+            if meta.get("attn_kind") == "mla":
+                mla = meta["mla"]
+                width = mla.kv_lora_rank + mla.qk_rope_head_dim
+                specs.append(F.TermSpec(                   # bf16 latent
+                    dims=(rep, "gb", tok, width, "cache_mult"),
+                    axes=("layers", "batch", "cache_seq", None, None),
+                    nbytes=2))
+            else:
+                hkv, hd = meta["n_kv_heads"], meta["head_dim"]
+                specs.append(F.TermSpec(                   # k + v, bf16
+                    dims=(rep, "gb", tok, hkv, hd, "cache_mult"),
+                    axes=("layers", "batch", "cache_seq", "kv_heads", None,
+                          None),
+                    nbytes=2, mult=2))
+        elif r.layer.kind == "ssm":
+            h, p, n_st = meta["n_heads"], meta["head_dim"], meta["d_state"]
+            specs.append(F.TermSpec(                       # fp32 state
+                dims=(rep, "gb", h, p, n_st),
+                axes=("layers", "batch", "ssm", None, None), nbytes=4))
+            specs.append(F.TermSpec(                       # bf16 conv tail
+                dims=(rep, "gb", meta["d_conv"] - 1, meta["conv_ch"],
+                      "cache_mult"),
+                axes=("layers", "batch", None, "ffn", None), nbytes=2))
+    return specs
+
+
+def decode_transient_groups(
+        rows: list[ParsedLayer]) -> list[list[F.TermSpec]]:
+    """Per-attention-row spec groups of a decode step's transients: fp32
+    scores over the cache, the in-scan cache-slice update copy, and (naive
+    MLA) the per-layer expanded K/V.  The live transient is the worst
+    row's group sum."""
+    groups: list[list[F.TermSpec]] = []
+    for r in rows:
+        meta = r.layer.meta
+        if r.layer.kind != "attention":
+            continue
+        h = meta.get("n_heads", 1)
+        group = [F.TermSpec(dims=("gb", h, "slen"),     # scores + softmax
+                            axes=("batch", "heads", "cache_seq"),
+                            nbytes=4, mult=2)]
+        if meta.get("attn_kind") == "mla":
+            mla = meta["mla"]
+            qk = mla.qk_nope_head_dim + mla.qk_rope_head_dim
+            group.append(F.TermSpec(
+                dims=("gb", "slen", h, qk + mla.v_head_dim),
+                axes=("batch", "cache_seq", "heads", None), nbytes=2))
+        elif "n_kv_heads" in meta:
+            # dynamic-update-slice inside the layer scan cannot alias the
+            # carried stack slice -> one layer's k+v update copy is live
+            hkv, hd = meta["n_kv_heads"], meta["head_dim"]
+            group.append(F.TermSpec(
+                dims=("gb", "slen", hkv, hd),
+                axes=("batch", "cache_seq", "kv_heads", None),
+                nbytes=2, mult=2))
+        groups.append(group)
+    return groups
+
+
+def embed_gather_const(rows: list[ParsedLayer], backend: str) -> int:
+    """Tied (vocab-sharded) embedding tables are fully all-gathered by the
+    token lookup — fp32 on the cpu oracle (float normalization).  Constant
+    per (rows, backend): no cell knob touches it."""
+    total = 0
+    for r in rows:
+        meta = r.layer.meta
+        if r.layer.kind == "embedding" and meta.get("lookup_gather"):
+            per = 4 if backend == "cpu" else 2
+            total += meta["vocab"] * meta["d_model"] * per
+    return total
+
+
+# ---------------------------------------------------------------------------
+# scalar evaluation of the spec groups above
+# ---------------------------------------------------------------------------
 
 
 def _loss_terms(cfg: ArchConfig, ctx: F.PredictContext) -> int:
-    """hidden (B,S,D) bf16 saved + one logits chunk fp32 (vocab-sharded),
-    forward + backward transient."""
-    if ctx.kind != "train":
-        # decode/prefill logits: (B, 1, V) fp32
-        b = ctx.global_batch
-        denom = shard_factor((b, 1, cfg.vocab), ("batch", None, "vocab"),
-                             ctx.mesh_shape, ctx.rules)
-        return b * cfg.vocab * 4 // max(denom, 1)
-    from repro.models.transformer import LOSS_CHUNK
-    b, s = ctx.micro_batch, ctx.seq_len
-    hid_denom = shard_factor((b, s, cfg.d_model), ("batch", "seq", None),
-                             ctx.mesh_shape, ctx.rules)
-    hidden = b * s * cfg.d_model * 2 // max(hid_denom, 1)
-    chunk = min(LOSS_CHUNK, s)
-    logit_denom = shard_factor((b, chunk, cfg.vocab),
-                               ("batch", None, "vocab"),
-                               ctx.mesh_shape, ctx.rules)
-    logits = 2 * b * chunk * cfg.vocab * 4 // max(logit_denom, 1)
-    return hidden + logits
+    env = F.term_env(ctx)
+    return sum(F.eval_term(s, env, ctx.mesh_shape, ctx.rules)
+               for s in loss_specs(cfg, ctx.kind))
 
 
 def _input_bytes(model, shape_kind: str, ctx: F.PredictContext) -> int:
@@ -105,97 +200,26 @@ def _input_bytes(model, shape_kind: str, ctx: F.PredictContext) -> int:
 
 def _cache_bytes(model, ctx: F.PredictContext,
                  rows: list[ParsedLayer]) -> int:
-    """KV / latent / SSM cache bytes for serving steps.
-
-    Shapes/axes mirror the runtime cache layouts exactly (5-D GQA stacks,
-    4-D MLA latents, 5-D SSM states) so non-divisible head counts replicate
-    in prediction just as they do in execution.  On the cpu oracle a decode
-    step's bf16 KV stacks additionally exist as a hoisted fp32 twin
-    (XLA:CPU float normalization + LICM), hence the 3x multiplier.
-    """
     if ctx.kind == "train":
         return 0
-    b = ctx.global_batch
-    slen = ctx.max_len or ctx.seq_len
-    bf16_mult = 3 if (ctx.backend == "cpu" and ctx.kind == "decode") else 1
-    total = 0
-    for r in rows:
-        meta = r.layer.meta
-        rep = meta.get("cache_repeat", r.repeat)
-        if r.layer.kind == "attention" and "kv_bytes_per_token" in meta:
-            tokens = (ctx.enc_seq or slen) if meta.get("cross") else slen
-            if meta.get("attn_kind") == "mla":
-                mla = meta["mla"]
-                width = mla.kv_lora_rank + mla.qk_rope_head_dim
-                shape = (rep, b, tokens, width)
-                axes = ("layers", "batch", "cache_seq", None)
-                n = math.prod(shape) * 2                   # bf16 latent
-            else:
-                hkv, hd = meta["n_kv_heads"], meta["head_dim"]
-                shape = (rep, b, tokens, hkv, hd)
-                axes = ("layers", "batch", "cache_seq", "kv_heads", None)
-                n = 2 * math.prod(shape) * 2               # k + v, bf16
-            denom = shard_factor(shape, axes, ctx.mesh_shape, ctx.rules)
-            total += n * bf16_mult // max(denom, 1)
-        elif r.layer.kind == "ssm":
-            h, p, n_st = meta["n_heads"], meta["head_dim"], meta["d_state"]
-            shape = (rep, b, h, p, n_st)
-            axes = ("layers", "batch", "ssm", None, None)
-            denom = shard_factor(shape, axes, ctx.mesh_shape, ctx.rules)
-            total += 4 * math.prod(shape) // max(denom, 1)  # fp32 state
-            conv_shape = (rep, b, meta["d_conv"] - 1, meta["conv_ch"])
-            caxes = ("layers", "batch", None, "ffn")
-            cdenom = shard_factor(conv_shape, caxes, ctx.mesh_shape,
-                                  ctx.rules)
-            total += 2 * math.prod(conv_shape) * bf16_mult \
-                // max(cdenom, 1)
-    return total
+    env = F.term_env(ctx)
+    return sum(F.eval_term(s, env, ctx.mesh_shape, ctx.rules)
+               for s in cache_specs(rows))
 
 
 def _decode_transients(rows: list[ParsedLayer], ctx: F.PredictContext) -> int:
-    """Largest per-layer transient of a decode step: fp32 scores over the
-    cache, the in-scan cache-slice update copy, and (naive MLA) the
-    per-layer expanded K/V."""
-    b, slen = ctx.global_batch, ctx.max_len or ctx.seq_len
+    env = F.term_env(ctx)
     worst = 0
-    for r in rows:
-        meta = r.layer.meta
-        if r.layer.kind != "attention":
-            continue
-        h = meta.get("n_heads", 1)
-        denom = shard_factor((b, h, slen), ("batch", "heads", "cache_seq"),
-                             ctx.mesh_shape, ctx.rules)
-        t = 2 * b * h * slen * 4 // max(denom, 1)     # scores + softmax
-        if meta.get("attn_kind") == "mla":
-            mla = meta["mla"]
-            qk = mla.qk_nope_head_dim + mla.qk_rope_head_dim
-            d2 = shard_factor((b, slen, h, qk + mla.v_head_dim),
-                              ("batch", "cache_seq", "heads", None),
-                              ctx.mesh_shape, ctx.rules)
-            t += b * slen * h * (qk + mla.v_head_dim) * 2 // max(d2, 1)
-        elif "n_kv_heads" in meta:
-            # dynamic-update-slice inside the layer scan cannot alias the
-            # carried stack slice -> one layer's k+v update copy is live
-            hkv, hd = meta["n_kv_heads"], meta["head_dim"]
-            d3 = shard_factor((b, slen, hkv, hd),
-                              ("batch", "cache_seq", "kv_heads", None),
-                              ctx.mesh_shape, ctx.rules)
-            t += 2 * b * slen * hkv * hd * 2 // max(d3, 1)
+    for group in decode_transient_groups(rows):
+        t = sum(F.eval_term(s, env, ctx.mesh_shape, ctx.rules)
+                for s in group)
         worst = max(worst, t)
     return worst
 
 
 def _embed_gather_bytes(rows: list[ParsedLayer],
                         ctx: F.PredictContext) -> int:
-    """Tied (vocab-sharded) embedding tables are fully all-gathered by the
-    token lookup — fp32 on the cpu oracle (float normalization)."""
-    total = 0
-    for r in rows:
-        meta = r.layer.meta
-        if r.layer.kind == "embedding" and meta.get("lookup_gather"):
-            per = 4 if ctx.backend == "cpu" else 2
-            total += meta["vocab"] * meta["d_model"] * per
-    return total
+    return embed_gather_const(rows, ctx.backend)
 
 
 # ---------------------------------------------------------------------------

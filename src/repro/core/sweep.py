@@ -2,39 +2,47 @@
 
 The paper's estimator answers "will this config OOM?" for ONE cell;
 capacity planning (xMem-style scheduler admission, cluster sizing) needs
-that answer for THOUSANDS of candidate configurations at once: every mesh
+that answer for 10^5-10^6 candidate configurations at once: every mesh
 factorization of a chip count x optimizer x remat policy x grad-accum x
 global batch x sequence length x chip type.  ``sweep(SweepGrid(...))``
-evaluates such a grid through a memoized :class:`SweepEngine` that
+evaluates such a grid through a dual-mode :class:`SweepEngine`:
 
-* parses/builds each architecture ONCE and reuses the parse table,
-* caches the batch-independent factor sums (params / grads / optimizer
-  states) per (mesh, optimizer) so they are not recomputed per batch cell,
-* caches the optimizer-independent activation sums per
-  (mesh, micro-batch, remat),
+* ``mode="columnar"`` (default) lowers the whole grid to the
+  structure-of-arrays NumPy kernels in :mod:`repro.core.batch` — the
+  Eq.1 terms are factored into cell-independent coefficients contracted
+  against int64 knob columns, ~100x the per-cell throughput (a
+  124k-cell grid evaluates in ~50 ms; BENCH_sweep.json tracks it);
+* ``mode="cell"`` is the per-cell reference: parses/builds each
+  architecture once, memoizes the three ``core.predictor`` component
+  groups by exactly the context fields each reads, and composes cells
+  through the same ``assemble`` a cell-by-cell ``planner.check`` uses.
 
-and composes cells from the cached component terms through the exact same
-``core.predictor`` component functions a cell-by-cell ``planner.check``
-uses — so the sweep is byte-identical to the slow path (asserted by
-tests/test_sweep.py and benchmarks/sweep_throughput.py) while running a
-1,000-cell grid in well under a second on CPU.
+The two modes are byte-identical — every verdict and every peak-bytes
+value — with or without a calibration profile (asserted per-cell by
+tests/test_batch.py and on the 4,416-cell parity set + a 124k-cell grid
+by ``benchmarks/sweep_throughput.py --verify``).
 
-Results are structured :class:`SweepResult` objects wrapped in a
-:class:`SweepResults` container with Pareto-frontier queries ("max global
-batch that fits on N chips", "min chips for this shape") and markdown/CSV
-report writers built on :mod:`repro.core.report`.
+Results are wrapped in a :class:`SweepResults` container with
+Pareto-frontier queries ("max global batch that fits on N chips", "min
+chips for this shape") and markdown/CSV report writers built on
+:mod:`repro.core.report`; columnar sweeps answer the queries on arrays
+and materialize :class:`SweepResult` rows lazily.
 
 CLI::
 
     PYTHONPATH=src python -m repro.core.sweep --arch llava15_7b --chips 8 \
         --chip v5e --batch 16,32,64,128 --accum 1,2,4 --seq-len 2048
+
+``--dry-run`` prints the cell count + a runtime estimate first;
+``--mode cell`` selects the reference path; an empty grid exits with
+status 2 and a "0 cells matched" explanation.
 """
 
 from __future__ import annotations
 
 import re
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Iterator, Optional, Sequence, Union
 
 from repro.core import planner as PL
@@ -117,6 +125,17 @@ class SweepGrid:
             out.extend(enumerate_meshes(int(n), self.mesh_axes,
                                         self.max_axis))
         return out
+
+    def size(self) -> int:
+        """Cheap cell cardinality: exactly ``sum(1 for _ in cells())``
+        without yielding a single cell object — guard rails for CLI users
+        about to launch a million-cell sweep (see ``--dry-run``)."""
+        pairs = sum(1 for a in _seq(self.grad_accums)
+                    for g in _seq(self.global_batches) if not g % a)
+        return (len(_seq(self.arch)) * len(_seq(self.chip))
+                * len(self.meshes()) * len(_seq(self.optimizers))
+                * len(_seq(self.remats)) * pairs
+                * len(_seq(self.seq_lens)))
 
     def cells(self) -> Iterator["SweepCell"]:
         """Deterministic cell enumeration (first-fit order: cheap knobs
@@ -220,26 +239,80 @@ def _row_of(r: SweepResult) -> tuple:
             "yes" if r.fits else "NO")
 
 
-@dataclass
 class SweepResults:
-    """Structured sweep output + Pareto-frontier queries."""
+    """Structured sweep output + Pareto-frontier queries.
 
-    grid: SweepGrid
-    results: list[SweepResult] = field(default_factory=list)
-    elapsed_s: float = 0.0
+    Two backing stores, one API:
+
+    * cell mode hands in a materialized ``results`` list;
+    * columnar mode (``core.batch``) hands in ``columns`` — int64 arrays
+      for the whole grid.  Rows are then materialized LAZILY: Pareto
+      queries (``fitting`` counts, ``max_global_batch``, ``min_chips``,
+      ``frontier``) and the report sort run on the arrays and only the
+      rows actually returned become :class:`SweepResult` objects, so a
+      500k-cell sweep answers "max batch on 256 chips" without building
+      500k Python objects.  Query results are identical between the two
+      stores (including tie-breaking order); asserted in tests.
+    """
+
+    def __init__(self, grid: SweepGrid, results: Optional[list] = None,
+                 elapsed_s: float = 0.0, columns=None):
+        self.grid = grid
+        self.elapsed_s = elapsed_s
+        self.columns = columns
+        self._results: Optional[list[SweepResult]] = \
+            list(results) if results is not None else None
+        if self._results is None and columns is None:
+            self._results = []
+
+    @property
+    def results(self) -> list[SweepResult]:
+        """All rows, materializing (and caching) them when columnar."""
+        if self._results is None:
+            c = self.columns
+            self._results = [c.result(i) for i in range(c.n)]
+        return self._results
 
     def __len__(self) -> int:
-        return len(self.results)
+        if self._results is None:
+            return self.columns.n
+        return len(self._results)
 
     def __iter__(self) -> Iterator[SweepResult]:
         return iter(self.results)
 
     @property
     def cells_per_sec(self) -> float:
-        return len(self.results) / self.elapsed_s if self.elapsed_s else 0.0
+        return len(self) / self.elapsed_s if self.elapsed_s else 0.0
+
+    # -- fit queries ---------------------------------------------------------
+    @property
+    def fit_count(self) -> int:
+        """Number of fitting cells (no row materialization)."""
+        if self._results is None:
+            return int(self.columns.fits.sum())
+        return sum(1 for r in self._results if r.fits)
 
     def fitting(self) -> list[SweepResult]:
-        return [r for r in self.results if r.fits]
+        if self._results is None:
+            import numpy as np
+            c = self.columns
+            return [c.result(int(i)) for i in np.flatnonzero(c.fits)]
+        return [r for r in self._results if r.fits]
+
+    def _fit_mask(self, n_chips=None, chip=None, global_batch=None):
+        import numpy as np
+        c = self.columns
+        mask = c.fits.copy()
+        if n_chips is not None:
+            mask &= c.n_chips == n_chips
+        if global_batch is not None:
+            mask &= c.global_batch == global_batch
+        if chip is not None:
+            if chip not in c.chip_names:
+                return np.zeros(c.n, bool)
+            mask &= c.chip_c == c.chip_names.index(chip)
+        return mask
 
     # -- Pareto queries ------------------------------------------------------
     def max_global_batch(self, n_chips: Optional[int] = None,
@@ -247,6 +320,14 @@ class SweepResults:
                          ) -> Optional[SweepResult]:
         """Largest global batch that fits (optionally on exactly N chips /
         a given chip type); ties broken by smallest peak."""
+        if self._results is None:
+            import numpy as np
+            c = self.columns
+            idx = np.flatnonzero(self._fit_mask(n_chips=n_chips, chip=chip))
+            if not len(idx):
+                return None
+            order = np.lexsort((c.peak_bytes[idx], -c.global_batch[idx]))
+            return c.result(int(idx[order[0]]))
         cand = [r for r in self.fitting()
                 if (n_chips is None or r.n_chips == n_chips)
                 and (chip is None or r.chip == chip)]
@@ -258,6 +339,15 @@ class SweepResults:
                   chip: Optional[str] = None) -> Optional[SweepResult]:
         """Smallest chip count with a fitting config (optionally at a given
         global batch / chip type); ties broken by smallest peak."""
+        if self._results is None:
+            import numpy as np
+            c = self.columns
+            idx = np.flatnonzero(self._fit_mask(global_batch=global_batch,
+                                                chip=chip))
+            if not len(idx):
+                return None
+            order = np.lexsort((c.peak_bytes[idx], c.n_chips[idx]))
+            return c.result(int(idx[order[0]]))
         cand = [r for r in self.fitting()
                 if (global_batch is None or r.global_batch == global_batch)
                 and (chip is None or r.chip == chip)]
@@ -267,24 +357,49 @@ class SweepResults:
 
     def frontier(self) -> list[tuple[int, int]]:
         """(n_chips, max fitting global batch) pairs, ascending chips."""
+        if self._results is None:
+            import numpy as np
+            c = self.columns
+            mask = c.fits
+            nc, gb = c.n_chips[mask], c.global_batch[mask]
+            return [(int(u), int(gb[nc == u].max())) for u in np.unique(nc)]
         best: dict[int, int] = {}
-        for r in self.fitting():
-            best[r.n_chips] = max(best.get(r.n_chips, 0), r.global_batch)
+        for r in self._results:
+            if r.fits:
+                best[r.n_chips] = max(best.get(r.n_chips, 0),
+                                      r.global_batch)
         return sorted(best.items())
 
     # -- report writers ------------------------------------------------------
+    def _sorted_indices(self):
+        import numpy as np
+        c = self.columns
+        return np.lexsort((c.peak_bytes, -c.global_batch, ~c.fits))
+
     def sorted_results(self) -> list[SweepResult]:
-        return sorted(self.results,
+        if self._results is None:
+            c = self.columns
+            return [c.result(int(i)) for i in self._sorted_indices()]
+        return sorted(self._results,
                       key=lambda r: (not r.fits, -r.global_batch,
                                      r.peak_bytes))
 
+    def _top_rows(self, limit: Optional[int]) -> tuple[list, int]:
+        """Best ``limit`` rows (report order) + count of dropped rows,
+        materializing only the returned rows when columnar."""
+        if self._results is None:
+            order = self._sorted_indices()
+            keep = order if limit is None else order[:limit]
+            rows = [self.columns.result(int(i)) for i in keep]
+            return rows, len(order) - len(rows)
+        rows = self.sorted_results()
+        if limit is not None and len(rows) > limit:
+            return rows[:limit], len(rows) - limit
+        return rows, 0
+
     def to_markdown(self, limit: Optional[int] = None,
                     title: str = "") -> str:
-        rows = self.sorted_results()
-        dropped = 0
-        if limit is not None and len(rows) > limit:
-            dropped = len(rows) - limit
-            rows = rows[:limit]
+        rows, dropped = self._top_rows(limit)
         out = RPT.markdown_table(_COLUMNS, [_row_of(r) for r in rows],
                                  title=title)
         if dropped:
@@ -429,7 +544,30 @@ class SweepEngine:
                              grad_accum=grad_accum,
                              remat=remat or cfg.remat, prediction=pred)
 
-    def sweep(self, grid: SweepGrid) -> SweepResults:
+    def sweep(self, grid: SweepGrid, mode: str = "columnar",
+              jobs: int = 1) -> SweepResults:
+        """Evaluate every grid cell.
+
+        ``mode="columnar"`` (default) lowers the whole grid to the
+        structure-of-arrays kernels in :mod:`repro.core.batch` —
+        byte-identical verdicts and peak bytes, orders of magnitude
+        faster on large grids.  ``mode="cell"`` is the per-cell
+        reference path.  Grids with ``keep_predictions=True`` always
+        take the cell path (columnar mode does not materialize
+        PredictedMemory breakdowns), as does an environment without
+        numpy.  ``jobs`` > 1 splits the columnar component stage over
+        worker threads (mesh-chunked; results are order-identical).
+        """
+        if mode not in ("columnar", "cell"):
+            raise ValueError(
+                f"unknown sweep mode {mode!r}; use 'columnar' or 'cell'")
+        if mode == "columnar" and not grid.keep_predictions:
+            try:
+                from repro.core import batch as B
+            except ImportError:          # no numpy -> reference path
+                B = None
+            if B is not None:
+                return B.sweep_columnar(self, grid, jobs=jobs)
         t0 = time.perf_counter()
         results = [self.evaluate(cell, grid.policy, grid.headroom,
                                  grid.keep_predictions,
@@ -439,10 +577,10 @@ class SweepEngine:
                             elapsed_s=time.perf_counter() - t0)
 
 
-def sweep(grid: SweepGrid,
-          engine: Optional[SweepEngine] = None) -> SweepResults:
+def sweep(grid: SweepGrid, engine: Optional[SweepEngine] = None,
+          mode: str = "columnar", jobs: int = 1) -> SweepResults:
     """Run a capacity-planning sweep (fresh engine unless one is passed)."""
-    return (engine or SweepEngine()).sweep(grid)
+    return (engine or SweepEngine()).sweep(grid, mode=mode, jobs=jobs)
 
 
 # ---------------------------------------------------------------------------
@@ -459,6 +597,20 @@ def _str_list(s: Optional[str]) -> tuple:
         return (None,)
     return tuple(None if x in ("default", "arch") else x
                  for x in s.split(",") if x)
+
+
+# order-of-magnitude planning rates for --dry-run's runtime estimate; the
+# real per-machine numbers are tracked in BENCH_sweep.json
+# (benchmarks/sweep_throughput.py)
+EST_CELLS_PER_SEC = {"columnar": 1_000_000, "cell": 15_000}
+
+
+def _empty_grid_msg() -> str:
+    return ("0 cells matched: the grid produced no evaluable cells.  "
+            "Common causes: no --batch value is divisible by any --accum "
+            "value (cells with batch % accum != 0 are skipped), or "
+            "--max-model filtered out every mesh factorization of "
+            "--chips.  Relax one of those axes and re-run.")
 
 
 def _parse_mesh(s: str) -> dict:
@@ -512,6 +664,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("--profile", metavar="PATH", default=None,
                    help="CalibrationProfile JSON (python -m repro.calibrate"
                         " fit) applied to every cell's prediction")
+    p.add_argument("--mode", choices=("columnar", "cell"),
+                   default="columnar",
+                   help="columnar: vectorized batch evaluation (default); "
+                        "cell: per-cell reference path (byte-identical, "
+                        "much slower on large grids)")
+    p.add_argument("--jobs", type=int, default=1,
+                   help="worker threads for the columnar component stage "
+                        "(mesh-chunked; identical results)")
+    p.add_argument("--dry-run", action="store_true",
+                   help="print the cell count + estimated runtime and "
+                        "exit without evaluating anything")
     p.add_argument("--top", type=int, default=20,
                    help="rows to print (full grid goes to --csv/--md)")
     p.add_argument("--csv", metavar="PATH", help="write full CSV report")
@@ -549,14 +712,32 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         policy=POLICIES[args.policy], backend=args.backend,
         headroom=args.headroom, profile=profile)
 
-    res = sweep(grid)
-    n_fit = len(res.fitting())
+    if args.dry_run:
+        n = grid.size()
+        est = n / EST_CELLS_PER_SEC[args.mode]
+        print(f"dry run: {n:,} cells "
+              f"({len(grid.meshes())} meshes x optimizers x remats x "
+              f"accum/batch pairs x seq lens)")
+        print(f"estimated runtime in --mode {args.mode}: ~{est:.1f}s "
+              f"(planning rate {EST_CELLS_PER_SEC[args.mode]:,} cells/s; "
+              f"see BENCH_sweep.json for this machine's real rates)")
+        if n == 0:
+            print(_empty_grid_msg())
+            return 2
+        return 0
+
+    res = sweep(grid, mode=args.mode, jobs=args.jobs)
+    if len(res) == 0:
+        print(_empty_grid_msg())
+        return 2
+    n_fit = res.fit_count
     title = (f"capacity sweep: {arch} {args.kind} on {args.chip} "
              f"({args.backend} prediction)"
              + (f" [profile {profile.profile_hash}]" if profile else ""))
     print(f"# {title}")
     print(f"{len(res)} cells in {res.elapsed_s:.3f}s "
-          f"({res.cells_per_sec:,.0f} cells/s); {n_fit} fit")
+          f"({res.cells_per_sec:,.0f} cells/s, mode={args.mode}); "
+          f"{n_fit} fit")
     if res.frontier():
         print("\nPareto frontier (chips -> max fitting global batch):")
         for chips, batch in res.frontier():

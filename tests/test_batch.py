@@ -1,0 +1,256 @@
+"""Columnar batch predictor (core/batch.py): byte-parity with the
+per-cell path, vectorized shard resolution, lazy SweepResults.
+
+The contract under test is exact: every verdict, every per-device peak
+byte count, and every Pareto-query answer from ``mode="columnar"`` must
+equal the per-cell reference (``mode="cell"``, itself verified against
+un-memoized ``planner.check``) — including tie-breaking order.
+"""
+
+import random
+
+import pytest
+
+np = pytest.importorskip("numpy")
+
+from repro.calibrate.profile import CalibrationProfile
+from repro.configs import registered_archs
+from repro.core import batch as B
+from repro.core import sweep as SW
+from repro.core.spec import LLAVA_STAGE1, LLAVA_STAGE2
+from repro.mesh_ctx import DEFAULT_RULES, shard_factor
+
+PROFILE = CalibrationProfile(
+    coefficients={"static": 1.0312, "act_saved": 0.977,
+                  "act_transient": 1.13, "overhead": 0.84},
+    chip_constant_bytes={"v5e": 123456789, "*": 7777777})
+
+
+def both_modes(grid):
+    cell = SW.SweepEngine().sweep(grid, mode="cell")
+    col = SW.SweepEngine().sweep(grid, mode="columnar")
+    assert col.columns is not None, "columnar mode did not engage"
+    return cell, col
+
+
+def assert_identical(cell, col):
+    assert len(cell) == len(col)
+    for a, b in zip(cell.results, col.results):
+        assert a == b, f"\ncell: {a!r}\ncol:  {b!r}"
+
+
+# ---------------------------------------------------------------------------
+# vectorized shard resolution == scalar shard resolution
+# ---------------------------------------------------------------------------
+
+
+def test_batch_shard_factor_matches_scalar_randomized():
+    rng = random.Random(7)
+    axes_pool = [None, "batch", "seq", "vocab", "heads", "kv_heads", "ffn",
+                 "ssm", "layers", "cache_seq", "embed_cols"]
+    for _ in range(300):
+        rank = rng.randint(1, 5)
+        dims = [rng.choice([1, 2, 3, 8, 15, 16, 60, 576, 4096])
+                for _ in range(rank)]
+        axes = tuple(rng.choice(axes_pool) for _ in range(rank))
+        mesh = {a: rng.choice([1, 2, 4, 8, 16])
+                for a in rng.sample(["pod", "data", "model"],
+                                    rng.randint(1, 3))}
+        extra = ("data",) if rng.random() < 0.5 else ()
+        want = shard_factor(dims, axes, mesh, dict(DEFAULT_RULES), extra)
+        got = B.batch_shard_factor(dims, axes, mesh, dict(DEFAULT_RULES),
+                                   extra)
+        assert int(got) == want, (dims, axes, mesh, extra)
+
+
+def test_batch_shard_factor_size1_axis_equals_missing_axis():
+    """The columnar path pads heterogeneous mesh lists with size-1 axes;
+    a size-1 axis must be indistinguishable from an absent one."""
+    rng = random.Random(11)
+    for _ in range(200):
+        rank = rng.randint(1, 4)
+        dims = [rng.choice([2, 3, 15, 16, 64, 576]) for _ in range(rank)]
+        axes = tuple(rng.choice([None, "batch", "vocab", "heads", "ffn",
+                                 "layers"]) for _ in range(rank))
+        mesh = {"data": rng.choice([2, 4]), "model": rng.choice([2, 8])}
+        padded = {**mesh, "pod": 1}
+        extra = ("data",)
+        assert shard_factor(dims, axes, mesh, dict(DEFAULT_RULES), extra) \
+            == int(B.batch_shard_factor(dims, axes, padded,
+                                        dict(DEFAULT_RULES), extra))
+
+
+def test_batch_shard_factor_broadcasts_over_meshes_and_cells():
+    sizes = {"data": np.array([[1], [2], [4]]),
+             "model": np.array([[8], [4], [2]])}
+    b = np.array([4, 6, 8, 12])
+    got = B.batch_shard_factor((b, 128), ("batch", "vocab"), sizes,
+                               dict(DEFAULT_RULES))
+    assert got.shape == (3, 4)
+    for mi, mesh in enumerate(({"data": 1, "model": 8},
+                               {"data": 2, "model": 4},
+                               {"data": 4, "model": 2})):
+        for ci, bv in enumerate(b.tolist()):
+            assert got[mi, ci] == shard_factor(
+                (bv, 128), ("batch", "vocab"), mesh, dict(DEFAULT_RULES))
+
+
+# ---------------------------------------------------------------------------
+# columnar == cell, across the zoo
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", registered_archs())
+def test_columnar_matches_cell_per_arch(arch):
+    grid = SW.SweepGrid(
+        arch=arch, chips=8, chip=("v5e", "h200"),
+        optimizers=(None, "adafactor"), remats=(None, "none", "dots"),
+        grad_accums=(1, 2), global_batches=(8, 12),
+        seq_lens=(512,), backend="cpu")
+    assert_identical(*both_modes(grid))
+
+
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+@pytest.mark.parametrize("profile", [None, PROFILE],
+                         ids=["raw", "calibrated"])
+def test_columnar_matches_cell_kinds_and_profile(kind, profile):
+    grid = SW.SweepGrid(
+        arch="llava15-7b", chips=(4, 8),
+        grad_accums=(1, 2) if kind == "train" else (1,),
+        global_batches=(4, 8, 12), seq_lens=(256, 1024), kind=kind,
+        backend="tpu", profile=profile)
+    assert_identical(*both_modes(grid))
+
+
+@pytest.mark.parametrize("policy", [LLAVA_STAGE1, LLAVA_STAGE2],
+                         ids=["stage1", "stage2"])
+def test_columnar_matches_cell_frozen_policies(policy):
+    grid = SW.SweepGrid(arch="llava15-7b", chips=8, policy=policy,
+                        grad_accums=(1, 2), global_batches=(8, 16),
+                        seq_lens=(1024,), backend="cpu", profile=PROFILE)
+    assert_identical(*both_modes(grid))
+
+
+def test_columnar_matches_cell_heterogeneous_meshes():
+    grid = SW.SweepGrid(
+        arch="qwen3-32b",                       # fsdp + seq-parallel
+        mesh_shapes=[{"data": 4, "model": 2},
+                     {"pod": 2, "data": 2, "model": 2}, {"model": 8}],
+        grad_accums=(1, 2), global_batches=(8, 16), seq_lens=(512, 1024),
+        backend="tpu", profile=PROFILE)
+    assert_identical(*both_modes(grid))
+
+
+def test_columnar_multi_arch_grid():
+    grid = SW.SweepGrid(arch=("smollm-360m", "llama3.2-3b"), chips=4,
+                        global_batches=(8, 16), seq_lens=(512,),
+                        backend="tpu")
+    assert_identical(*both_modes(grid))
+
+
+def test_columnar_jobs_identical():
+    grid = SW.SweepGrid(arch="llava15-7b", chips=(8, 16),
+                        remats=("none", "block"), grad_accums=(1, 2),
+                        global_batches=(8, 32), seq_lens=(512, 2048),
+                        backend="cpu", profile=PROFILE)
+    one = SW.SweepEngine().sweep(grid, mode="columnar", jobs=1)
+    four = SW.SweepEngine().sweep(grid, mode="columnar", jobs=4)
+    assert (one.columns.peak_bytes == four.columns.peak_bytes).all()
+    assert (one.columns.fits == four.columns.fits).all()
+    assert_identical(one, four)
+
+
+# ---------------------------------------------------------------------------
+# lazy SweepResults: queries on arrays == queries on objects
+# ---------------------------------------------------------------------------
+
+
+def _query_grid():
+    return SW.SweepGrid(arch="smollm-360m", chips=(8, 16),
+                        grad_accums=(1, 2, 4),
+                        global_batches=(32, 64, 128, 256, 512),
+                        seq_lens=(1024,), backend="tpu")
+
+
+def test_lazy_queries_match_cell_mode():
+    cell, col = both_modes(_query_grid())
+    assert col.fit_count == len(cell.fitting())
+    assert col.frontier() == cell.frontier()
+    assert col.max_global_batch() == cell.max_global_batch()
+    assert col.max_global_batch(n_chips=8) == cell.max_global_batch(
+        n_chips=8)
+    assert col.max_global_batch(chip="v5e") == cell.max_global_batch(
+        chip="v5e")
+    assert col.max_global_batch(chip="h200") is None \
+        and cell.max_global_batch(chip="h200") is None
+    assert col.min_chips() == cell.min_chips()
+    assert col.min_chips(global_batch=64) == cell.min_chips(
+        global_batch=64)
+    assert [r.peak_bytes for r in col.sorted_results()] \
+        == [r.peak_bytes for r in cell.sorted_results()]
+
+
+def test_lazy_reports_match_cell_mode():
+    cell, col = both_modes(_query_grid())
+    assert col.to_markdown(limit=5) == cell.to_markdown(limit=5)
+    assert col.to_markdown() == cell.to_markdown()
+    assert col.to_csv() == cell.to_csv()
+
+
+def test_lazy_queries_do_not_materialize_rows():
+    col = SW.SweepEngine().sweep(_query_grid(), mode="columnar")
+    col.fit_count, col.frontier(), col.max_global_batch(), col.min_chips()
+    col.to_markdown(limit=3)
+    assert col._results is None, \
+        "Pareto queries must not materialize the full row list"
+    n = len(col)
+    assert len(col.results) == n          # full materialization on demand
+    assert col._results is not None
+
+
+def test_columnar_single_row_equals_cell_row():
+    cell, col = both_modes(_query_grid())
+    for i in (0, 7, len(cell) - 1):
+        assert col.columns.result(i) == cell.results[i]
+
+
+# ---------------------------------------------------------------------------
+# engine plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_keep_predictions_falls_back_to_cell_path():
+    grid = SW.SweepGrid(arch="smollm-360m", chips=4,
+                        global_batches=(16,), seq_lens=(256,),
+                        keep_predictions=True)
+    res = SW.SweepEngine().sweep(grid, mode="columnar")
+    assert res.columns is None
+    assert all(r.prediction is not None for r in res.results)
+
+
+def test_unknown_mode_raises():
+    grid = SW.SweepGrid(arch="smollm-360m", chips=4,
+                        global_batches=(16,), seq_lens=(256,))
+    with pytest.raises(ValueError, match="unknown sweep mode"):
+        SW.SweepEngine().sweep(grid, mode="vectorised")
+
+
+def test_empty_grid_returns_empty_results():
+    grid = SW.SweepGrid(arch="smollm-360m", chips=4,
+                        grad_accums=(2,), global_batches=(3, 9),
+                        seq_lens=(256,))
+    res = SW.sweep(grid)
+    assert len(res) == 0 and res.fitting() == []
+    assert grid.size() == 0
+
+
+def test_grid_size_matches_enumeration():
+    for grid in (
+            _query_grid(),
+            SW.SweepGrid(arch="llava15-7b", chips=(4, 8),
+                         optimizers=(None, "adafactor"),
+                         remats=("none", "block", "dots"),
+                         grad_accums=(1, 2, 3),
+                         global_batches=(6, 8, 12), seq_lens=(256, 512)),
+    ):
+        assert grid.size() == sum(1 for _ in grid.cells())

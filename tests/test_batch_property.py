@@ -1,0 +1,89 @@
+"""Property tests (hypothesis) for the columnar batch predictor.
+
+Randomized small grids across all registered architectures, every step
+kind, both oracle backends, with and without a calibration profile: the
+columnar path (core/batch.py) must agree with the per-cell reference
+byte for byte on every field of every result row.
+
+Split out from tests/test_batch.py so the deterministic parity tests run
+even where hypothesis is not installed (same importorskip convention as
+tests/test_mesh_ctx.py).
+"""
+
+import pytest
+
+np = pytest.importorskip("numpy")
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis; `pip install hypothesis` "
+           "to run them")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.calibrate.profile import CalibrationProfile  # noqa: E402
+from repro.configs import registered_archs  # noqa: E402
+from repro.core import sweep as SW  # noqa: E402
+from repro.mesh_ctx import DEFAULT_RULES, shard_factor  # noqa: E402
+
+_profiles = st.one_of(
+    st.none(),
+    st.builds(
+        lambda s, sv, tr, ov, k: CalibrationProfile(
+            coefficients={"static": s, "act_saved": sv,
+                          "act_transient": tr, "overhead": ov},
+            chip_constant_bytes={"*": k}),
+        *(st.floats(0.5, 1.5) for _ in range(4)),
+        st.integers(0, 2 * 1024 ** 3)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    arch=st.sampled_from(registered_archs()),
+    chips=st.sampled_from([4, 8, 16]),
+    kind=st.sampled_from(["train", "prefill", "decode"]),
+    backend=st.sampled_from(["tpu", "cpu"]),
+    accums=st.lists(st.sampled_from([1, 2, 3, 4]), min_size=1,
+                    max_size=2, unique=True),
+    batches=st.lists(st.integers(1, 48), min_size=1, max_size=2,
+                     unique=True),
+    seqs=st.lists(st.sampled_from([128, 384, 512, 1024]), min_size=1,
+                  max_size=2, unique=True),
+    profile=_profiles)
+def test_property_columnar_equals_cell(arch, chips, kind, backend, accums,
+                                       batches, seqs, profile):
+    grid = SW.SweepGrid(arch=arch, chips=chips, grad_accums=tuple(accums),
+                        global_batches=tuple(batches),
+                        seq_lens=tuple(seqs), kind=kind, backend=backend,
+                        profile=profile)
+    cell = SW.SweepEngine().sweep(grid, mode="cell")
+    col = SW.SweepEngine().sweep(grid, mode="columnar")
+    assert len(cell) == len(col)
+    if len(col) and col.columns is None:
+        pytest.fail("columnar mode did not engage")
+    for a, b in zip(cell.results, col.results):
+        assert a == b
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    dims=st.lists(st.sampled_from([1, 2, 3, 8, 15, 16, 60, 576, 4096]),
+                  min_size=1, max_size=5),
+    data=st.sampled_from([1, 2, 4, 8, 16]),
+    model=st.sampled_from([1, 2, 4, 8, 16]),
+    pod=st.sampled_from([None, 1, 2]),
+    extra=st.sampled_from([(), ("data",)]),
+    axes_seed=st.integers(0, 2 ** 31))
+def test_property_batch_shard_factor_equals_scalar(dims, data, model, pod,
+                                                   extra, axes_seed):
+    import random
+
+    from repro.core.batch import batch_shard_factor
+    rng = random.Random(axes_seed)
+    pool = [None, "batch", "seq", "vocab", "heads", "kv_heads", "ffn",
+            "ssm", "layers", "cache_seq", "embed_cols", "experts"]
+    axes = tuple(rng.choice(pool) for _ in dims)
+    mesh = {"data": data, "model": model}
+    if pod is not None:
+        mesh["pod"] = pod
+    want = shard_factor(dims, axes, mesh, dict(DEFAULT_RULES), extra)
+    got = batch_shard_factor(dims, axes, mesh, dict(DEFAULT_RULES), extra)
+    assert int(got) == want

@@ -228,3 +228,51 @@ def test_cli_smoke(capsys):
 def test_cli_requires_mesh_or_chips():
     with pytest.raises(SystemExit):
         SW.main(["--arch", "smollm-360m"])
+
+
+def test_cli_empty_grid_exits_2_with_message(capsys):
+    # no --batch value divisible by the only --accum value -> 0 cells
+    rc = SW.main(["--arch", "smollm_360m", "--chips", "4",
+                  "--batch", "3,9", "--accum", "2", "--seq-len", "512"])
+    assert rc == 2
+    out = capsys.readouterr().out
+    assert "0 cells matched" in out
+    assert "|" not in out            # no empty table
+
+
+def test_cli_cell_mode(capsys):
+    rc = SW.main(["--arch", "smollm_360m", "--chips", "4",
+                  "--batch", "16", "--seq-len", "256", "--mode", "cell",
+                  "--top", "3"])
+    assert rc == 0
+    assert "mode=cell" in capsys.readouterr().out
+
+
+def test_cli_dry_run_counts_without_evaluating(capsys):
+    rc = SW.main(["--arch", "smollm_360m", "--chips", "256",
+                  "--batch", "64,128", "--accum", "1,2",
+                  "--seq-len", "1024,2048", "--remat", "none,block",
+                  "--dry-run"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    # 9 meshes x 2 remats x 4 (accum, batch) pairs x 2 seqs = 144
+    assert "144 cells" in out
+    assert "estimated runtime" in out
+    assert "cells in" not in out     # nothing was evaluated
+
+
+def test_cli_dry_run_empty_grid_exits_2(capsys):
+    rc = SW.main(["--arch", "smollm_360m", "--chips", "4",
+                  "--batch", "3", "--accum", "2", "--seq-len", "512",
+                  "--dry-run"])
+    assert rc == 2
+    assert "0 cells matched" in capsys.readouterr().out
+
+
+def test_grid_size_counts_divisibility_filter():
+    grid = SW.SweepGrid(arch="smollm-360m", chips=4, grad_accums=(1, 2, 3),
+                        global_batches=(6, 8, 9), seq_lens=(256,))
+    # pairs: accum 1 x {6,8,9}, accum 2 x {6,8}, accum 3 x {6,9} = 7
+    assert grid.size() == len(SW.SweepGrid(
+        arch="smollm-360m", chips=4).meshes()) * 7
+    assert grid.size() == sum(1 for _ in grid.cells())
