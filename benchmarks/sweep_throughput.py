@@ -16,14 +16,18 @@ so the perf trajectory is tracked across PRs.  Scales:
 
 * ``large`` (default): 124,416 cells — the ISSUE-3 acceptance grid
   (>= 100k cells, >= 50x columnar speedup);
-* ``smoke``: ~18k cells — the CI perf gate (use with
+* ``smoke``: ~31k cells — the CI perf gate, spanning pipeline degrees
+  pp in {1, 2, 4} x microbatches in {1, 4, 8} x both schedules on a
+  3-axis (data, model, pipe) mesh enumeration (use with
   ``--min-cells-per-sec`` / ``--min-speedup`` floors);
 * ``pr1``: the original 1,080-cell PR-1 grid (under_1s trajectory).
 
-``--verify`` additionally replays the 4,416-cell parity set — every
-arch x kind x backend x policy, with and without a calibration profile —
-through un-memoized ``planner.check`` cell by cell and fails on any
-byte difference (minutes, not timed).
+``--verify`` additionally replays the 5,208-cell parity set — every
+arch x kind x backend x policy, with and without a calibration profile,
+plus pp in {1, 2, 4} x microbatches in {1, 4, 8} x {1f1b, gpipe}
+pipeline grids over the whole zoo — through un-memoized
+``planner.check`` cell by cell and fails on any byte difference
+(minutes, not timed).
 """
 
 from __future__ import annotations
@@ -40,7 +44,11 @@ from common import write_bench  # noqa: E402
 from repro.configs import ShapeConfig, registered_archs  # noqa: E402
 from repro.core import planner, sweep as SW  # noqa: E402
 
-PARITY_CELLS = 4416
+PARITY_CELLS = 5208
+
+PP_MESHES = [{"data": 2, "model": 2, "pipe": 1},
+             {"data": 2, "model": 1, "pipe": 2},
+             {"data": 1, "model": 2, "pipe": 4}]
 
 
 def _bench_profile():
@@ -64,15 +72,18 @@ def build_grid(scale: str = "large") -> SW.SweepGrid:
             global_batches=(8, 16, 32, 64, 128, 256, 512, 1024, 2048,
                             4096),
             seq_lens=(2048,), chip="v5e", backend="tpu")
-    if scale == "smoke":                    # ~18k cells: CI perf gate
-        return SW.SweepGrid(
-            arch="llava15-7b", chips=(64, 256), chip="v5e",
+    if scale == "smoke":                    # ~31k cells: CI perf gate,
+        return SW.SweepGrid(                # pp in {1,2,4} x mb x sched
+            arch="llava15-7b", chips=64, chip="v5e",
+            mesh_axes=("data", "model", "pipe"),
+            max_axis={"pipe": 4},
             optimizers=(None, "adafactor"),
             remats=("none", "block", "dots"),
+            schedules=("1f1b", "gpipe"),
+            microbatches=(1, 4, 8),
             grad_accums=(1, 2, 4, 8),
-            global_batches=(8, 16, 32, 64, 128, 256, 512, 1024, 2048,
-                            4096, 8192, 16384),
-            seq_lens=(512, 1024, 2048, 4096), backend="tpu")
+            global_batches=(8, 16, 32, 64, 128, 256),
+            seq_lens=(1024, 4096), backend="tpu")
     return SW.SweepGrid(                    # large: 124,416 cells
         arch="llava15-7b", chips=(64, 128, 256),
         chip=("v5e", "v6e", "h100"),
@@ -116,12 +127,25 @@ def parity_set() -> list:
             arch="llava15-7b", chips=8, policy=pol,
             grad_accums=(1, 3), global_batches=(8, 12),
             seq_lens=(512, 1024, 2048), backend="cpu"))
+    for arch in registered_archs():           # pipeline grids: 12 x 54
+        for kind in ("train", "prefill", "decode"):
+            grids.append(SW.SweepGrid(
+                arch=arch, mesh_shapes=PP_MESHES, kind=kind,
+                schedules=("1f1b", "gpipe"), microbatches=(1, 4, 8),
+                global_batches=(8,), seq_lens=(1024,), backend="tpu"))
+    for arch in registered_archs():           # calibrated pp: 12 x 12
+        grids.append(SW.SweepGrid(
+            arch=arch, mesh_shapes=PP_MESHES,
+            schedules=("1f1b", "gpipe"), microbatches=(1, 8),
+            global_batches=(8,), seq_lens=(1024,), backend="cpu",
+            profile=profile))
     return grids
 
 
 def _columns(res) -> list:
     """(peak, fits, resolved knobs) per cell, for exact comparison."""
     return [(r.peak_bytes, r.fits, r.arch, r.chip, r.optimizer, r.remat,
+             r.schedule, r.microbatches,
              r.grad_accum, r.global_batch, r.seq_len,
              tuple(sorted(r.mesh_shape.items()))) for r in res.results]
 
@@ -145,7 +169,8 @@ def _verify_parity(verbose: bool) -> dict:
                 r.arch, shape, r.mesh_shape, policy=grid.policy,
                 backend=r.backend, grad_accum=r.grad_accum, remat=r.remat,
                 optimizer=r.optimizer, chip=r.chip,
-                headroom=grid.headroom, profile=grid.profile)
+                headroom=grid.headroom, profile=grid.profile,
+                microbatches=r.microbatches, schedule=r.schedule)
             if ref.peak_bytes != r.peak_bytes or ref.fits != r.fits:
                 mismatches += 1
                 if verbose and mismatches < 5:

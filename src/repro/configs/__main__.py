@@ -3,11 +3,16 @@
     PYTHONPATH=src python -m repro.configs
     PYTHONPATH=src python -m repro.configs --profile profile.json \
         --chip v5e --mesh data=16,model=16 --shape train_4k
+    PYTHONPATH=src python -m repro.configs --breakdown --arch llava15_7b \
+        --mesh data=4,model=2,pipe=2 --microbatches 4
 
 docs/configs.md embeds the plain output; re-run after registering a new
 arch.  With ``--profile`` (a fitted repro.calibrate CalibrationProfile)
 two extra columns show each architecture's predicted peak on the
-reference cell, raw and calibrated.
+reference cell, raw and calibrated.  With ``--breakdown`` one
+architecture's prediction is decomposed into the per-module memory table
+(``PredictedMemory.per_module``) and — when the mesh has a ``pipe``
+axis — the per-pipeline-stage table (``predictor.predict_stages``).
 """
 
 from __future__ import annotations
@@ -78,25 +83,132 @@ def table(profile=None, chip: str = "v5e",
     return markdown_table(headers, rows)
 
 
+def breakdown(arch: str, shape: str = "train_4k",
+              mesh: Optional[dict] = None, chip: str = "v5e",
+              policy: str = "full", backend: str = "tpu",
+              microbatches: int = 1, schedule: str = "1f1b") -> str:
+    """Per-module (and, with a ``pipe`` mesh axis, per-stage) memory
+    breakdown of one architecture's prediction on a reference cell."""
+    from repro.configs import get_config
+    from repro.core import planner as PL
+    from repro.core import predictor as PR
+    from repro.core.report import markdown_table
+    from repro.core.sweep import POLICIES, normalize_arch
+    from repro.models import build_model
+
+    arch = normalize_arch(arch)
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shp = PL._resolve_shape(shape)
+    mesh = mesh or {"data": 16, "model": 16}
+    ctx = PL.make_context(cfg, mesh, kind=shp.kind,
+                          global_batch=shp.global_batch,
+                          seq_len=shp.seq_len, backend=backend,
+                          microbatches=microbatches, schedule=schedule)
+    preds = PR.predict_stages(model, POLICIES[policy], ctx)
+    peak_stage = max(range(len(preds)),
+                     key=lambda i: preds[i].peak_bytes)
+    pred = preds[peak_stage]
+    budget = PL.chip_hbm(chip) * PL.HEADROOM
+    mesh_str = ",".join(f"{k}={v}" for k, v in sorted(mesh.items()))
+    gib = lambda v: f"{v / GiB:.3f}"
+    out = [f"## {arch} {shp.name} on {mesh_str} ({backend} prediction)",
+           "",
+           f"peak {pred.peak_bytes / GiB:.2f} GiB vs "
+           f"{budget / GiB:.2f} GiB budget ({chip}) -> "
+           f"{'FITS' if pred.peak_bytes <= budget else 'OOM'}", ""]
+    if len(preds) > 1:
+        from repro.core import stages as ST
+        rows = []
+        for i, p in enumerate(preds):
+            stash = ST.stash_count(i, ctx.pp, ctx.eff_microbatches,
+                                   ctx.schedule)
+            rows.append((i, len(p.per_module), stash,
+                         gib(p.param_bytes),
+                         gib(p.grad_bytes + p.opt_bytes),
+                         gib(p.act_saved_bytes),
+                         gib(p.act_transient_bytes),
+                         gib(p.loss_bytes + p.input_bytes
+                             + p.cache_bytes),
+                         gib(p.peak_bytes),
+                         "<- peak" if i == peak_stage else ""))
+        out.append(markdown_table(
+            ("stage", "modules", "stash", "param", "grad+opt",
+             "act_saved", "act_trans", "overheads", "peak_gib", ""),
+            rows,
+            title=f"pipeline stages (pp={ctx.pp} x {microbatches} "
+                  f"microbatches, {schedule})"))
+        out.append("")
+    mod_rows = []
+    for path, m in pred.per_module.items():
+        total = m["param"] + m["grad"] + m["opt"] + m["act"]
+        mod_rows.append((path, "yes" if m["trainable"] else "frozen",
+                         gib(m["param"]), gib(m["grad"]), gib(m["opt"]),
+                         gib(m["act"]), gib(total)))
+    title = ("per-module breakdown"
+             + (f" (peak stage {peak_stage})" if len(preds) > 1 else ""))
+    out.append(markdown_table(
+        ("module", "trainable", "param", "grad", "opt", "act_saved",
+         "total_gib"), mod_rows, title=title))
+    return "\n".join(out)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.configs")
     ap.add_argument("--profile", metavar="PATH", default=None,
                     help="CalibrationProfile JSON: adds raw + calibrated "
                          "predicted-peak columns")
+    ap.add_argument("--breakdown", action="store_true",
+                    help="print one arch's per-module / per-stage memory "
+                         "table for the reference cell (needs --arch)")
+    ap.add_argument("--arch", default=None,
+                    help="architecture for --breakdown")
+    ap.add_argument("--policy", default="full",
+                    help="train policy for --breakdown "
+                         "(full/llava_stage1/llava_stage2)")
+    ap.add_argument("--backend", default="tpu", choices=("tpu", "cpu"),
+                    help="prediction backend for --breakdown")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="pipeline microbatch count for --breakdown "
+                         "(with a pipe mesh axis)")
+    ap.add_argument("--schedule", default="1f1b",
+                    choices=("1f1b", "gpipe"),
+                    help="pipeline schedule for --breakdown")
     ap.add_argument("--chip", default=None,
-                    help="reference chip (with --profile; default v5e)")
+                    help="reference chip (default v5e)")
     ap.add_argument("--mesh", default=None, metavar="data=16,model=16",
-                    help="reference mesh (with --profile)")
+                    help="reference mesh (may include pipe=N)")
     ap.add_argument("--shape", default=None,
-                    help="reference shape (with --profile; "
-                         "default train_4k)")
+                    help="reference shape (default train_4k)")
     args = ap.parse_args(argv)
+    if args.breakdown:
+        if args.profile:
+            ap.error("--breakdown and --profile are mutually exclusive")
+        if not args.arch:
+            ap.error("--breakdown needs --arch")
+        from repro.core import planner as PL
+        from repro.core.sweep import POLICIES, _parse_mesh
+        try:
+            mesh = _parse_mesh(args.mesh) if args.mesh else None
+            chip = args.chip or "v5e"
+            PL.chip_hbm(chip)
+            if args.policy not in POLICIES:
+                raise ValueError(f"unknown policy {args.policy!r}; "
+                                 f"known: {sorted(POLICIES)}")
+            print(breakdown(args.arch, shape=args.shape or "train_4k",
+                            mesh=mesh, chip=chip, policy=args.policy,
+                            backend=args.backend,
+                            microbatches=args.microbatches,
+                            schedule=args.schedule))
+        except (KeyError, ValueError) as e:
+            ap.error(str(e))
+        return 0
     if args.profile is None:
         given = [f for f in ("chip", "mesh", "shape")
                  if getattr(args, f) is not None]
         if given:
             ap.error(f"--{'/--'.join(given)} only apply to the "
-                     f"--profile reference cell")
+                     f"--profile reference cell or --breakdown")
         print(table())
         return 0
     from repro.calibrate.profile import CalibrationProfile

@@ -3,32 +3,39 @@
 The per-cell path (``SweepEngine.evaluate`` -> ``predictor.assemble``)
 costs tens of microseconds of Python per cell; a real pre-launch capacity
 search covers 10^5-10^6 cells (every mesh factorization x remat x
-optimizer x grad-accum x batch x seq-len x chip type), where interpreter
-overhead — not arithmetic — is the bound.  This module lowers the
-predictor's component groups into structure-of-arrays NumPy kernels that
-evaluate ALL cells of a :class:`repro.core.sweep.SweepGrid` at once:
+optimizer x schedule x microbatches x grad-accum x batch x seq-len x chip
+type), where interpreter overhead — not arithmetic — is the bound.  This
+module lowers the predictor's component groups into structure-of-arrays
+NumPy kernels that evaluate ALL cells of a
+:class:`repro.core.sweep.SweepGrid` at once:
 
 * per-layer byte terms are factored into (arch-dependent,
   cell-independent) :class:`repro.core.factors.TermSpec` coefficient
-  tuples built once per arch x policy — the SAME specs the scalar path
-  evaluates, so the two paths share one source of truth;
+  tuples built once per arch x policy x pipeline stage — the SAME specs
+  the scalar path evaluates, so the two paths share one source of truth;
 * cell-dependent knobs (micro-batch, seq-len, encoder len, loss/flash
-  chunks) become int64 column arrays over the grid's unique knob
-  triples, contracted against the specs in ``O(layers x cells)`` array
-  ops;
+  chunks, pipeline microbatches) become int64 column arrays over the
+  grid's unique knob tuples, contracted against the specs in
+  ``O(stages x layers x cells)`` array ops;
 * mesh shard counts come from :func:`batch_shard_factor`, an exact
   broadcast transliteration of ``mesh_ctx.assign_axes`` — divisibility,
-  axis-reuse and FSDP/ZeRO greedy assignment are computed per cell with
-  boolean masks, in integer arithmetic;
+  axis-reuse, FSDP/ZeRO greedy assignment and the pipe-axis exclusion
+  are computed per cell with boolean masks, in integer arithmetic;
+* pipeline parallelism groups meshes by their ``pipe`` degree: every
+  mesh in a group shares one stage partition (``core.stages``), the
+  per-stage tables compose exactly like the scalar per-stage
+  ``assemble``, the schedule's in-flight stash scales the saved-act
+  column, and the cell's peak is the elementwise max over stages;
 * :class:`~repro.calibrate.profile.CalibrationProfile` application is a
-  vectorized affine transform (one multiply + round per term group).
+  vectorized affine transform per stage (one multiply + round per term
+  group), maxed over stages like the scalar path.
 
 Everything is exact int64 + floor-division arithmetic (float enters only
 where the scalar path itself uses floats: the calibration coefficients
 and the optimizer-transient fraction, reproduced operation-for-operation)
 so the columnar path is BYTE-IDENTICAL to per-cell ``planner.check`` —
-asserted cell-by-cell in tests/test_batch.py and on 100k+-cell grids by
-``benchmarks/sweep_throughput.py --verify``.
+asserted cell-by-cell in tests/test_batch.py + tests/test_stages.py and
+on 100k+-cell grids by ``benchmarks/sweep_throughput.py --verify``.
 """
 
 from __future__ import annotations
@@ -45,6 +52,7 @@ from repro.core import planner as PL
 from repro.core import predictor as PR
 from repro.core import sweep as SW
 from repro.core.spec import dtype_bytes
+from repro.mesh_ctx import PIPE_AXIS
 
 I64 = np.int64
 
@@ -62,7 +70,8 @@ def batch_shard_factor(dims, axes, sizes: dict, rules: dict,
     int64 arrays; the result has the full broadcast shape.  The greedy
     axis assignment of ``mesh_ctx.assign_axes`` (divisibility checks,
     one-use-per-axis, FSDP/ZeRO ``extra`` pass, the ``layers`` stack-dim
-    exclusion) is transliterated with per-cell boolean masks.
+    exclusion, the never-shard ``pipe`` axis) is transliterated with
+    per-cell boolean masks.
 
     Mesh axes absent from a given mesh may be supplied as size-1 entries:
     a size-1 axis multiplies every factor by 1 and never changes another
@@ -81,7 +90,7 @@ def batch_shard_factor(dims, axes, sizes: dict, rules: dict,
         if not ax:
             continue
         for a in rules.get(ax, ()):
-            if a not in svals:
+            if a == PIPE_AXIS or a not in svals:
                 continue
             ok = np.broadcast_to(arrs[i] % (totals[i] * svals[a]) == 0,
                                  shape)
@@ -92,7 +101,7 @@ def batch_shard_factor(dims, axes, sizes: dict, rules: dict,
             denom = np.where(ok, denom * svals[a], denom)
             used[a] = ok if prev is None else (prev | ok)
     for a in extra:
-        if a not in svals:
+        if a == PIPE_AXIS or a not in svals:
             continue
         prev = used.get(a)
         avail = ~prev if prev is not None else np.ones(shape, bool)
@@ -140,6 +149,8 @@ class CellColumns:
     meshes: tuple                   # of dict
     opts: tuple                     # raw (may contain None)
     remats: tuple                   # raw (may contain None)
+    scheds: tuple                   # pipeline schedules ("1f1b"/"gpipe")
+    mbs: tuple                      # pipeline microbatch counts
     pairs: tuple                    # (grad_accum, global_batch), enum order
     seqs: tuple
     kind: str
@@ -150,47 +161,56 @@ class CellColumns:
     mesh_c: np.ndarray
     opt_c: np.ndarray
     remat_c: np.ndarray
+    sched_c: np.ndarray
+    mb_c: np.ndarray
     pair_c: np.ndarray
     seq_c: np.ndarray
     # per-cell knob values (int64)
     accum: np.ndarray
     gb: np.ndarray
     seq: np.ndarray
+    micro: np.ndarray
 
 
 def build_columns(grid: "SW.SweepGrid") -> CellColumns:
     """Lower a grid to code columns.  Mirrors ``SweepGrid.cells()``:
-    arch -> chip -> mesh -> optimizer -> remat -> accum -> batch -> seq,
-    innermost fastest, with non-divisible (batch, accum) pairs dropped."""
+    arch -> chip -> mesh -> optimizer -> remat -> schedule -> microbatch
+    -> accum -> batch -> seq, innermost fastest, with non-divisible
+    (batch, accum) pairs dropped."""
     arches = tuple(SW.normalize_arch(a) for a in SW._seq(grid.arch))
     chips = tuple(SW._seq(grid.chip))
     meshes = tuple(grid.meshes())
     opts = tuple(SW._seq(grid.optimizers))
     remats = tuple(SW._seq(grid.remats))
+    scheds = tuple(grid.check_schedules())
+    mbs = tuple(int(m) for m in SW._seq(grid.microbatches))
     pairs = tuple((int(a), int(g)) for a in SW._seq(grid.grad_accums)
                   for g in SW._seq(grid.global_batches) if not g % a)
     seqs = tuple(int(s) for s in SW._seq(grid.seq_lens))
 
     sizes = [len(arches), len(chips), len(meshes), len(opts), len(remats),
-             len(pairs), len(seqs)]
+             len(scheds), len(mbs), len(pairs), len(seqs)]
     n = math.prod(sizes)
     if n == 0:
         z = np.zeros(0, I64)
-        return CellColumns(0, arches, chips, meshes, opts, remats, pairs,
-                           seqs, grid.kind, grid.backend,
-                           z, z, z, z, z, z, z, z, z, z)
+        return CellColumns(0, arches, chips, meshes, opts, remats, scheds,
+                           mbs, pairs, seqs, grid.kind, grid.backend,
+                           z, z, z, z, z, z, z, z, z, z, z, z, z)
     idx = np.arange(n, dtype=I64)
     codes = []
     for s in reversed(sizes):
         codes.append(idx % s)
         idx //= s
-    seq_c, pair_c, remat_c, opt_c, mesh_c, chip_c, arch_c = codes
+    (seq_c, pair_c, mb_c, sched_c, remat_c, opt_c, mesh_c, chip_c,
+     arch_c) = codes
     accum = np.array([p[0] for p in pairs], I64)[pair_c]
     gb = np.array([p[1] for p in pairs], I64)[pair_c]
     seq = np.array(seqs, I64)[seq_c]
-    return CellColumns(n, arches, chips, meshes, opts, remats, pairs, seqs,
-                       grid.kind, grid.backend, arch_c, chip_c, mesh_c,
-                       opt_c, remat_c, pair_c, seq_c, accum, gb, seq)
+    micro = np.array(mbs, I64)[mb_c]
+    return CellColumns(n, arches, chips, meshes, opts, remats, scheds, mbs,
+                       pairs, seqs, grid.kind, grid.backend, arch_c,
+                       chip_c, mesh_c, opt_c, remat_c, sched_c, mb_c,
+                       pair_c, seq_c, accum, gb, seq, micro)
 
 
 # ---------------------------------------------------------------------------
@@ -212,11 +232,14 @@ class ColumnarResults:
     n_chips_by_mesh: np.ndarray
     opt_names: tuple                 # resolved (never None)
     remat_names: tuple               # resolved
+    sched_names: tuple
     arch_c: np.ndarray
     chip_c: np.ndarray
     mesh_c: np.ndarray
     opt_c: np.ndarray                # codes into opt_names
     remat_c: np.ndarray              # codes into remat_names
+    sched_c: np.ndarray              # codes into sched_names
+    microbatches: np.ndarray
     grad_accum: np.ndarray
     global_batch: np.ndarray
     seq_len: np.ndarray
@@ -236,6 +259,8 @@ class ColumnarResults:
             n_chips=int(self.n_chips_by_mesh[self.mesh_c[i]]),
             optimizer=self.opt_names[self.opt_c[i]],
             remat=self.remat_names[self.remat_c[i]],
+            schedule=self.sched_names[self.sched_c[i]],
+            microbatches=int(self.microbatches[i]),
             grad_accum=int(self.grad_accum[i]),
             global_batch=int(self.global_batch[i]),
             seq_len=int(self.seq_len[i]),
@@ -245,7 +270,7 @@ class ColumnarResults:
             fits=bool(self.fits[i]), prediction=None)
 
 # ---------------------------------------------------------------------------
-# per-arch component tables
+# per-arch / per-stage component tables
 # ---------------------------------------------------------------------------
 
 
@@ -279,33 +304,36 @@ def _dims_prod(dims) -> np.ndarray:
     return q
 
 
-@dataclass
-class _ArchTables:
-    """Component-group tables for one arch over (meshes x knob triples)."""
+def _knob_env(cfg, cols: CellColumns, pp: int) -> dict:
+    """Int64 knob columns over the grid's unique
+    (microbatches, accum, batch, seq) tuples for one pipeline degree —
+    the batch twin of ``factors.term_env`` (whose ``mb`` is the pipeline
+    micro-batch) plus the derived columns the composition needs.
 
-    opt_res: tuple                  # resolved optimizer per opt code
-    remat_res: tuple                # resolved remat per remat code
-    remat_idx: np.ndarray           # remat code -> axis-0 index of `saved`
-    static_sum: np.ndarray          # (n_mesh, n_opt, 2)  [cls: eff 2 / 4]
-    opt_trans: np.ndarray           # (n_mesh, n_opt)
-    static_scaled: Optional[np.ndarray]   # profile-scaled static group
-    saved: np.ndarray               # (n_remat_eval, n_mesh, T)
-    transient: np.ndarray           # (n_mesh, T)
-    loss: np.ndarray                # (n_mesh, T)
-    inputs: np.ndarray              # (n_mesh, T)
-    cache: np.ndarray               # (n_mesh, T)
-    embed: int
-
-
-def _knob_env(cfg, cols: CellColumns) -> tuple:
-    """Int64 knob columns over the grid's unique (accum, batch, seq)
-    triples — the batch twin of ``factors.term_env``."""
+    Microbatches only split the batch when there is a pipeline to fill
+    (``PredictContext.eff_microbatches``); pp==1 / serve groups collapse
+    the microbatch axis entirely (``_expanded`` False) so their tables
+    are not built ``len(microbatches)`` times over identical columns —
+    the caller indexes them with the reduced (pair, seq) code."""
     from repro.models.transformer import LOSS_CHUNK
-    n_seq = len(cols.seqs)
-    accum_t = np.repeat(np.array([p[0] for p in cols.pairs], I64), n_seq)
-    gb_t = np.repeat(np.array([p[1] for p in cols.pairs], I64), n_seq)
-    seq_t = np.tile(np.array(cols.seqs, I64), len(cols.pairs))
-    mb_t = np.maximum(gb_t // np.maximum(accum_t, 1), 1)
+    n_pairs, n_seq = len(cols.pairs), len(cols.seqs)
+    accum_1 = np.repeat(np.array([p[0] for p in cols.pairs], I64), n_seq)
+    gb_1 = np.repeat(np.array([p[1] for p in cols.pairs], I64), n_seq)
+    seq_1 = np.tile(np.array(cols.seqs, I64), n_pairs)
+    expanded = pp > 1 and cols.kind == "train"
+    if expanded:
+        n_m = len(cols.mbs)
+        accum_t = np.tile(accum_1, n_m)
+        gb_t = np.tile(gb_1, n_m)
+        seq_t = np.tile(seq_1, n_m)
+        micro_t = np.repeat(np.array(cols.mbs, I64), n_pairs * n_seq)
+        eff_m = np.maximum(micro_t, 1)       # PredictContext.eff_microbatches
+    else:
+        accum_t, gb_t, seq_t = accum_1, gb_1, seq_1
+        eff_m = np.ones_like(gb_t)
+    mb_t = np.maximum(np.maximum(gb_t // np.maximum(accum_t, 1), 1)
+                      // eff_m, 1)           # PredictContext.pp_micro_batch
+    gb_in = np.maximum(gb_t // eff_m, 1)     # _input_bytes batch dim
     if cfg.encdec:
         ratio = cfg.encdec.enc_seq_ratio
         # exact Python int(seq * ratio), as make_context computes it
@@ -318,82 +346,42 @@ def _knob_env(cfg, cols: CellColumns) -> tuple:
            "qc": np.minimum(F.FLASH_CHUNK, seq_t),
            "tok_cross": np.where(enc_t > 0, enc_t, seq_t),
            "cache_mult": 3 if (cols.backend == "cpu"
-                               and cols.kind == "decode") else 1}
-    return env, accum_t, gb_t, seq_t
-
-
-def _arch_tables(engine, arch: str, grid, cols: CellColumns,
-                 profile, jobs: int = 1) -> _ArchTables:
-    from repro.launch.mesh import arch_rules
-    cfg, model, rows = engine._arch_state(arch, grid.policy)
-    kind, backend = cols.kind, cols.backend
-    rules = arch_rules(cfg, kind)
-    env, accum_t, gb_t, seq_t = _knob_env(cfg, cols)
-    opt_res = tuple(o or cfg.optimizer for o in cols.opts)
-    remat_res = tuple(r or cfg.remat for r in cols.remats)
-    remat_eval = tuple(dict.fromkeys(remat_res))
-    remat_idx = np.array([remat_eval.index(r) for r in remat_res], I64)
-    # backend-derived scalars (bf16 multipliers, opt-transient fraction)
-    rep_ctx = PL.make_context(
-        cfg, dict(cols.meshes[0]), kind=kind, global_batch=int(gb_t[0]),
-        seq_len=int(seq_t[0]), backend=backend)
-
-    mesh_ids = list(range(len(cols.meshes)))
-    if jobs > 1 and len(mesh_ids) > 1:
-        from concurrent.futures import ThreadPoolExecutor
-        chunks = [c.tolist() for c in
-                  np.array_split(np.asarray(mesh_ids), jobs) if len(c)]
-        with ThreadPoolExecutor(max_workers=len(chunks)) as ex:
-            parts = list(ex.map(
-                lambda ids: _mesh_chunk_tables(
-                    cfg, model, rows, rules, rep_ctx, cols, env, profile,
-                    opt_res, remat_eval, ids), chunks))
-        first = parts[0]
-        cat = lambda pick, axis: np.concatenate(
-            [pick(p) for p in parts], axis=axis)
-        return _ArchTables(
-            opt_res=opt_res, remat_res=remat_res, remat_idx=remat_idx,
-            static_sum=cat(lambda p: p.static_sum, 0),
-            opt_trans=cat(lambda p: p.opt_trans, 0),
-            static_scaled=None if first.static_scaled is None
-            else cat(lambda p: p.static_scaled, 0),
-            saved=cat(lambda p: p.saved, 1),
-            transient=cat(lambda p: p.transient, 0),
-            loss=cat(lambda p: p.loss, 0),
-            inputs=cat(lambda p: p.inputs, 0),
-            cache=cat(lambda p: p.cache, 0),
-            embed=first.embed)
-    part = _mesh_chunk_tables(cfg, model, rows, rules, rep_ctx, cols, env,
-                              profile, opt_res, remat_eval, mesh_ids)
-    return _ArchTables(
-        opt_res=opt_res, remat_res=remat_res, remat_idx=remat_idx,
-        static_sum=part.static_sum, opt_trans=part.opt_trans,
-        static_scaled=part.static_scaled, saved=part.saved,
-        transient=part.transient, loss=part.loss, inputs=part.inputs,
-        cache=part.cache, embed=part.embed)
+                               and cols.kind == "decode") else 1,
+           # derived (not TermSpec dims)
+           "_eff_m": eff_m, "_gb_in": gb_in, "_expanded": expanded}
+    return env
 
 
 @dataclass
-class _ChunkTables:
-    static_sum: np.ndarray
-    opt_trans: np.ndarray
-    static_scaled: Optional[np.ndarray]
-    saved: np.ndarray
-    transient: np.ndarray
-    loss: np.ndarray
-    inputs: np.ndarray
-    cache: np.ndarray
+class _StageTables:
+    """Component-group tables for one (arch, pipeline stage) over
+    (pp-group meshes x knob tuples)."""
+
+    static_sum: np.ndarray          # (n_mesh, n_opt, 2)  [cls: eff 2 / 4]
+    opt_trans: np.ndarray           # (n_mesh, n_opt)
+    static_scaled: Optional[np.ndarray]   # profile-scaled static group
+    saved: np.ndarray               # (n_remat_eval, n_mesh, T)
+    transient: np.ndarray           # (n_mesh, T)
+    loss: np.ndarray                # (n_mesh, T)
+    inputs: np.ndarray              # (n_mesh, T)
+    cache: np.ndarray               # (n_mesh, T)
+    boundary: np.ndarray            # (n_mesh, T)
     embed: int
 
 
-def _mesh_chunk_tables(cfg, model, rows, rules, rep_ctx,
-                       cols: CellColumns, env: dict, profile,
-                       opt_res: tuple, remat_eval: tuple,
-                       mesh_ids: list) -> _ChunkTables:
+def _stage_tables(cfg, model, rows, rules, rep_ctx,
+                  cols: CellColumns, env: dict, profile,
+                  opt_res: tuple, remat_eval: tuple,
+                  mesh_ids, stage: int, pp: int) -> _StageTables:
+    """Tables for ONE pipeline stage's rows over the meshes in
+    ``mesh_ids`` (the whole model when ``pp == 1``) — the columnar twin
+    of ``compute_static`` / ``compute_acts`` / ``compute_overheads`` on
+    that stage (the stash multiplier is applied by the caller)."""
     kind, backend = cols.kind, cols.backend
+    first, last = stage == 0, stage == pp - 1
     meshes = [cols.meshes[i] for i in mesh_ids]
     n_mesh = len(meshes)
-    T = len(cols.pairs) * len(cols.seqs)
+    T = len(env["mb"])
     axes_names = sorted({a for m in meshes for a in m})
     sizes1 = {a: np.array([m.get(a, 1) for m in meshes], I64)
               for a in axes_names}
@@ -477,9 +465,9 @@ def _mesh_chunk_tables(cfg, model, rows, rules, rep_ctx,
             T_full = sum(trans_vals)
             S_dots = sum((v for t, v in zip(r.layer.acts, saved_vals)
                           if F._is_dot_term(t)), np.asarray(0, I64))
-            first = r.layer.acts[0]
-            S_block = by_name.get(first.name) \
-                if (first.name.endswith(".in")
+            first_act = r.layer.acts[0]
+            S_block = by_name.get(first_act.name) \
+                if (first_act.name.endswith(".in")
                     and r.layer.kind in ("rmsnorm", "layernorm")) else None
             inv = r.layer.meta.get("invocation_repeat")
             if r.trainable:
@@ -536,9 +524,12 @@ def _mesh_chunk_tables(cfg, model, rows, rules, rep_ctx,
             t = sum(eval_term_batch(s, env, sizes2, rules) for s in group)
             transient = np.maximum(transient, t)
 
-    # -- overhead group (loss head, batch inputs, serve caches) ----------
-    loss = full(sum(eval_term_batch(s, env, sizes2, rules)
-                    for s in PR.loss_specs(cfg, kind)))
+    # -- overhead group (loss head, inputs, caches, boundary buffers) ----
+    if last:
+        loss = full(sum(eval_term_batch(s, env, sizes2, rules)
+                        for s in PR.loss_specs(cfg, kind)))
+    else:
+        loss = full(0)
     if kind == "train":
         cache = full(0)
     else:
@@ -546,37 +537,83 @@ def _mesh_chunk_tables(cfg, model, rows, rules, rep_ctx,
                           for s in PR.cache_specs(rows)),
                          np.asarray(0, I64)))
     embed = PR.embed_gather_const(rows, backend)
+    bmult = PR.boundary_mult(stage, pp, kind)
+    if bmult:
+        boundary = full(bmult * sum(
+            eval_term_batch(s, env, sizes2, rules)
+            for s in PR.boundary_specs(cfg, kind)))
+    else:
+        boundary = full(0)
 
-    from repro.configs import ShapeConfig
-    gs_index: dict = {}
-    gs_order: list = []
-    for _, g in cols.pairs:
-        for s in cols.seqs:
+    if first:
+        from repro.configs import ShapeConfig
+        gb_in, seq_t = env["_gb_in"], env["seq"]
+        gs_index: dict = {}
+        gs_order: list = []
+        for g, s in zip(gb_in.tolist(), seq_t.tolist()):
             if (g, s) not in gs_index:
                 gs_index[(g, s)] = len(gs_order)
                 gs_order.append((g, s))
-    gb_t, seq_t = env["gb"], env["seq"]
-    t_to_gs = np.array([gs_index[(int(g), int(s))]
-                        for g, s in zip(gb_t.tolist(), seq_t.tolist())],
-                       I64)
-    input_gs = np.zeros((n_mesh, len(gs_order)), I64)
-    for gi, (g, s) in enumerate(gs_order):
-        tot = np.zeros(n_mesh, I64)
-        for arr in model.batch_spec(ShapeConfig("tmp", s, g, kind)).values():
-            ax = ("batch",) + (None,) * (len(arr.shape) - 1)
-            den = batch_shard_factor(arr.shape, ax, sizes1, rules)
-            tot += math.prod(arr.shape) * arr.dtype.itemsize \
-                // np.maximum(den, 1)
-        input_gs[:, gi] = tot
-    inputs = input_gs[:, t_to_gs]
+        t_to_gs = np.array([gs_index[(g, s)]
+                            for g, s in zip(gb_in.tolist(),
+                                            seq_t.tolist())], I64)
+        input_gs = np.zeros((n_mesh, len(gs_order)), I64)
+        for gi, (g, s) in enumerate(gs_order):
+            tot = np.zeros(n_mesh, I64)
+            for arr in model.batch_spec(
+                    ShapeConfig("tmp", s, g, kind)).values():
+                ax = ("batch",) + (None,) * (len(arr.shape) - 1)
+                den = batch_shard_factor(arr.shape, ax, sizes1, rules)
+                tot += math.prod(arr.shape) * arr.dtype.itemsize \
+                    // np.maximum(den, 1)
+            input_gs[:, gi] = tot
+        inputs = input_gs[:, t_to_gs]
+    else:
+        inputs = full(0)
 
-    return _ChunkTables(
+    return _StageTables(
         static_sum=static_sum, opt_trans=opt_trans,
         static_scaled=static_scaled,
         saved=np.ascontiguousarray(
             np.broadcast_to(saved_stack, (len(remat_eval),) + shape2)),
         transient=full(transient), loss=loss, inputs=inputs, cache=cache,
-        embed=embed)
+        boundary=boundary, embed=embed)
+
+
+def _stage_tables_jobs(cfg, model, rows, rules, rep_ctx, cols, env,
+                       profile, opt_res, remat_eval, mesh_ids,
+                       stage: int, pp: int, jobs: int) -> _StageTables:
+    """``_stage_tables`` with the mesh axis split over worker threads
+    (order-identical results)."""
+    mesh_ids = list(mesh_ids)
+    if jobs <= 1 or len(mesh_ids) <= 1:
+        return _stage_tables(cfg, model, rows, rules, rep_ctx, cols, env,
+                             profile, opt_res, remat_eval, mesh_ids,
+                             stage, pp)
+    from concurrent.futures import ThreadPoolExecutor
+    chunks = [c.tolist() for c in
+              np.array_split(np.asarray(mesh_ids), jobs) if len(c)]
+    with ThreadPoolExecutor(max_workers=len(chunks)) as ex:
+        parts = list(ex.map(
+            lambda ids: _stage_tables(cfg, model, rows, rules, rep_ctx,
+                                      cols, env, profile, opt_res,
+                                      remat_eval, ids, stage, pp),
+            chunks))
+    first = parts[0]
+    cat = lambda pick, axis: np.concatenate(
+        [pick(p) for p in parts], axis=axis)
+    return _StageTables(
+        static_sum=cat(lambda p: p.static_sum, 0),
+        opt_trans=cat(lambda p: p.opt_trans, 0),
+        static_scaled=None if first.static_scaled is None
+        else cat(lambda p: p.static_scaled, 0),
+        saved=cat(lambda p: p.saved, 1),
+        transient=cat(lambda p: p.transient, 0),
+        loss=cat(lambda p: p.loss, 0),
+        inputs=cat(lambda p: p.inputs, 0),
+        cache=cat(lambda p: p.cache, 0),
+        boundary=cat(lambda p: p.boundary, 0),
+        embed=first.embed)
 
 
 # ---------------------------------------------------------------------------
@@ -601,7 +638,7 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
                                elapsed_s=time.perf_counter() - t0)
     profile = grid.profile
     n = cols.n
-    n_seq = len(cols.seqs)
+    n_pairs, n_seq = len(cols.pairs), len(cols.seqs)
     peak = np.zeros(n, I64)
     opt_names: list = []
     remat_names: list = []
@@ -609,44 +646,98 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
     remat_tbl: dict = {}
     res_opt_c = np.zeros(n, I64)
     res_remat_c = np.zeros(n, I64)
+    pp_of = np.array([int(m.get(PIPE_AXIS, 1)) for m in cols.meshes], I64)
+    is_gpipe_sched = np.array([s == "gpipe" for s in cols.scheds], bool)
+    from repro.launch.mesh import arch_rules
     block = n // len(cols.arches)
     for ai, arch in enumerate(cols.arches):
         sl = slice(ai * block, (ai + 1) * block)
-        tabs = _arch_tables(engine, arch, grid, cols, profile, jobs=jobs)
+        cfg, model, rows = engine._arch_state(arch, grid.policy)
+        rules = arch_rules(cfg, cols.kind)
+        opt_res = tuple(o or cfg.optimizer for o in cols.opts)
+        remat_res = tuple(r or cfg.remat for r in cols.remats)
+        remat_eval = tuple(dict.fromkeys(remat_res))
+        remat_idx = np.array([remat_eval.index(r) for r in remat_res], I64)
+        # backend-derived scalars (bf16 multipliers, opt-transient frac)
+        rep_ctx = PL.make_context(
+            cfg, dict(cols.meshes[0]), kind=cols.kind,
+            global_batch=int(cols.gb[sl][0]), seq_len=int(cols.seq[sl][0]),
+            backend=cols.backend)
+
         m_c = cols.mesh_c[sl]
         o_c = cols.opt_c[sl]
-        t_c = cols.pair_c[sl] * n_seq + cols.seq_c[sl]
-        cls_c = (cols.accum[sl] > 1).astype(I64)
-        r_c = tabs.remat_idx[cols.remat_c[sl]]
-        saved = tabs.saved[r_c, m_c, t_c]
-        trans = tabs.transient[m_c, t_c]
-        loss = tabs.loss[m_c, t_c]
-        inp = tabs.inputs[m_c, t_c]
-        cache = tabs.cache[m_c, t_c]
-        if profile is None:
-            peak[sl] = (tabs.static_sum[m_c, o_c, cls_c]
-                        + tabs.opt_trans[m_c, o_c]
-                        + saved + trans + tabs.embed + loss + inp + cache)
-        else:
-            # assemble() folds embed gathers + the optimizer-update
-            # transient into act_transient BEFORE the profile scales it;
-            # loss/input/cache round separately, exactly like apply()
+        t2_full = (cols.mb_c[sl] * n_pairs + cols.pair_c[sl]) * n_seq \
+            + cols.seq_c[sl]
+        t2_flat = cols.pair_c[sl] * n_seq + cols.seq_c[sl]
+        r_codes = remat_idx[cols.remat_c[sl]]
+        accum_col = cols.accum[sl]
+        gpipe_col = is_gpipe_sched[cols.sched_c[sl]]
+        chip_off = None
+        if profile is not None:
             chip_off = np.array([profile.chip_offset(c)
                                  for c in cols.chips], I64)[cols.chip_c[sl]]
-            peak[sl] = (tabs.static_scaled[m_c, o_c, cls_c]
-                        + profile.scale_batch(saved, "act_saved")
-                        + profile.scale_batch(
-                            trans + tabs.embed + tabs.opt_trans[m_c, o_c],
-                            "act_transient")
-                        + profile.scale_batch(loss, "overhead")
-                        + profile.scale_batch(inp, "overhead")
-                        + profile.scale_batch(cache, "overhead")
-                        + chip_off)
+
+        arch_peak = np.zeros(block, I64)
+        for pp in sorted(set(pp_of.tolist())):
+            mesh_ids = np.flatnonzero(pp_of == pp)
+            sel = np.isin(m_c, mesh_ids)
+            if not sel.any():
+                continue
+            env = _knob_env(cfg, cols, pp)
+            plan = engine._stage_plan(arch, grid.policy, pp)
+            lidx = np.full(len(cols.meshes), -1, I64)
+            lidx[mesh_ids] = np.arange(len(mesh_ids), dtype=I64)
+            lm = lidx[m_c[sel]]
+            t2 = (t2_full if env["_expanded"] else t2_flat)[sel]
+            osel = o_c[sel]
+            rsel = r_codes[sel]
+            eff_m_cells = env["_eff_m"][t2]
+            cls = ((accum_col[sel] > 1) | (eff_m_cells > 1)).astype(I64)
+            gp = gpipe_col[sel]
+            best = np.zeros(int(sel.sum()), I64)
+            for s, srows in enumerate(plan.stages):
+                tabs = _stage_tables_jobs(
+                    cfg, model, list(srows), rules, rep_ctx, cols, env,
+                    profile, opt_res, remat_eval, mesh_ids, s, pp, jobs)
+                # schedule stash: GPipe stages hold all m microbatch
+                # activation sets, 1F1B stage s holds min(pp - s, m)
+                stash = np.maximum(
+                    np.where(gp, eff_m_cells,
+                             np.minimum(pp - s, eff_m_cells)), 1)
+                saved = tabs.saved[rsel, lm, t2] * stash
+                trans = tabs.transient[lm, t2]
+                loss = tabs.loss[lm, t2]
+                inp = tabs.inputs[lm, t2]
+                cache = tabs.cache[lm, t2]
+                bnd = tabs.boundary[lm, t2]
+                if profile is None:
+                    speak = (tabs.static_sum[lm, osel, cls]
+                             + tabs.opt_trans[lm, osel]
+                             + saved + trans + bnd + tabs.embed
+                             + loss + inp + cache)
+                else:
+                    # assemble() folds embed gathers + boundary buffers +
+                    # the optimizer-update transient into act_transient
+                    # BEFORE the profile scales it; loss/input/cache
+                    # round separately, exactly like apply()
+                    speak = (tabs.static_scaled[lm, osel, cls]
+                             + profile.scale_batch(saved, "act_saved")
+                             + profile.scale_batch(
+                                 trans + bnd + tabs.embed
+                                 + tabs.opt_trans[lm, osel],
+                                 "act_transient")
+                             + profile.scale_batch(loss, "overhead")
+                             + profile.scale_batch(inp, "overhead")
+                             + profile.scale_batch(cache, "overhead")
+                             + chip_off[sel])
+                best = np.maximum(best, speak)
+            arch_peak[sel] = best
+        peak[sl] = arch_peak
         per_opt = np.array([_intern(opt_tbl, opt_names, o)
-                            for o in tabs.opt_res], I64)
+                            for o in opt_res], I64)
         res_opt_c[sl] = per_opt[o_c]
         per_remat = np.array([_intern(remat_tbl, remat_names, r)
-                              for r in tabs.remat_res], I64)
+                              for r in remat_res], I64)
         res_remat_c[sl] = per_remat[cols.remat_c[sl]]
     budget = np.array([int(PL.chip_hbm(c) * grid.headroom)
                        for c in cols.chips], I64)[cols.chip_c]
@@ -657,8 +748,10 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
         arch_names=cols.arches, chip_names=cols.chips, meshes=cols.meshes,
         n_chips_by_mesh=n_chips_by_mesh,
         opt_names=tuple(opt_names), remat_names=tuple(remat_names),
+        sched_names=cols.scheds,
         arch_c=cols.arch_c, chip_c=cols.chip_c, mesh_c=cols.mesh_c,
-        opt_c=res_opt_c, remat_c=res_remat_c,
+        opt_c=res_opt_c, remat_c=res_remat_c, sched_c=cols.sched_c,
+        microbatches=cols.micro,
         grad_accum=cols.accum, global_batch=cols.gb, seq_len=cols.seq,
         peak_bytes=peak, budget_bytes=budget, fits=peak <= budget)
     return SW.SweepResults(grid=grid, columns=columns,

@@ -71,10 +71,13 @@ class TermSpec:
 
 
 def term_env(ctx: "PredictContext") -> dict:
-    """Scalar evaluation environment for TermSpec dims."""
+    """Scalar evaluation environment for TermSpec dims.  ``mb`` is the
+    *pipeline* micro-batch: under pipeline parallelism only one
+    microbatch's activations are in flight per term (the stash multiplier
+    in ``core.stages`` accounts for the schedule's in-flight copies)."""
     from repro.models.transformer import LOSS_CHUNK
     slen = ctx.max_len or ctx.seq_len
-    return {"mb": ctx.micro_batch, "gb": ctx.global_batch,
+    return {"mb": ctx.pp_micro_batch, "gb": ctx.global_batch,
             "seq": ctx.seq_len, "enc": ctx.enc_seq, "slen": slen,
             "chunk": min(LOSS_CHUNK, ctx.seq_len),
             "qc": min(FLASH_CHUNK, ctx.seq_len),
@@ -115,6 +118,12 @@ class PredictContext:
     enc_seq: int = 0
     kind: str = "train"            # train | prefill | decode
     max_len: int = 0               # KV-cache length for decode
+    # Pipeline parallelism: the mesh's `pipe` axis degree, the microbatch
+    # count the batch is split into, and the schedule governing how many
+    # microbatch activation sets are in flight per stage (core.stages).
+    pp: int = 1
+    microbatches: int = 1
+    schedule: str = "1f1b"         # "1f1b" | "gpipe"
     grad_accum: int = 1
     grad_dtype_bytes: int = 2      # bf16 grads
     master_fp32: bool = True       # keep fp32 master copy in optimizer
@@ -137,7 +146,7 @@ class PredictContext:
 
     @property
     def eff_grad_bytes(self) -> int:
-        if self.grad_accum > 1:
+        if self.grad_accum > 1 or self.eff_microbatches > 1:
             return 4                     # fp32 cross-microbatch accumulator
         return self.grad_dtype_bytes
 
@@ -156,6 +165,25 @@ class PredictContext:
     def micro_batch(self) -> int:
         """Activations live per-microbatch under gradient accumulation."""
         return max(self.global_batch // max(self.grad_accum, 1), 1)
+
+    @property
+    def eff_microbatches(self) -> int:
+        """Pipeline microbatch count that actually splits the batch.
+
+        Without a pipeline (``pp == 1``) there is nothing to fill — the
+        step is the plain fused step and ``microbatches`` is inert
+        (gradient accumulation already models batch splitting there);
+        serve steps never split either.
+        """
+        if self.pp > 1 and self.kind == "train":
+            return max(self.microbatches, 1)
+        return 1
+
+    @property
+    def pp_micro_batch(self) -> int:
+        """Per-pipeline-microbatch batch size: the batch dimension every
+        in-flight activation/loss term sees."""
+        return max(self.micro_batch // self.eff_microbatches, 1)
 
     @property
     def dp(self) -> int:
@@ -273,7 +301,7 @@ def layer_act_terms(row: ParsedLayer, ctx: PredictContext,
                     batch: Optional[int] = None,
                     saved: bool = False) -> dict[str, int]:
     """Bytes of each activation tensor of ONE instance of this layer."""
-    b = batch if batch is not None else ctx.micro_batch
+    b = batch if batch is not None else ctx.pp_micro_batch
     return {t.name: _term_bytes(t, ctx, b, saved) for t in row.layer.acts}
 
 

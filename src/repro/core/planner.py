@@ -89,11 +89,19 @@ class PlanReport:
 def make_context(cfg, mesh_shape: dict, *, kind: str, global_batch: int,
                  seq_len: int, backend: str = "tpu", grad_accum: int = 1,
                  remat: Optional[str] = None,
-                 optimizer: Optional[str] = None) -> F.PredictContext:
+                 optimizer: Optional[str] = None,
+                 microbatches: int = 1,
+                 schedule: str = "1f1b") -> F.PredictContext:
     """The ONE place a planner/sweep cell becomes a PredictContext — the
     sweep engine and ``check`` share it, so their predictions can never
-    diverge on context construction."""
+    diverge on context construction.  The pipeline degree comes from the
+    mesh's ``pipe`` axis; ``microbatches``/``schedule`` set how the batch
+    fills that pipeline (inert when the mesh has no pipe axis)."""
+    from repro.core.stages import SCHEDULES
     from repro.launch import mesh as M
+    if schedule not in SCHEDULES:
+        raise ValueError(
+            f"unknown schedule {schedule!r}; known: {SCHEDULES}")
     opt = optimizer or cfg.optimizer
     return F.PredictContext(
         mesh_shape=mesh_shape, rules=M.arch_rules(cfg, kind),
@@ -102,7 +110,9 @@ def make_context(cfg, mesh_shape: dict, *, kind: str, global_batch: int,
         global_batch=global_batch, seq_len=seq_len,
         enc_seq=int(seq_len * cfg.encdec.enc_seq_ratio)
         if cfg.encdec else 0,
-        kind=kind, max_len=seq_len, grad_accum=grad_accum)
+        kind=kind, max_len=seq_len, grad_accum=grad_accum,
+        pp=M.pp_degree(mesh_shape), microbatches=microbatches,
+        schedule=schedule)
 
 
 def _resolve_shape(shape):
@@ -118,14 +128,16 @@ def check(arch: str, shape_name, mesh_shape: dict,
           backend: str = "tpu", grad_accum: int = 1,
           remat: Optional[str] = None, optimizer: Optional[str] = None,
           chip: str = "v5e", headroom: float = HEADROOM,
-          profile=None) -> PlanReport:
+          profile=None, microbatches: int = 1,
+          schedule: str = "1f1b") -> PlanReport:
     """Reference single-cell evaluation: fresh build, no caches.
 
     ``shape_name`` may be a registered shape name ("train_4k") or a
     ShapeConfig; ``hbm_bytes`` overrides the ``chip`` lookup when given;
     ``profile`` (a repro.calibrate CalibrationProfile) corrects the
     prediction with measurement-fitted per-term coefficients + the
-    ``chip`` constant.
+    ``chip`` constant.  A mesh with a ``pipe`` axis is evaluated
+    per-pipeline-stage (core.stages) and the worst stage reported.
     """
     from repro.configs import get_config
     from repro.models import build_model
@@ -137,7 +149,8 @@ def check(arch: str, shape_name, mesh_shape: dict,
                        global_batch=shape.global_batch,
                        seq_len=shape.seq_len, backend=backend,
                        grad_accum=grad_accum, remat=remat,
-                       optimizer=optimizer)
+                       optimizer=optimizer, microbatches=microbatches,
+                       schedule=schedule)
     pred = PR.predict(model, policy, ctx, profile=profile, chip=chip)
     budget = int((hbm_bytes if hbm_bytes is not None
                   else chip_hbm(chip)) * headroom)
@@ -187,6 +200,34 @@ def plan(arch: str, shape_name, mesh_shape: dict,
     base.note = ("no (remat, grad_accum) configuration fits — needs a "
                  "bigger mesh, more sharding, or a leaner optimizer")
     return base
+
+
+def plan_min_chips(arch: str, shape_name, chips=(4, 8, 16, 32, 64),
+                   chip: str = "v5e", policy: TrainPolicy = FULL_TRAIN,
+                   backend: str = "tpu", headroom: float = HEADROOM,
+                   allow_pp: bool = True, max_pp: int = 8,
+                   microbatches=(1, 4, 8), schedules=("1f1b", "gpipe"),
+                   profile=None, engine=None):
+    """Smallest chip count that fits the shape, pipeline parallelism
+    allowed: sweeps every (data, model[, pipe]) factorization of each
+    candidate chip count x microbatch count x schedule and returns the
+    Pareto-min :class:`~repro.core.sweep.SweepResult` (None if nothing
+    fits).  ``allow_pp=False`` restricts to the 2-axis plans, so
+    ``plan_min_chips(...) vs plan_min_chips(..., allow_pp=False)``
+    quantifies what the pipe axis buys."""
+    from repro.core import sweep as SW
+    shape = _resolve_shape(shape_name)
+    axes = ("data", "model", "pipe") if allow_pp else ("data", "model")
+    grid = SW.SweepGrid(
+        arch=arch, chips=tuple(chips), mesh_axes=axes,
+        max_axis={"pipe": max_pp} if allow_pp else None, chip=chip,
+        microbatches=tuple(microbatches) if allow_pp else (1,),
+        schedules=tuple(schedules) if allow_pp else ("1f1b",),
+        global_batches=(shape.global_batch,), seq_lens=(shape.seq_len,),
+        kind=shape.kind, policy=policy, backend=backend,
+        headroom=headroom, profile=profile)
+    res = (engine or SW.SweepEngine()).sweep(grid)
+    return res.min_chips()
 
 
 def adam_state_bytes(arch: str) -> int:

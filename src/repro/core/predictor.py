@@ -44,6 +44,11 @@ class PredictedMemory:
     # per-chip constant overhead added by an applied CalibrationProfile
     # (repro.calibrate); 0 on the uncalibrated path.
     calibration_bytes: int = 0
+    # pipeline-parallel provenance: which of n_stages stages this
+    # prediction describes (0/1 on the non-pipelined path).  predict()
+    # returns the max-peak stage; predict_stages() returns all of them.
+    stage: int = 0
+    n_stages: int = 1
     per_module: dict = field(default_factory=dict)
 
     @property
@@ -62,7 +67,11 @@ class PredictedMemory:
                 ("out_copy", self.output_copy_bytes),
                 ("calib", self.calibration_bytes),
                 ("PEAK", self.peak_bytes)]
-        return "\n".join(f"  {k:<10s} {v / GiB:9.3f} GiB" for k, v in rows)
+        out = "\n".join(f"  {k:<10s} {v / GiB:9.3f} GiB" for k, v in rows)
+        if self.n_stages > 1:
+            out = (f"  stage      {self.stage} of {self.n_stages} "
+                   f"(pipeline max)\n") + out
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -161,6 +170,40 @@ def decode_transient_groups(
     return groups
 
 
+def boundary_specs(cfg: ArchConfig, kind: str) -> list[F.TermSpec]:
+    """One stage-boundary activation buffer of the pipeline: the residual
+    stream crossing a stage edge.  Train steps transfer one microbatch's
+    (mb, S, D) bf16 block per edge (and the matching gradient on the way
+    back — the x2 lives in :func:`repro.core.stages.boundary_edges`
+    callers); prefill sends the full-batch block, decode one token row.
+    """
+    if kind == "decode":
+        return [F.TermSpec(dims=("gb", 1, cfg.d_model),
+                           axes=("batch", "seq", None), nbytes=2)]
+    if kind == "prefill":
+        return [F.TermSpec(dims=("gb", "seq", cfg.d_model),
+                           axes=("batch", "seq", None), nbytes=2)]
+    return [F.TermSpec(dims=("mb", "seq", cfg.d_model),
+                       axes=("batch", "seq", None), nbytes=2)]
+
+
+def boundary_mult(stage: int, pp: int, kind: str) -> int:
+    """Live boundary-buffer count for a stage: edges touching it, doubled
+    in training (forward activation + backward gradient per edge)."""
+    from repro.core import stages as ST
+    return ST.boundary_edges(stage, pp) * (2 if kind == "train" else 1)
+
+
+def _boundary_bytes(cfg: ArchConfig, ctx: F.PredictContext, kind: str,
+                    stage: int, n_stages: int) -> int:
+    mult = boundary_mult(stage, n_stages, kind)
+    if not mult:
+        return 0
+    env = F.term_env(ctx)
+    return mult * sum(F.eval_term(s, env, ctx.mesh_shape, ctx.rules)
+                      for s in boundary_specs(cfg, kind))
+
+
 def embed_gather_const(rows: list[ParsedLayer], backend: str) -> int:
     """Tied (vocab-sharded) embedding tables are fully all-gathered by the
     token lookup — fp32 on the cpu oracle (float normalization).  Constant
@@ -186,9 +229,14 @@ def _loss_terms(cfg: ArchConfig, ctx: F.PredictContext) -> int:
 
 
 def _input_bytes(model, shape_kind: str, ctx: F.PredictContext) -> int:
-    """Bytes of the batch arguments, sharded over batch."""
+    """Bytes of the batch arguments, sharded over batch.  Under pipeline
+    parallelism the first stage stages one microbatch's inputs at a time
+    (``eff_microbatches == 1`` without a pipeline, so this is the full
+    batch on the non-pipelined path)."""
     from repro.configs import ShapeConfig
-    shape = ShapeConfig("tmp", ctx.seq_len, ctx.global_batch, shape_kind)
+    shape = ShapeConfig(
+        "tmp", ctx.seq_len,
+        max(ctx.global_batch // ctx.eff_microbatches, 1), shape_kind)
     total = 0
     for arr in model.batch_spec(shape).values():
         denom = shard_factor(arr.shape,
@@ -264,12 +312,14 @@ class ActTermsAgg:
 
 @dataclass(frozen=True)
 class OverheadTerms:
-    """Loss head, batch inputs, serve caches, embed all-gathers."""
+    """Loss head, batch inputs, serve caches, embed all-gathers, and (on
+    pipeline stages) the stage-boundary send/recv buffers."""
 
     loss_bytes: int
     input_bytes: int
     cache_bytes: int
     embed_gather_bytes: int
+    boundary_bytes: int = 0
 
 
 def compute_static(rows: list[ParsedLayer],
@@ -297,11 +347,14 @@ def compute_static(rows: list[ParsedLayer],
 
 
 def compute_acts(rows: list[ParsedLayer], ctx: F.PredictContext,
-                 kind: str) -> ActTermsAgg:
+                 kind: str, stash: int = 1) -> ActTermsAgg:
+    """``stash`` multiplies the saved-for-backward set: the number of
+    in-flight microbatch activation copies a pipeline stage holds under
+    its schedule (``core.stages.stash_count``; 1 without a pipeline)."""
     saved = 0
     per: dict[str, int] = {}
     for r in rows:
-        a = F.act_factor_saved(r, ctx)
+        a = F.act_factor_saved(r, ctx) * stash
         saved += a
         per[r.module_path] = per.get(r.module_path, 0) + a
 
@@ -334,17 +387,27 @@ def compute_acts(rows: list[ParsedLayer], ctx: F.PredictContext,
 
 
 def compute_overheads(model, rows: list[ParsedLayer],
-                      ctx: F.PredictContext, kind: str) -> OverheadTerms:
+                      ctx: F.PredictContext, kind: str, stage: int = 0,
+                      n_stages: int = 1) -> OverheadTerms:
+    """Overhead terms of one pipeline stage (the whole model by default):
+    batch inputs live on the first stage, the loss head on the last,
+    caches/embed-gathers wherever their rows landed, boundary buffers on
+    every stage with a pipeline edge."""
+    first = stage == 0
+    last = stage == n_stages - 1
     return OverheadTerms(
-        loss_bytes=_loss_terms(model.cfg, ctx),
-        input_bytes=_input_bytes(model, kind, ctx),
+        loss_bytes=_loss_terms(model.cfg, ctx) if last else 0,
+        input_bytes=_input_bytes(model, kind, ctx) if first else 0,
         cache_bytes=_cache_bytes(model, ctx, rows),
-        embed_gather_bytes=_embed_gather_bytes(rows, ctx))
+        embed_gather_bytes=_embed_gather_bytes(rows, ctx),
+        boundary_bytes=_boundary_bytes(model.cfg, ctx, kind, stage,
+                                       n_stages))
 
 
 def assemble(static: StaticTerms, acts: ActTermsAgg, over: OverheadTerms,
              ctx: F.PredictContext, profile=None,
-             chip: str = None) -> PredictedMemory:
+             chip: str = None, stage: int = 0,
+             n_stages: int = 1) -> PredictedMemory:
     """Compose the component groups into a prediction; when a
     CalibrationProfile (repro.calibrate.profile) is given, its per-term
     corrections + the ``chip`` constant are applied to the RAW composition
@@ -354,13 +417,16 @@ def assemble(static: StaticTerms, acts: ActTermsAgg, over: OverheadTerms,
         opt_bytes=static.opt_bytes,
         act_saved_bytes=acts.saved_bytes,
         # optimizer-update in-flight fp32 stacks (cpu oracle; ZeRO-sharded)
+        # + pipeline boundary send/recv buffers: transient working set
         act_transient_bytes=(acts.transient_bytes
                              + over.embed_gather_bytes
+                             + over.boundary_bytes
                              + int(ctx.opt_transient_frac
                                    * static.opt_bytes)),
         loss_bytes=over.loss_bytes, input_bytes=over.input_bytes,
         cache_bytes=over.cache_bytes,
-        output_copy_bytes=static.output_copy_bytes)
+        output_copy_bytes=static.output_copy_bytes,
+        stage=stage, n_stages=n_stages)
     for path, p, g, o, trainable in static.per_module:
         out.per_module[path] = {"param": p, "grad": g, "opt": o, "act": 0,
                                 "trainable": trainable}
@@ -371,17 +437,50 @@ def assemble(static: StaticTerms, acts: ActTermsAgg, over: OverheadTerms,
     return out
 
 
+def predict_stages(model, policy: TrainPolicy, ctx: F.PredictContext,
+                   shape_kind: str = None,
+                   rows: list[ParsedLayer] = None, profile=None,
+                   chip: str = None) -> list[PredictedMemory]:
+    """One prediction per pipeline stage (a single-element list when
+    ``ctx.pp == 1`` — that element is bit-equal to the non-pipelined
+    path, because it IS the non-pipelined path)."""
+    from repro.core import stages as ST
+    if rows is None:
+        rows = parse_model(model.spec, policy)
+    kind = shape_kind or ctx.kind
+    if ctx.pp <= 1:
+        return [assemble(compute_static(rows, ctx),
+                         compute_acts(rows, ctx, kind),
+                         compute_overheads(model, rows, ctx, kind), ctx,
+                         profile=profile, chip=chip)]
+    plan = ST.partition(rows, ctx.pp)
+    out = []
+    for s, srows in enumerate(plan.stages):
+        srows = list(srows)
+        stash = ST.stash_count(s, ctx.pp, ctx.eff_microbatches,
+                               ctx.schedule)
+        out.append(assemble(
+            compute_static(srows, ctx),
+            compute_acts(srows, ctx, kind, stash=stash),
+            compute_overheads(model, srows, ctx, kind, stage=s,
+                              n_stages=ctx.pp),
+            ctx, profile=profile, chip=chip, stage=s, n_stages=ctx.pp))
+    return out
+
+
 def predict(model, policy: TrainPolicy, ctx: F.PredictContext,
             shape_kind: str = None,
             rows: list[ParsedLayer] = None, profile=None,
             chip: str = None) -> PredictedMemory:
-    if rows is None:
-        rows = parse_model(model.spec, policy)
-    kind = shape_kind or ctx.kind
-    return assemble(compute_static(rows, ctx),
-                    compute_acts(rows, ctx, kind),
-                    compute_overheads(model, rows, ctx, kind), ctx,
-                    profile=profile, chip=chip)
+    """Peak prediction: the worst stage under pipeline parallelism (the
+    whole model when ``ctx.pp == 1``); ties keep the earliest stage."""
+    preds = predict_stages(model, policy, ctx, shape_kind=shape_kind,
+                           rows=rows, profile=profile, chip=chip)
+    best = preds[0]
+    for p in preds[1:]:
+        if p.peak_bytes > best.peak_bytes:
+            best = p
+    return best
 
 
 def per_device(pred: PredictedMemory) -> int:

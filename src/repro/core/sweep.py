@@ -3,9 +3,11 @@
 The paper's estimator answers "will this config OOM?" for ONE cell;
 capacity planning (xMem-style scheduler admission, cluster sizing) needs
 that answer for 10^5-10^6 candidate configurations at once: every mesh
-factorization of a chip count x optimizer x remat policy x grad-accum x
-global batch x sequence length x chip type.  ``sweep(SweepGrid(...))``
-evaluates such a grid through a dual-mode :class:`SweepEngine`:
+factorization of a chip count (including a ``pipe`` pipeline axis) x
+optimizer x remat policy x pipeline schedule x microbatch count x
+grad-accum x global batch x sequence length x chip type.
+``sweep(SweepGrid(...))`` evaluates such a grid through a dual-mode
+:class:`SweepEngine`:
 
 * ``mode="columnar"`` (default) lowers the whole grid to the
   structure-of-arrays NumPy kernels in :mod:`repro.core.batch` — the
@@ -19,7 +21,7 @@ evaluates such a grid through a dual-mode :class:`SweepEngine`:
 
 The two modes are byte-identical — every verdict and every peak-bytes
 value — with or without a calibration profile (asserted per-cell by
-tests/test_batch.py and on the 4,416-cell parity set + a 124k-cell grid
+tests/test_batch.py and on the 5,208-cell parity set + a 124k-cell grid
 by ``benchmarks/sweep_throughput.py --verify``).
 
 Results are wrapped in a :class:`SweepResults` container with
@@ -32,10 +34,13 @@ CLI::
 
     PYTHONPATH=src python -m repro.core.sweep --arch llava15_7b --chips 8 \
         --chip v5e --batch 16,32,64,128 --accum 1,2,4 --seq-len 2048
+    PYTHONPATH=src python -m repro.core.sweep --arch llama3_1_8b \
+        --chips 64 --mesh-axes data,model,pipe --max-pipe 4 \
+        --schedule 1f1b,gpipe --microbatches 1,4,8 --batch 64 --seq-len 4096
 
-``--dry-run`` prints the cell count + a runtime estimate first;
-``--mode cell`` selects the reference path; an empty grid exits with
-status 2 and a "0 cells matched" explanation.
+``--dry-run`` prints the per-knob cardinality table + a runtime estimate
+first; ``--mode cell`` selects the reference path; an empty grid exits
+with status 2 and a "0 cells matched" explanation.
 """
 
 from __future__ import annotations
@@ -102,6 +107,11 @@ class SweepGrid:
     chip: Union[str, Sequence[str]] = "v5e"
     optimizers: Sequence[Optional[str]] = (None,)
     remats: Sequence[Optional[str]] = (None,)
+    # pipeline-parallel knobs: the pipeline DEGREE comes from each mesh's
+    # `pipe` axis (put "pipe" in mesh_axes or in explicit mesh_shapes);
+    # these set how the batch fills it.  Inert on pipe-less meshes.
+    schedules: Sequence[str] = ("1f1b",)
+    microbatches: Sequence[int] = (1,)
     grad_accums: Sequence[int] = (1,)
     global_batches: Sequence[int] = (256,)
     seq_lens: Sequence[int] = (4096,)
@@ -134,12 +144,26 @@ class SweepGrid:
                     for g in _seq(self.global_batches) if not g % a)
         return (len(_seq(self.arch)) * len(_seq(self.chip))
                 * len(self.meshes()) * len(_seq(self.optimizers))
-                * len(_seq(self.remats)) * pairs
+                * len(_seq(self.remats)) * len(_seq(self.schedules))
+                * len(_seq(self.microbatches)) * pairs
                 * len(_seq(self.seq_lens)))
+
+    def check_schedules(self) -> tuple:
+        """Validate the schedule axis up front — the columnar path never
+        builds per-cell PredictContexts, so it would otherwise treat an
+        unknown schedule as 1F1B silently."""
+        from repro.core.stages import SCHEDULES
+        scheds = _seq(self.schedules)
+        bad = [s for s in scheds if s not in SCHEDULES]
+        if bad:
+            raise ValueError(
+                f"unknown schedule(s) {bad}; known: {SCHEDULES}")
+        return scheds
 
     def cells(self) -> Iterator["SweepCell"]:
         """Deterministic cell enumeration (first-fit order: cheap knobs
         vary fastest)."""
+        self.check_schedules()
         meshes = self.meshes()
         for arch in _seq(self.arch):
             arch = normalize_arch(arch)
@@ -147,21 +171,27 @@ class SweepGrid:
                 for mesh in meshes:
                     for opt in _seq(self.optimizers):
                         for remat in _seq(self.remats):
-                            for accum in _seq(self.grad_accums):
-                                for gb in _seq(self.global_batches):
-                                    if gb % accum:
-                                        continue
-                                    for seq in _seq(self.seq_lens):
-                                        yield SweepCell(
-                                            arch=arch, chip=chip,
-                                            mesh=tuple(sorted(
-                                                mesh.items())),
-                                            optimizer=opt, remat=remat,
-                                            grad_accum=int(accum),
-                                            global_batch=int(gb),
-                                            seq_len=int(seq),
-                                            kind=self.kind,
-                                            backend=self.backend)
+                            for sched in _seq(self.schedules):
+                                for mb in _seq(self.microbatches):
+                                    yield from self._inner_cells(
+                                        arch, chip, mesh, opt, remat,
+                                        sched, int(mb))
+
+    def _inner_cells(self, arch, chip, mesh, opt, remat, sched,
+                     mb) -> Iterator["SweepCell"]:
+        for accum in _seq(self.grad_accums):
+            for gb in _seq(self.global_batches):
+                if gb % accum:
+                    continue
+                for seq in _seq(self.seq_lens):
+                    yield SweepCell(
+                        arch=arch, chip=chip,
+                        mesh=tuple(sorted(mesh.items())),
+                        optimizer=opt, remat=remat,
+                        schedule=sched, microbatches=mb,
+                        grad_accum=int(accum), global_batch=int(gb),
+                        seq_len=int(seq), kind=self.kind,
+                        backend=self.backend)
 
 
 @dataclass(frozen=True)
@@ -178,6 +208,8 @@ class SweepCell:
     seq_len: int
     kind: str
     backend: str
+    schedule: str = "1f1b"
+    microbatches: int = 1
 
     @property
     def mesh_shape(self) -> dict:
@@ -207,11 +239,18 @@ class SweepResult:
     peak_bytes: int
     budget_bytes: int
     fits: bool
+    schedule: str = "1f1b"
+    microbatches: int = 1
     prediction: Optional[PR.PredictedMemory] = None
 
     @property
     def micro_batch(self) -> int:
         return max(self.global_batch // max(self.grad_accum, 1), 1)
+
+    @property
+    def pp(self) -> int:
+        from repro.launch.mesh import pp_degree
+        return pp_degree(self.mesh_shape)
 
     @property
     def mesh_str(self) -> str:
@@ -220,20 +259,24 @@ class SweepResult:
 
     def __str__(self) -> str:
         verdict = "FITS" if self.fits else "OOM "
+        pipe = (f" sched {self.schedule} micro {self.microbatches}"
+                if self.pp > 1 else "")
         return (f"[{verdict}] {self.arch} {self.kind} on {self.n_chips}x"
                 f"{self.chip} ({self.mesh_str}): batch {self.global_batch}"
                 f" seq {self.seq_len} opt {self.optimizer} remat "
-                f"{self.remat} accum {self.grad_accum} -> peak "
+                f"{self.remat} accum {self.grad_accum}{pipe} -> peak "
                 f"{self.peak_bytes / GiB:.2f} GiB vs "
                 f"{self.budget_bytes / GiB:.2f} GiB")
 
 
-_COLUMNS = ("arch", "chip", "mesh", "optimizer", "remat", "accum",
-            "batch", "seq", "peak_gib", "budget_gib", "fits")
+_COLUMNS = ("arch", "chip", "mesh", "optimizer", "remat", "sched",
+            "micro", "accum", "batch", "seq", "peak_gib", "budget_gib",
+            "fits")
 
 
 def _row_of(r: SweepResult) -> tuple:
     return (r.arch, r.chip, r.mesh_str, r.optimizer, r.remat,
+            r.schedule, r.microbatches,
             r.grad_accum, r.global_batch, r.seq_len,
             f"{r.peak_bytes / GiB:.3f}", f"{r.budget_bytes / GiB:.3f}",
             "yes" if r.fits else "NO")
@@ -428,6 +471,7 @@ class SweepEngine:
 
     def __init__(self):
         self._arch: dict = {}        # (arch, policy) -> (cfg, model, rows)
+        self._stages: dict = {}      # (arch, policy, pp) -> StagePlan
         self._static: dict = {}
         self._acts: dict = {}
         self._over: dict = {}
@@ -444,6 +488,15 @@ class SweepEngine:
             model = build_model(cfg)
             rows = parse_model(model.spec, policy)
             hit = self._arch[key] = (cfg, model, rows)
+        return hit
+
+    def _stage_plan(self, arch: str, policy: TrainPolicy, pp: int):
+        key = (arch, policy, pp)
+        hit = self._stages.get(key)
+        if hit is None:
+            from repro.core import stages as ST
+            _, _, rows = self._arch_state(arch, policy)
+            hit = self._stages[key] = ST.partition(rows, pp)
         return hit
 
     def predict_cell(self, arch: str, policy: TrainPolicy,
@@ -463,6 +516,9 @@ class SweepEngine:
         cfg, model, rows = self._arch_state(arch, policy)
         mkey = tuple(sorted(ctx.mesh_shape.items()))
         base = (arch, policy, ctx.kind, mkey, ctx.backend)
+        if ctx.pp > 1:
+            return self._predict_pipelined(model, base, ctx, arch, policy,
+                                           profile, chip)
 
         skey = base + (ctx.optimizer, ctx.eff_grad_bytes)
         static = self._static.get(skey)
@@ -495,6 +551,54 @@ class SweepEngine:
                 static, acts, over, ctx, profile=profile, chip=chip)
         return pred
 
+    def _predict_pipelined(self, model, base, ctx, arch, policy,
+                           profile, chip):
+        """Memoized per-stage twin of ``PR.predict`` for ``ctx.pp > 1``:
+        each stage's component groups cache independently (the stage
+        identity joins the exact fields each group reads), and the
+        worst-stage composition caches like a plain cell."""
+        from repro.core import stages as ST
+        pp, m = ctx.pp, ctx.eff_microbatches
+        phash = None if profile is None else profile.profile_hash
+        pkey = (base, "pipelined", ctx.optimizer, ctx.eff_grad_bytes,
+                ctx.remat, ctx.pp_micro_batch, ctx.global_batch,
+                ctx.seq_len, ctx.enc_seq, ctx.max_len, m, ctx.schedule,
+                phash, chip if phash is not None else None)
+        pred = self._pred.get(pkey)
+        if pred is not None:
+            return pred
+        plan = self._stage_plan(arch, policy, pp)
+        best = None
+        for s, srows in enumerate(plan.stages):
+            sbase = base + (("stage", s, pp),)
+            skey = sbase + (ctx.optimizer, ctx.eff_grad_bytes)
+            static = self._static.get(skey)
+            if static is None:
+                static = self._static[skey] = PR.compute_static(
+                    list(srows), ctx)
+            stash = ST.stash_count(s, pp, m, ctx.schedule)
+            akey = sbase + (ctx.remat, ctx.pp_micro_batch, ctx.seq_len,
+                            ctx.enc_seq, stash)
+            if ctx.kind != "train":
+                akey += (ctx.global_batch, ctx.max_len)
+            acts = self._acts.get(akey)
+            if acts is None:
+                acts = self._acts[akey] = PR.compute_acts(
+                    list(srows), ctx, ctx.kind, stash=stash)
+            okey = sbase + (ctx.global_batch, ctx.pp_micro_batch,
+                            ctx.seq_len, ctx.enc_seq, ctx.max_len, m)
+            over = self._over.get(okey)
+            if over is None:
+                over = self._over[okey] = PR.compute_overheads(
+                    model, list(srows), ctx, ctx.kind, stage=s,
+                    n_stages=pp)
+            sp = PR.assemble(static, acts, over, ctx, profile=profile,
+                             chip=chip, stage=s, n_stages=pp)
+            if best is None or sp.peak_bytes > best.peak_bytes:
+                best = sp
+        self._pred[pkey] = best
+        return best
+
     # -- cell evaluation -----------------------------------------------------
     def evaluate(self, cell: SweepCell, policy: TrainPolicy = FULL_TRAIN,
                  headroom: float = PL.HEADROOM,
@@ -505,7 +609,9 @@ class SweepEngine:
                               global_batch=cell.global_batch,
                               seq_len=cell.seq_len, backend=cell.backend,
                               grad_accum=cell.grad_accum, remat=cell.remat,
-                              optimizer=cell.optimizer)
+                              optimizer=cell.optimizer,
+                              microbatches=cell.microbatches,
+                              schedule=cell.schedule)
         pred = self.predict_cell(cell.arch, policy, ctx, profile=profile,
                                  chip=cell.chip)
         budget = int(PL.chip_hbm(cell.chip) * headroom)
@@ -516,6 +622,7 @@ class SweepEngine:
             remat=cell.remat or cfg.remat, grad_accum=cell.grad_accum,
             global_batch=cell.global_batch, seq_len=cell.seq_len,
             kind=cell.kind, backend=cell.backend,
+            schedule=cell.schedule, microbatches=cell.microbatches,
             peak_bytes=pred.peak_bytes, budget_bytes=budget,
             fits=pred.peak_bytes <= budget,
             prediction=pred if keep_prediction else None)
@@ -525,7 +632,8 @@ class SweepEngine:
                budget_bytes: int, grad_accum: int = 1,
                remat: Optional[str] = None,
                optimizer: Optional[str] = None, chip: str = "v5e",
-               profile=None) -> PL.PlanReport:
+               profile=None, microbatches: int = 1,
+               schedule: str = "1f1b") -> PL.PlanReport:
         """PlanReport-shaped single-cell evaluation (planner.plan's
         memoized backend); byte-identical to ``planner.check``."""
         shape = PL._resolve_shape(shape)
@@ -534,7 +642,9 @@ class SweepEngine:
                               global_batch=shape.global_batch,
                               seq_len=shape.seq_len, backend=backend,
                               grad_accum=grad_accum, remat=remat,
-                              optimizer=optimizer)
+                              optimizer=optimizer,
+                              microbatches=microbatches,
+                              schedule=schedule)
         pred = self.predict_cell(arch, policy, ctx, profile=profile,
                                  chip=chip)
         return PL.PlanReport(arch=arch, shape=shape.name,
@@ -605,6 +715,48 @@ def _str_list(s: Optional[str]) -> tuple:
 EST_CELLS_PER_SEC = {"columnar": 1_000_000, "cell": 15_000}
 
 
+def _preview(values, limit: int = 6) -> str:
+    vals = [str(v) if v is not None else "default" for v in values]
+    if len(vals) > limit:
+        vals = vals[:limit] + ["..."]
+    return ",".join(vals)
+
+
+def _cardinality_table(grid: SweepGrid) -> str:
+    """Per-knob cardinality breakdown of a grid — what ``size()``
+    multiplies — so ``--dry-run`` users see where a cell explosion comes
+    from before paying for it."""
+    from repro.launch.mesh import pp_degree
+    meshes = grid.meshes()
+    pps = sorted({pp_degree(m) for m in meshes})
+    pairs = [(a, g) for a in _seq(grid.grad_accums)
+             for g in _seq(grid.global_batches) if not g % a]
+    rows = [
+        ("arch", len(_seq(grid.arch)), _preview(_seq(grid.arch))),
+        ("chip type", len(_seq(grid.chip)), _preview(_seq(grid.chip))),
+        ("mesh", len(meshes),
+         f"pp degrees {_preview(pps)}" if len(pps) > 1 or pps != [1]
+         else "2-axis factorizations"),
+        ("optimizer", len(_seq(grid.optimizers)),
+         _preview(_seq(grid.optimizers))),
+        ("remat", len(_seq(grid.remats)), _preview(_seq(grid.remats))),
+        ("schedule", len(_seq(grid.schedules)),
+         _preview(_seq(grid.schedules))),
+        ("microbatches", len(_seq(grid.microbatches)),
+         _preview(_seq(grid.microbatches))),
+        ("accum x batch", len(pairs),
+         _preview([f"{a}/{g}" for a, g in pairs])),
+        ("seq len", len(_seq(grid.seq_lens)),
+         _preview(_seq(grid.seq_lens))),
+    ]
+    out = [f"  {'knob':<14s} {'count':>5s}  values"]
+    for name, count, vals in rows:
+        out.append(f"  {name:<14s} {count:>5d}  {vals}")
+    out.append(f"  {'total':<14s} {grid.size():>5d}  (product, after "
+               f"divisibility filter)")
+    return "\n".join(out)
+
+
 def _empty_grid_msg() -> str:
     return ("0 cells matched: the grid produced no evaluable cells.  "
             "Common causes: no --batch value is divisible by any --accum "
@@ -640,9 +792,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                    help="explicit mesh shape (repeatable; overrides "
                         "--chips enumeration)")
     p.add_argument("--mesh-axes", default="data,model",
-                   help="axes used for --chips factorization")
+                   help="axes used for --chips factorization (add `pipe` "
+                        "to enumerate pipeline-parallel plans)")
     p.add_argument("--max-model", type=int, default=None,
                    help="cap the model (TP) axis size")
+    p.add_argument("--max-pipe", type=int, default=None,
+                   help="cap the pipe (PP) axis size")
+    p.add_argument("--schedule", default="1f1b",
+                   help="comma list of pipeline schedules (1f1b,gpipe)")
+    p.add_argument("--microbatches", type=_int_list, default=(1,),
+                   help="pipeline microbatch counts (inert without a "
+                        "pipe mesh axis)")
     p.add_argument("--chip", default="v5e",
                    help=f"chip type(s), comma list of {sorted(PL.CHIPS)}")
     p.add_argument("--optimizer", default=None,
@@ -688,6 +848,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         arch = normalize_arch(args.arch)
         for c in args.chip.split(","):
             PL.chip_hbm(c)
+        from repro.core.stages import SCHEDULES
+        for s in args.schedule.split(","):
+            if s not in SCHEDULES:
+                raise ValueError(
+                    f"unknown schedule {s!r}; known: {SCHEDULES}")
         meshes = [_parse_mesh(m) for m in args.mesh] if args.mesh else None
     except (KeyError, ValueError) as e:
         p.error(str(e))
@@ -698,15 +863,22 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             profile = CalibrationProfile.load(args.profile)
         except (OSError, ValueError) as e:
             p.error(f"--profile: {e}")
+    max_axis = {}
+    if args.max_model:
+        max_axis["model"] = args.max_model
+    if args.max_pipe:
+        max_axis["pipe"] = args.max_pipe
     grid = SweepGrid(
         arch=arch,
         chips=args.chips,
         mesh_axes=tuple(args.mesh_axes.split(",")),
         mesh_shapes=meshes,
-        max_axis={"model": args.max_model} if args.max_model else None,
+        max_axis=max_axis or None,
         chip=tuple(args.chip.split(",")),
         optimizers=_str_list(args.optimizer),
         remats=_str_list(args.remat),
+        schedules=tuple(args.schedule.split(",")),
+        microbatches=args.microbatches,
         grad_accums=args.accum, global_batches=args.batch,
         seq_lens=args.seq_len, kind=args.kind,
         policy=POLICIES[args.policy], backend=args.backend,
@@ -715,9 +887,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if args.dry_run:
         n = grid.size()
         est = n / EST_CELLS_PER_SEC[args.mode]
-        print(f"dry run: {n:,} cells "
-              f"({len(grid.meshes())} meshes x optimizers x remats x "
-              f"accum/batch pairs x seq lens)")
+        print(f"dry run: {n:,} cells")
+        print(_cardinality_table(grid))
         print(f"estimated runtime in --mode {args.mode}: ~{est:.1f}s "
               f"(planning rate {EST_CELLS_PER_SEC[args.mode]:,} cells/s; "
               f"see BENCH_sweep.json for this machine's real rates)")

@@ -19,17 +19,26 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.mesh_ctx import (DEFAULT_RULES, assign_axes, mesh_axis_sizes,
-                            resolve_pspec)
+from repro.mesh_ctx import (DEFAULT_RULES, PIPE_AXIS, assign_axes,
+                            mesh_axis_sizes, resolve_pspec)
 from repro.models.registry import Model
 from repro.train.optimizer import OptimizerConfig, opt_state_specs
+
+
+def _auto_axis_types(n: int) -> dict:
+    """`axis_types` kwarg for jax.make_mesh on jax versions that have it
+    (jax.sharding.AxisType landed after 0.4.x; Auto is that default
+    behaviour, so omitting the kwarg is equivalent on older versions)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_auto_axis_types(len(axes)))
 
 
 def divisors(n: int) -> list[int]:
@@ -70,9 +79,12 @@ def enumerate_meshes(n_chips: int,
     The capacity-planning sweep feeds each of these to the memory predictor
     to find which parallelism plans fit.  ``max_axis`` caps individual axes
     (e.g. ``{"model": 16}`` — an ICI-connected TP axis rarely exceeds a
-    pod's torus dimension).  Results are deduplicated and sorted by
-    descending data-parallel degree (the conventional preference: DP is the
-    cheapest axis, collectives-wise).
+    pod's torus dimension; ``{"pipe": 8}`` bounds pipeline depth).
+    Results are deduplicated and sorted by descending data-parallel degree
+    (the conventional preference: DP is the cheapest axis,
+    collectives-wise).  Including :data:`~repro.mesh_ctx.PIPE_AXIS` in
+    ``axes`` enumerates pipeline-parallel plans: chips along ``pipe`` hold
+    disjoint layer stages (core.stages) and never shard tensors.
     """
     seen: set[tuple[int, ...]] = set()
     out: list[dict] = []
@@ -96,11 +108,15 @@ def mesh_chips(mesh_shape: dict) -> int:
     return total
 
 
+def pp_degree(mesh_shape: dict) -> int:
+    """Pipeline-stage count of a mesh shape (1 when it has no pipe axis)."""
+    return int(mesh_shape.get(PIPE_AXIS, 1))
+
+
 def make_smoke_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Tiny mesh for CPU tests (exercises the same code paths)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         **_auto_axis_types(2))
 
 
 # ---------------------------------------------------------------------------

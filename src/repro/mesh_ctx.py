@@ -23,6 +23,13 @@ from typing import Optional, Sequence
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# The pipeline-parallel physical axis: chips along it hold different
+# pipeline STAGES (disjoint layer slices, see core.stages), so no tensor
+# dimension is ever sharded over it — assign_axes skips it in both the
+# rule pass and the FSDP/ZeRO extra pass even if a rule table names it.
+# Its degree reaches the predictor as PredictContext.pp.
+PIPE_AXIS = "pipe"
+
 # logical axis -> tuple of physical mesh axes (applied together)
 DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "batch": ("pod", "data"),
@@ -94,7 +101,8 @@ def assign_axes(shape: Sequence[int],
     Base pass maps each dim's logical axis through ``rules`` (skipping
     non-divisible / already-used physical axes); the ``extra`` pass then
     greedily adds each extra physical axis to the first dim that stays
-    divisible (FSDP / ZeRO sharding).
+    divisible (FSDP / ZeRO sharding).  The pipeline axis (:data:`PIPE_AXIS`)
+    partitions *layers*, not tensors, and is never assigned.
     """
     rules = rules if rules is not None else _CTX.rules
     used: set[str] = set()
@@ -104,14 +112,14 @@ def assign_axes(shape: Sequence[int],
             continue
         total = 1
         for a in rules.get(ax, ()):
-            if a not in sizes or a in used:
+            if a == PIPE_AXIS or a not in sizes or a in used:
                 continue
             if dim % (total * sizes[a]) == 0:
                 per_dim[i].append(a)
                 used.add(a)
                 total *= sizes[a]
     for a in extra:
-        if a not in sizes or a in used:
+        if a == PIPE_AXIS or a not in sizes or a in used:
             continue
         best = None
         for i, dim in enumerate(shape):

@@ -113,6 +113,31 @@ def _moe_meta(cfg: ArchConfig) -> dict:
     return moe_spec("ffn", cfg.d_model, cfg.moe, cfg.dtype).meta
 
 
+@jax.custom_vjp
+def _pin(x: jax.Array) -> jax.Array:
+    """AD-transparent optimization barrier.
+
+    ``lax.optimization_barrier`` has no differentiation rule in this jax
+    version, so wrapping it in a custom VJP keeps the forward barrier
+    (which pins the bf16 scan carry — see ``_scan_blocks``) while giving
+    the backward pass an explicit rule: barrier the cotangent too, which
+    symmetrically stops XLA from hoisting the bwd convert of the carried
+    gradient stack out of the loop.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _pin_fwd(x):
+    return _pin(x), None
+
+
+def _pin_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_pin.defvjp(_pin_fwd, _pin_bwd)
+
+
 def _remat(fn, policy: str):
     if policy == "none":
         return fn
@@ -130,7 +155,7 @@ def _scan_blocks(cfg: ArchConfig, moe_block: bool, stack: dict, x: jax.Array,
         # pass's bf16->f32 convert of the saved-carry STACK out of the while
         # loop, materializing an fp32 copy of every layer's residual (2x the
         # dominant activation buffer; observed +7.5 GiB on smollm train_4k).
-        x = jax.lax.optimization_barrier(x)
+        x = _pin(x)
         x, a = _block_apply(cfg, moe_block, bp, x, positions, chunk)
         return (x, aux + a), None
 

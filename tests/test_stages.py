@@ -1,0 +1,390 @@
+"""Pipeline-parallel memory model: stage partitioner properties, pp=1
+byte-parity with the non-pipelined predictor, columnar/cell parity on
+pp > 1 grids, and the schedule/boundary helpers.
+
+The partitioner contract (core/stages.py): contiguous stages, exact
+cover of every repeat unit, pinned front (embedding / vision tower /
+audio encoder) and tail (final norm / LM head), balance bounded by the
+greedy guarantee.  The predictor contract: a mesh whose ``pipe`` axis is
+1 (or absent) reproduces today's predictions byte-for-byte, whatever the
+microbatch/schedule knobs say.
+"""
+
+import pytest
+
+from repro.configs import ShapeConfig, get_config, registered_archs
+from repro.core import planner
+from repro.core import predictor as PR
+from repro.core import stages as ST
+from repro.core import sweep as SW
+from repro.core.parser import parse_model, total_params
+from repro.core.spec import FULL_TRAIN, LLAVA_STAGE2
+from repro.models import build_model
+
+ARCHS = registered_archs()
+PPS = (1, 2, 3, 4, 8)
+
+
+def rows_of(arch, policy=FULL_TRAIN):
+    return parse_model(build_model(get_config(arch)).spec, policy)
+
+
+# ---------------------------------------------------------------------------
+# partitioner properties across the zoo
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_partition_exact_cover(arch):
+    """Summing any repeat-linear quantity over stages reproduces the
+    whole model — no unit lost, none double-counted."""
+    rows = rows_of(arch)
+    want = total_params(rows)
+    for pp in PPS:
+        plan = ST.partition(rows, pp)
+        assert len(plan.stages) == pp
+        got = sum(total_params(list(s)) for s in plan.stages)
+        assert got == want, (arch, pp)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_partition_contiguity(arch):
+    """Stages walk the original row order monotonically, and a split
+    scan stack's chunk repeats sum to the original depth."""
+    rows = rows_of(arch)
+    seg_order = {}
+    for r in rows:
+        seg_order.setdefault(r.module_path, len(seg_order))
+    for pp in PPS:
+        plan = ST.partition(rows, pp)
+        flat = [r for s in plan.stages for r in s]
+        # monotone segment order (a split stack restarts its row list on
+        # the next stage — same module_path, so the segment id is equal)
+        idx = [seg_order[r.module_path] for r in flat]
+        assert idx == sorted(idx), (arch, pp)
+        # a segment's stages form one contiguous run
+        holders: dict = {}
+        for si, s in enumerate(plan.stages):
+            for r in s:
+                holders.setdefault(r.module_path, []).append(si)
+        for path, sis in holders.items():
+            uniq = sorted(set(sis))
+            assert uniq == list(range(uniq[0], uniq[-1] + 1)), \
+                (arch, pp, path)
+        # per-path repeat conservation
+        by_path: dict = {}
+        for r in flat:
+            by_path[r.path] = by_path.get(r.path, 0) + r.repeat
+        for r in rows:
+            assert by_path[r.path] == r.repeat, (arch, pp, r.path)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_partition_balance_bound(arch):
+    """DP optimum never exceeds the greedy guarantee:
+    max(front, tail) + ceil(middle_total/pp) + max_unit."""
+    rows = rows_of(arch)
+    segs = ST._segments(rows)
+    split_ids = [i for i, s in enumerate(segs) if s.splittable]
+    if not split_ids:
+        pytest.skip("no splittable segments")
+    first, last = split_ids[0], split_ids[-1]
+    front = sum(s.total_weight() for s in segs[:first])
+    tail = sum(s.total_weight() for s in segs[last + 1:])
+    units = []
+    for seg in segs[first:last + 1]:
+        if seg.splittable:
+            units.extend([seg.unit_weight()] * seg.repeat)
+        else:
+            units.append(seg.total_weight())
+    for pp in PPS:
+        if pp == 1:
+            continue                  # one stage holds front+middle+tail
+        plan = ST.partition(rows, pp)
+        bound = max(front, tail) + -(-sum(units) // pp) + max(units)
+        assert max(plan.weights) <= bound, (arch, pp)
+
+
+def test_partition_pins_embedding_and_head():
+    rows = rows_of("llama3.1-8b")
+    plan = ST.partition(rows, 4)
+    stage0_kinds = {r.layer.kind for r in plan.stages[0]}
+    assert "embedding" in stage0_kinds
+    # final norm (head module) on the last stage only
+    last_paths = {r.module_path for r in plan.stages[-1]}
+    assert any(p.endswith("head") for p in last_paths)
+    for s in plan.stages[:-1]:
+        assert not any(r.module_path.endswith("head") for r in s)
+
+
+@pytest.mark.parametrize("policy", [FULL_TRAIN, LLAVA_STAGE2],
+                         ids=["full", "stage2-frozen-tower"])
+def test_partition_pins_vision_tower(policy):
+    """The vision tower (frozen or not) is never split: all its rows ride
+    on stage 0."""
+    rows = rows_of("llava15-7b", policy)
+    for pp in (2, 4):
+        plan = ST.partition(rows, pp)
+        for si, stage in enumerate(plan.stages):
+            for r in stage:
+                if r.modality == "vision":
+                    assert si == 0, (pp, r.path)
+        # and stage-0 keeps the full tower depth
+        tower = [r for r in plan.stages[0] if "vision_tower/blocks"
+                 in r.path]
+        full = [r for r in rows if "vision_tower/blocks" in r.path]
+        assert sum(r.repeat for r in tower) == sum(r.repeat for r in full)
+
+
+def test_partition_pins_audio_encoder():
+    rows = rows_of("seamless-m4t-large-v2")
+    plan = ST.partition(rows, 4)
+    for si, stage in enumerate(plan.stages):
+        for r in stage:
+            if r.modality == "audio":
+                assert si == 0, (si, r.path)
+
+
+def test_partition_atomic_shared_blocks():
+    """zamba2's weight-tied shared attention (invocation_repeat) is never
+    split across stages."""
+    rows = rows_of("zamba2-2.7b")
+    for pp in (2, 4):
+        plan = ST.partition(rows, pp)
+        holders = [si for si, s in enumerate(plan.stages)
+                   if any("shared_attn" in r.module_path for r in s)]
+        assert len(holders) == 1, (pp, holders)
+
+
+def test_stash_count_schedules():
+    # 1F1B: stage i holds min(pp - i, m); GPipe holds all m
+    assert [ST.stash_count(i, 4, 8) for i in range(4)] == [4, 3, 2, 1]
+    assert [ST.stash_count(i, 4, 2) for i in range(4)] == [2, 2, 2, 1]
+    assert [ST.stash_count(i, 4, 8, "gpipe") for i in range(4)] == [8] * 4
+    assert ST.stash_count(0, 1, 8) == 1          # no pipeline, no stash
+    assert ST.stash_count(0, 1, 8, "gpipe") == 1
+    with pytest.raises(ValueError):
+        ST.stash_count(0, 4, 8, "interleaved")
+
+
+def test_boundary_edges():
+    assert [ST.boundary_edges(i, 4) for i in range(4)] == [1, 2, 2, 1]
+    assert ST.boundary_edges(0, 1) == 0
+
+
+# ---------------------------------------------------------------------------
+# pp=1 byte-parity: the pipeline path degenerates to today's predictions
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_pp1_reproduces_baseline_predictions(arch):
+    """A pipe=1 mesh — with whatever microbatch/schedule knobs — is
+    byte-for-byte the plain prediction on every registered arch."""
+    shape = ShapeConfig("cell", 512, 8, "train")
+    base = planner.check(arch, shape, {"data": 2, "model": 2},
+                         backend="cpu")
+    for m, sched in ((1, "1f1b"), (8, "1f1b"), (8, "gpipe")):
+        pp1 = planner.check(arch, shape,
+                            {"data": 2, "model": 2, "pipe": 1},
+                            backend="cpu", microbatches=m, schedule=sched)
+        assert pp1.peak_bytes == base.peak_bytes, (arch, m, sched)
+        p, b = pp1.prediction, base.prediction
+        for f in ("param_bytes", "grad_bytes", "opt_bytes",
+                  "act_saved_bytes", "act_transient_bytes", "loss_bytes",
+                  "input_bytes", "cache_bytes", "output_copy_bytes"):
+            assert getattr(p, f) == getattr(b, f), (arch, f)
+
+
+def test_pipe_axis_never_shards_tensors():
+    """mesh_ctx skips the pipe axis in the rule pass AND the FSDP/ZeRO
+    extra pass, even when a rule table names it."""
+    from repro.mesh_ctx import DEFAULT_RULES, shard_factor
+    rules = dict(DEFAULT_RULES)
+    base = shard_factor((64, 4096), ("batch", None), {"data": 4},
+                        rules, ("data",))
+    with_pipe = shard_factor((64, 4096), ("batch", None),
+                             {"data": 4, "pipe": 4}, rules, ("data",))
+    assert with_pipe == base
+    rules["batch"] = ("pipe", "data")     # hostile rule table
+    assert shard_factor((64, 4096), ("batch", None),
+                        {"data": 4, "pipe": 4}, rules) == 4
+
+
+# ---------------------------------------------------------------------------
+# pipeline memory semantics
+# ---------------------------------------------------------------------------
+
+
+def test_pp_reduces_per_stage_statics():
+    """Splitting over stages shrinks per-device params/opt (that is the
+    point of PP) while pp=1 keeps them whole."""
+    shape = ShapeConfig("cell", 1024, 8, "train")
+    whole = planner.check("llama3.2-3b", shape, {"data": 1, "model": 1})
+    pp4 = planner.check("llama3.2-3b", shape,
+                        {"data": 1, "model": 1, "pipe": 4})
+    assert pp4.prediction.param_bytes < whole.prediction.param_bytes
+    assert pp4.prediction.opt_bytes < whole.prediction.opt_bytes
+    assert pp4.peak_bytes < whole.peak_bytes
+
+
+def test_gpipe_stash_exceeds_1f1b():
+    """GPipe holds all microbatches on every stage; 1F1B caps the stash
+    at the remaining pipeline depth — so GPipe's peak is >=."""
+    shape = ShapeConfig("cell", 1024, 16, "train")
+    mesh = {"data": 1, "model": 1, "pipe": 4}
+    f1b = planner.check("llama3.2-3b", shape, mesh, microbatches=8,
+                        schedule="1f1b")
+    gp = planner.check("llama3.2-3b", shape, mesh, microbatches=8,
+                       schedule="gpipe")
+    assert gp.peak_bytes >= f1b.peak_bytes
+    assert gp.prediction.act_saved_bytes > f1b.prediction.act_saved_bytes
+
+
+def test_boundary_buffers_on_middle_stages():
+    """Middle stages carry 2 edges x (fwd + bwd) boundary buffers."""
+    cfg = get_config("llama3.2-3b")
+    model = build_model(cfg)
+    ctx = planner.make_context(cfg, {"data": 1, "model": 1, "pipe": 4},
+                               kind="train", global_batch=8, seq_len=1024)
+    preds = PR.predict_stages(model, FULL_TRAIN, ctx)
+    assert len(preds) == 4
+    per_edge = ctx.pp_micro_batch * ctx.seq_len * cfg.d_model * 2
+    raw = [PR._boundary_bytes(cfg, ctx, "train", s, 4) for s in range(4)]
+    assert raw[0] == raw[3] == 2 * per_edge       # 1 edge x (fwd+bwd)
+    assert raw[1] == raw[2] == 4 * per_edge       # 2 edges x (fwd+bwd)
+
+
+# ---------------------------------------------------------------------------
+# columnar == cell == un-memoized check on pp grids
+# ---------------------------------------------------------------------------
+
+PP_MESHES = [{"data": 2, "model": 2, "pipe": 1},
+             {"data": 2, "model": 1, "pipe": 2},
+             {"data": 1, "model": 2, "pipe": 4}]
+
+
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_columnar_matches_cell_pp_grid(kind):
+    np = pytest.importorskip("numpy")
+    del np
+    grid = SW.SweepGrid(
+        arch="llava15-7b", mesh_shapes=PP_MESHES, kind=kind,
+        schedules=("1f1b", "gpipe"), microbatches=(1, 4, 8),
+        grad_accums=(1, 2) if kind == "train" else (1,),
+        global_batches=(8, 16), seq_lens=(512,), backend="cpu")
+    cell = SW.SweepEngine().sweep(grid, mode="cell")
+    col = SW.SweepEngine().sweep(grid, mode="columnar")
+    assert col.columns is not None
+    assert len(cell) == len(col)
+    for a, b in zip(cell.results, col.results):
+        assert a == b, f"\ncell: {a!r}\ncol:  {b!r}"
+
+
+def test_cell_path_matches_unmemoized_check_pp():
+    grid = SW.SweepGrid(
+        arch="smollm-360m", mesh_shapes=PP_MESHES,
+        schedules=("1f1b", "gpipe"), microbatches=(1, 4),
+        global_batches=(8,), seq_lens=(512,), backend="cpu")
+    res = SW.SweepEngine().sweep(grid, mode="cell")
+    for r in res.results:
+        shape = ShapeConfig("cell", r.seq_len, r.global_batch, r.kind)
+        ref = planner.check(r.arch, shape, r.mesh_shape,
+                            backend=r.backend, grad_accum=r.grad_accum,
+                            remat=r.remat, optimizer=r.optimizer,
+                            chip=r.chip, microbatches=r.microbatches,
+                            schedule=r.schedule)
+        assert ref.peak_bytes == r.peak_bytes, r
+
+
+def test_grid_size_counts_pp_knobs():
+    grid = SW.SweepGrid(arch="smollm-360m", mesh_shapes=PP_MESHES,
+                        schedules=("1f1b", "gpipe"),
+                        microbatches=(1, 4, 8),
+                        global_batches=(8, 16), seq_lens=(512,))
+    assert grid.size() == 3 * 2 * 3 * 2
+    assert grid.size() == sum(1 for _ in grid.cells())
+
+
+def test_enumerate_meshes_pipe_axis():
+    from repro.launch.mesh import enumerate_meshes, pp_degree
+    meshes = enumerate_meshes(8, ("data", "model", "pipe"),
+                              {"pipe": 2})
+    assert all(m["data"] * m["model"] * m["pipe"] == 8 for m in meshes)
+    assert {m["pipe"] for m in meshes} == {1, 2}
+    assert pp_degree({"data": 2, "pipe": 4}) == 4
+    assert pp_degree({"data": 2}) == 1
+
+
+def test_plan_min_chips_pp_beats_no_pp():
+    """PP unlocks configs dense 2-axis meshes cannot reach: the min-chip
+    answer with the pipe axis allowed is never worse."""
+    shape = ShapeConfig("cell", 2048, 8, "train")
+    with_pp = planner.plan_min_chips(
+        "llama3.2-3b", shape, chips=(2, 4, 8), max_pp=4,
+        microbatches=(1, 4), schedules=("1f1b",))
+    without = planner.plan_min_chips(
+        "llama3.2-3b", shape, chips=(2, 4, 8), allow_pp=False)
+    if without is None:
+        assert with_pp is None or with_pp.fits
+    else:
+        assert with_pp is not None
+        assert with_pp.n_chips <= without.n_chips
+
+
+# ---------------------------------------------------------------------------
+# CLI satellites
+# ---------------------------------------------------------------------------
+
+
+def test_breakdown_cli_smoke(capsys):
+    from repro.configs.__main__ import main as cfg_main
+    rc = cfg_main(["--breakdown", "--arch", "smollm_360m",
+                   "--mesh", "data=2,model=1,pipe=2",
+                   "--microbatches", "4"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "pipeline stages (pp=2" in out
+    assert "per-module breakdown" in out
+    assert "language_model/blocks" in out
+
+
+def test_breakdown_cli_requires_arch():
+    from repro.configs.__main__ import main as cfg_main
+    with pytest.raises(SystemExit):
+        cfg_main(["--breakdown"])
+
+
+def test_sweep_cli_pp_knobs(capsys):
+    rc = SW.main(["--arch", "smollm_360m", "--chips", "8",
+                  "--mesh-axes", "data,model,pipe", "--max-pipe", "2",
+                  "--schedule", "1f1b,gpipe", "--microbatches", "1,4",
+                  "--batch", "16", "--seq-len", "256", "--top", "5"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "gpipe" in out
+
+
+def test_unknown_schedule_rejected_everywhere():
+    grid = SW.SweepGrid(arch="smollm-360m", chips=4,
+                        schedules=("interleaved",),
+                        global_batches=(8,), seq_lens=(256,))
+    for mode in ("columnar", "cell"):
+        with pytest.raises(ValueError, match="unknown schedule"):
+            SW.sweep(grid, mode=mode)
+    with pytest.raises(SystemExit):       # clean argparse error, exit 2
+        SW.main(["--arch", "smollm_360m", "--chips", "4", "--batch", "8",
+                 "--schedule", "interleaved"])
+
+
+def test_sweep_cli_dry_run_cardinality_table(capsys):
+    rc = SW.main(["--arch", "smollm_360m", "--chips", "8",
+                  "--mesh-axes", "data,model,pipe", "--max-pipe", "4",
+                  "--schedule", "1f1b,gpipe", "--microbatches", "1,4,8",
+                  "--batch", "16,32", "--seq-len", "512", "--dry-run"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    for knob in ("schedule", "microbatches", "accum x batch", "mesh",
+                 "total"):
+        assert knob in out
+    assert "cells" in out and "estimated runtime" in out

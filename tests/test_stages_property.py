@@ -1,0 +1,139 @@
+"""Hypothesis property suite for the pipeline-stage partitioner.
+
+Generates synthetic parse tables (random segment structures: pinned
+front towers, splittable scan stacks, atomic oddballs, pinned tails) and
+asserts the partition invariants — contiguity, exact cover, balance
+bound, pinning — for arbitrary (rows, pp).  Runs whenever ``hypothesis``
+is installed (skipped otherwise, like tests/test_batch_property.py); the
+deterministic twin over the real zoo lives in tests/test_stages.py.
+"""
+
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import stages as ST  # noqa: E402
+from repro.core.parser import ParsedLayer  # noqa: E402
+from repro.core.spec import LayerSpec, ParamSpec  # noqa: E402
+
+
+def _mk_rows(segments):
+    """segments: list of (module, modality, repeat, scanned, trainable,
+    n_layers, width) -> ParsedLayer rows."""
+    rows = []
+    for (module, modality, repeat, scanned, trainable, n_layers,
+         width) in segments:
+        for li in range(n_layers):
+            layer = LayerSpec(
+                name=f"l{li}", kind="linear",
+                params={"w": ParamSpec(shape=(width, width))})
+            rows.append(ParsedLayer(
+                path=f"{module}/l{li}", module_path=module,
+                modality=modality, layer=layer, repeat=repeat,
+                scanned=scanned, trainable=trainable))
+    return rows
+
+
+@st.composite
+def model_shapes(draw):
+    segs = []
+    n_front = draw(st.integers(0, 2))
+    for i in range(n_front):
+        segs.append((f"front{i}", draw(st.sampled_from(
+            ["vision", "audio", "text"])), 1, False,
+            draw(st.booleans()), draw(st.integers(1, 3)),
+            draw(st.sampled_from([8, 16]))))
+    n_mid = draw(st.integers(1, 3))
+    for i in range(n_mid):
+        segs.append((f"mid{i}", "text", draw(st.integers(2, 24)), True,
+                     draw(st.booleans()), draw(st.integers(1, 4)),
+                     draw(st.sampled_from([8, 16, 32]))))
+    n_tail = draw(st.integers(0, 2))
+    for i in range(n_tail):
+        segs.append((f"tail{i}", "text", 1, False, draw(st.booleans()),
+                     draw(st.integers(1, 2)),
+                     draw(st.sampled_from([8, 16]))))
+    return _mk_rows(segs)
+
+
+@settings(max_examples=200, deadline=None)
+@given(rows=model_shapes(), pp=st.integers(1, 8))
+def test_partition_invariants(rows, pp):
+    plan = ST.partition(rows, pp)
+    assert len(plan.stages) == pp
+
+    flat = [r for s in plan.stages for r in s]
+    # exact cover: per-path repeats conserved
+    by_path: dict = {}
+    for r in flat:
+        by_path[r.path] = by_path.get(r.path, 0) + r.repeat
+    assert by_path == {r.path: r.repeat for r in rows}
+
+    # contiguity: flattened stage order walks the original segment
+    # order, and a split segment spans a contiguous run of stages
+    seg_order: dict = {}
+    for r in rows:
+        seg_order.setdefault(r.module_path, len(seg_order))
+    idx = [seg_order[r.module_path] for r in flat]
+    assert idx == sorted(idx)
+    holders: dict = {}
+    for si, s in enumerate(plan.stages):
+        for r in s:
+            holders.setdefault(r.module_path, []).append(si)
+    for sis in holders.values():
+        uniq = sorted(set(sis))
+        assert uniq == list(range(uniq[0], uniq[-1] + 1))
+
+    # weights bookkeeping matches the rows actually assigned
+    for s_rows, w in zip(plan.stages, plan.weights):
+        got = sum(sum(p.nbytes for p in r.layer.params.values())
+                  * r.repeat * (ST.TRAINABLE_WEIGHT if r.trainable else 1)
+                  for r in s_rows)
+        assert got == w
+
+
+@settings(max_examples=100, deadline=None)
+@given(rows=model_shapes(), pp=st.integers(2, 8))
+def test_partition_balance_bound(rows, pp):
+    segs = ST._segments(rows)
+    split_ids = [i for i, s in enumerate(segs) if s.splittable]
+    plan = ST.partition(rows, pp)
+    if not split_ids:
+        assert plan.weights[1:] == (0,) * (pp - 1)
+        return
+    first, last = split_ids[0], split_ids[-1]
+    front = sum(s.total_weight() for s in segs[:first])
+    tail = sum(s.total_weight() for s in segs[last + 1:])
+    units = []
+    for seg in segs[first:last + 1]:
+        units.extend([seg.unit_weight()] * seg.repeat if seg.splittable
+                     else [seg.total_weight()])
+    bound = max(front, tail) + -(-sum(units) // pp) + max(units)
+    assert max(plan.weights) <= bound
+
+
+@settings(max_examples=100, deadline=None)
+@given(rows=model_shapes(), pp=st.integers(2, 6))
+def test_partition_pins_non_text_towers(rows, pp):
+    plan = ST.partition(rows, pp)
+    for si, stage in enumerate(plan.stages):
+        for r in stage:
+            if r.modality in ("vision", "audio"):
+                assert si == 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(pp=st.integers(1, 8), m=st.integers(1, 16),
+       sched=st.sampled_from(ST.SCHEDULES))
+def test_stash_count_bounds(pp, m, sched):
+    counts = [ST.stash_count(s, pp, m, sched) for s in range(pp)]
+    assert all(1 <= c <= max(m, 1) for c in counts)
+    if pp == 1:
+        assert counts == [1]
+    elif sched == "gpipe":
+        assert counts == [m] * pp
+    else:
+        assert counts == sorted(counts, reverse=True)   # drains down
+        assert counts[-1] == 1 if m >= 1 else True
