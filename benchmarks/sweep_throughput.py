@@ -16,18 +16,22 @@ so the perf trajectory is tracked across PRs.  Scales:
 
 * ``large`` (default): 124,416 cells — the ISSUE-3 acceptance grid
   (>= 100k cells, >= 50x columnar speedup);
-* ``smoke``: ~31k cells — the CI perf gate, spanning pipeline degrees
-  pp in {1, 2, 4} x microbatches in {1, 4, 8} x both schedules on a
-  3-axis (data, model, pipe) mesh enumeration (use with
-  ``--min-cells-per-sec`` / ``--min-speedup`` floors);
+* ``smoke``: ~47k cells — the CI perf gate on the MoE arch, spanning
+  expert-parallel ep in {1, 2, 4} x context-parallel cp in {1, 2, 4} x
+  pipeline degrees pp in {1, 2, 4} x microbatches in {1, 4, 8} x both
+  schedules on a 5-axis (data, model, expert, context, pipe) mesh
+  enumeration (use with ``--min-cells-per-sec`` / ``--min-speedup``
+  floors);
 * ``pr1``: the original 1,080-cell PR-1 grid (under_1s trajectory).
 
-``--verify`` additionally replays the 5,208-cell parity set — every
+``--verify`` additionally replays the 7,152-cell parity set — every
 arch x kind x backend x policy, with and without a calibration profile,
-plus pp in {1, 2, 4} x microbatches in {1, 4, 8} x {1f1b, gpipe}
-pipeline grids over the whole zoo — through un-memoized
-``planner.check`` cell by cell and fails on any byte difference
-(minutes, not timed).
+pp in {1, 2, 4} x microbatches in {1, 4, 8} x {1f1b, gpipe} pipeline
+grids over the whole zoo, plus the ISSUE-5 acceptance grids crossing
+ep {1, 2, 4} x cp {1, 2, 4} with that pipeline set (full cross on the
+MoE arches, the legal slices elsewhere: dense arches pin expert=1,
+decode pins context=1) — through un-memoized ``planner.check`` cell by
+cell and fails on any byte difference (seconds, not timed).
 """
 
 from __future__ import annotations
@@ -44,11 +48,21 @@ from common import write_bench  # noqa: E402
 from repro.configs import ShapeConfig, registered_archs  # noqa: E402
 from repro.core import planner, sweep as SW  # noqa: E402
 
-PARITY_CELLS = 5208
+PARITY_CELLS = 7152
 
 PP_MESHES = [{"data": 2, "model": 2, "pipe": 1},
              {"data": 2, "model": 1, "pipe": 2},
              {"data": 1, "model": 2, "pipe": 4}]
+
+# ep {1,2,4} x cp {1,2,4} crossed with the pp {1,2,4} set (ISSUE-5
+# acceptance grid); dense arches keep the expert=1 slice (an expert
+# axis > 1 on a dense arch is rejected by planner.check_parallel), and
+# decode keeps the context=1 slice (cp is train/prefill-only).
+EPCP_MESHES = [{"data": 2, "model": 1, "expert": e, "context": c,
+                "pipe": p}
+               for e in (1, 2, 4) for c in (1, 2, 4) for p in (1, 2, 4)]
+CP_MESHES = [m for m in EPCP_MESHES if m["expert"] == 1]
+EP_MESHES = [m for m in EPCP_MESHES if m["context"] == 1]
 
 
 def _bench_profile():
@@ -72,17 +86,18 @@ def build_grid(scale: str = "large") -> SW.SweepGrid:
             global_batches=(8, 16, 32, 64, 128, 256, 512, 1024, 2048,
                             4096),
             seq_lens=(2048,), chip="v5e", backend="tpu")
-    if scale == "smoke":                    # ~31k cells: CI perf gate,
-        return SW.SweepGrid(                # pp in {1,2,4} x mb x sched
-            arch="llava15-7b", chips=64, chip="v5e",
-            mesh_axes=("data", "model", "pipe"),
-            max_axis={"pipe": 4},
+    if scale == "smoke":                    # ~47k cells: CI perf gate,
+        return SW.SweepGrid(                # ep x cp x pp x mb x sched on
+            arch="deepseek-v2-lite-16b",    # the MoE arch (5-axis meshes)
+            chips=64, chip="v5e",
+            mesh_axes=("data", "model", "expert", "context", "pipe"),
+            max_axis={"expert": 4, "context": 4, "pipe": 4},
             optimizers=(None, "adafactor"),
             remats=("none", "block", "dots"),
             schedules=("1f1b", "gpipe"),
             microbatches=(1, 4, 8),
-            grad_accums=(1, 2, 4, 8),
-            global_batches=(8, 16, 32, 64, 128, 256),
+            grad_accums=(1, 4),
+            global_batches=(8, 32, 128),
             seq_lens=(1024, 4096), backend="tpu")
     return SW.SweepGrid(                    # large: 124,416 cells
         arch="llava15-7b", chips=(64, 128, 256),
@@ -96,7 +111,7 @@ def build_grid(scale: str = "large") -> SW.SweepGrid:
 
 
 def parity_set() -> list:
-    """The 4,416-cell parity set: PR 1's 1,080-cell throughput grid plus
+    """The 7,152-cell parity set: PR 1's 1,080-cell throughput grid plus
     per-arch train/serve grids on both oracle backends, the LLaVA frozen
     policies, and calibrated variants — every cell re-checkable against
     un-memoized ``planner.check``."""
@@ -139,6 +154,25 @@ def parity_set() -> list:
             schedules=("1f1b", "gpipe"), microbatches=(1, 8),
             global_batches=(8,), seq_lens=(1024,), backend="cpu",
             profile=profile))
+    from repro.configs import get_config    # ep x cp x pp acceptance set
+    for arch in registered_archs():         # moe: 2 x 378, dense: 10 x 108
+        moe = get_config(arch).moe is not None
+        meshes = EPCP_MESHES if moe else CP_MESHES
+        for kind in ("train", "prefill"):
+            grids.append(SW.SweepGrid(
+                arch=arch, mesh_shapes=meshes, kind=kind,
+                schedules=("1f1b", "gpipe"), microbatches=(1, 4, 8),
+                global_batches=(8,), seq_lens=(1024,), backend="tpu"))
+        if moe:
+            grids.append(SW.SweepGrid(    # decode rides the ep x pp slice
+                arch=arch, mesh_shapes=EP_MESHES, kind="decode",
+                schedules=("1f1b", "gpipe"), microbatches=(1, 4, 8),
+                global_batches=(8,), seq_lens=(1024,), backend="tpu"))
+    grids.append(SW.SweepGrid(              # calibrated ep x cp x pp: 108
+        arch="deepseek-v2-lite-16b", mesh_shapes=EPCP_MESHES,
+        schedules=("1f1b", "gpipe"), microbatches=(1, 8),
+        global_batches=(8,), seq_lens=(1024,), backend="cpu",
+        profile=profile))
     return grids
 
 
@@ -267,8 +301,8 @@ def main(argv=None) -> int:
     ap.add_argument("--scale", choices=("large", "smoke", "pr1"),
                     default="large")
     ap.add_argument("--verify", action="store_true",
-                    help="replay the 4,416-cell parity set through "
-                         "un-memoized planner.check (slow)")
+                    help=f"replay the {PARITY_CELLS:,}-cell parity set "
+                         "through un-memoized planner.check (slow)")
     ap.add_argument("--jobs", type=int, default=1)
     ap.add_argument("--out", default=None,
                     help="output dir for BENCH_sweep.{json,md} "

@@ -12,7 +12,10 @@ two extra columns show each architecture's predicted peak on the
 reference cell, raw and calibrated.  With ``--breakdown`` one
 architecture's prediction is decomposed into the per-module memory table
 (``PredictedMemory.per_module``) and — when the mesh has a ``pipe``
-axis — the per-pipeline-stage table (``predictor.predict_stages``).
+axis — the per-pipeline-stage table (``predictor.predict_stages``);
+a mesh with an ``expert`` / ``context`` axis adds per-expert-shard and
+per-context-shard columns (``ep_saved`` / ``cp_saved``: what each module
+saves versus the same cell with that axis stripped).
 """
 
 from __future__ import annotations
@@ -96,6 +99,8 @@ def breakdown(arch: str, shape: str = "train_4k",
     from repro.core.sweep import POLICIES, normalize_arch
     from repro.models import build_model
 
+    from repro.launch.mesh import cp_degree, ep_degree
+
     arch = normalize_arch(arch)
     cfg = get_config(arch)
     model = build_model(cfg)
@@ -117,6 +122,35 @@ def breakdown(arch: str, shape: str = "train_4k",
            f"peak {pred.peak_bytes / GiB:.2f} GiB vs "
            f"{budget / GiB:.2f} GiB budget ({chip}) -> "
            f"{'FITS' if pred.peak_bytes <= budget else 'OOM'}", ""]
+
+    # per-expert-shard / per-context-shard columns: re-predict the SAME
+    # cell with the expert (resp. context) axis stripped; each module's
+    # delta is what that axis saves it on the peak stage.  The stage
+    # partition depends only on the pipe degree, so stage indices line
+    # up between the stripped and full meshes.
+    ep, cp = ep_degree(mesh), cp_degree(mesh)
+
+    def _without(axis):
+        m = {k: v for k, v in mesh.items() if k != axis}
+        c = PL.make_context(cfg, m, kind=shp.kind,
+                            global_batch=shp.global_batch,
+                            seq_len=shp.seq_len, backend=backend,
+                            microbatches=microbatches, schedule=schedule)
+        return PR.predict_stages(model, POLICIES[policy], c)[peak_stage]
+
+    mod_total = lambda m: m["param"] + m["grad"] + m["opt"] + m["act"]
+    ep_saved = cp_saved = None
+    if ep > 1:
+        ep_saved = {path: mod_total(m) - mod_total(pred.per_module[path])
+                    for path, m in _without("expert").per_module.items()}
+    if cp > 1:
+        cp_saved = {path: mod_total(m) - mod_total(pred.per_module[path])
+                    for path, m in _without("context").per_module.items()}
+    if ep > 1 or cp > 1:
+        out.append(f"expert-parallel ep={ep} (MoE weights + dispatch "
+                   f"buffers / {ep}) x context-parallel cp={cp} (seq "
+                   f"activations + ring KV blocks / {cp})")
+        out.append("")
     if len(preds) > 1:
         from repro.core import stages as ST
         rows = []
@@ -142,14 +176,23 @@ def breakdown(arch: str, shape: str = "train_4k",
     mod_rows = []
     for path, m in pred.per_module.items():
         total = m["param"] + m["grad"] + m["opt"] + m["act"]
-        mod_rows.append((path, "yes" if m["trainable"] else "frozen",
-                         gib(m["param"]), gib(m["grad"]), gib(m["opt"]),
-                         gib(m["act"]), gib(total)))
+        row = [path, "yes" if m["trainable"] else "frozen",
+               gib(m["param"]), gib(m["grad"]), gib(m["opt"]),
+               gib(m["act"]), gib(total)]
+        if ep_saved is not None:
+            row.append(gib(ep_saved[path]))
+        if cp_saved is not None:
+            row.append(gib(cp_saved[path]))
+        mod_rows.append(tuple(row))
+    headers = ["module", "trainable", "param", "grad", "opt", "act_saved",
+               "total_gib"]
+    if ep_saved is not None:
+        headers.append(f"ep_saved (x{ep})")
+    if cp_saved is not None:
+        headers.append(f"cp_saved (x{cp})")
     title = ("per-module breakdown"
              + (f" (peak stage {peak_stage})" if len(preds) > 1 else ""))
-    out.append(markdown_table(
-        ("module", "trainable", "param", "grad", "opt", "act_saved",
-         "total_gib"), mod_rows, title=title))
+    out.append(markdown_table(tuple(headers), mod_rows, title=title))
     return "\n".join(out)
 
 

@@ -20,7 +20,11 @@ NumPy kernels that evaluate ALL cells of a
 * mesh shard counts come from :func:`batch_shard_factor`, an exact
   broadcast transliteration of ``mesh_ctx.assign_axes`` — divisibility,
   axis-reuse, FSDP/ZeRO greedy assignment and the pipe-axis exclusion
-  are computed per cell with boolean masks, in integer arithmetic;
+  are computed per cell with boolean masks, in integer arithmetic; the
+  expert-parallel (`expert`) and context-parallel (`context`) axes flow
+  through the same rule machinery, with the MoE-only (`experts` /
+  `expert_buf`) and attention-only (ring KV block, gated per mesh on
+  cp > 1) terms columnar-gated exactly like the scalar path;
 * pipeline parallelism groups meshes by their ``pipe`` degree: every
   mesh in a group shares one stage partition (``core.stages``), the
   per-stage tables compose exactly like the scalar per-stage
@@ -52,7 +56,7 @@ from repro.core import planner as PL
 from repro.core import predictor as PR
 from repro.core import sweep as SW
 from repro.core.spec import dtype_bytes
-from repro.mesh_ctx import PIPE_AXIS
+from repro.mesh_ctx import CONTEXT_AXIS, PIPE_AXIS
 
 I64 = np.int64
 
@@ -82,18 +86,22 @@ def batch_shard_factor(dims, axes, sizes: dict, rules: dict,
     svals = {a: np.asarray(v, I64) for a, v in sizes.items()}
     shape = np.broadcast_shapes(*(a.shape for a in arrs),
                                 *(v.shape for v in svals.values()))
-    ones = np.ones(shape, I64)
-    totals = [ones] * len(arrs)        # per-dim applied shard product
-    denom = ones
+    # a size-1 axis multiplies every factor by 1 and can never block a
+    # later dim (marking it "used" only matters to another x1 attempt),
+    # so all-ones columns — e.g. the expert/context padding of meshes
+    # without those axes — are skipped outright
+    live = {a for a, v in svals.items() if np.any(v > 1)}
+    one = np.ones((), I64)
+    totals = [one] * len(arrs)         # per-dim applied shard product
+    denom = one
     used: dict[str, np.ndarray] = {}
     for i, ax in enumerate(axes):
         if not ax:
             continue
         for a in rules.get(ax, ()):
-            if a == PIPE_AXIS or a not in svals:
+            if a == PIPE_AXIS or a not in live:
                 continue
-            ok = np.broadcast_to(arrs[i] % (totals[i] * svals[a]) == 0,
-                                 shape)
+            ok = arrs[i] % (totals[i] * svals[a]) == 0
             prev = used.get(a)
             if prev is not None:
                 ok = ok & ~prev
@@ -101,22 +109,22 @@ def batch_shard_factor(dims, axes, sizes: dict, rules: dict,
             denom = np.where(ok, denom * svals[a], denom)
             used[a] = ok if prev is None else (prev | ok)
     for a in extra:
-        if a == PIPE_AXIS or a not in svals:
+        if a == PIPE_AXIS or a not in live:
             continue
         prev = used.get(a)
-        avail = ~prev if prev is not None else np.ones(shape, bool)
-        assigned = np.zeros(shape, bool)
+        avail = ~prev if prev is not None else np.ones((), bool)
+        assigned = np.zeros((), bool)
         for i in range(len(arrs)):
             # never FSDP/ZeRO-shard the scan-stack dim (see mesh_ctx)
             if axes[i] == "layers":
                 continue
-            ok = avail & ~assigned & np.broadcast_to(
-                arrs[i] % (totals[i] * svals[a]) == 0, shape)
+            ok = avail & ~assigned \
+                & (arrs[i] % (totals[i] * svals[a]) == 0)
             totals[i] = np.where(ok, totals[i] * svals[a], totals[i])
             denom = np.where(ok, denom * svals[a], denom)
             assigned = assigned | ok
         used[a] = assigned if prev is None else (prev | assigned)
-    return denom
+    return np.broadcast_to(denom, shape)
 
 
 def eval_term_batch(spec: F.TermSpec, env: dict, sizes: dict,
@@ -388,6 +396,19 @@ def _stage_tables(cfg, model, rows, rules, rep_ctx,
     sizes2 = {a: v[:, None] for a, v in sizes1.items()}
     shape2 = (n_mesh, T)
     full = lambda v: np.broadcast_to(np.asarray(v, I64), shape2)
+    # context-parallel gate: the ring-attention send/recv transient
+    # exists only on meshes whose `context` axis exceeds 1 (the scalar
+    # twin gates on ctx.cp > 1 in factors._ring_bytes)
+    cp_gt1 = (sizes1[CONTEXT_AXIS] > 1)[:, None] \
+        if CONTEXT_AXIS in sizes1 else np.zeros((n_mesh, 1), bool)
+
+    def ring_term(r):
+        rspec = F.ring_kv_spec(r)
+        if rspec is None or kind == "decode" or not cp_gt1.any():
+            return 0
+        ring = np.broadcast_to(
+            eval_term_batch(rspec, env, sizes2, rules), shape2)
+        return np.where(cp_gt1, ring, 0)
 
     # -- static group (params / grads / optimizer states / output copy) --
     train = kind == "train"
@@ -483,8 +504,9 @@ def _stage_tables(cfg, model, rows, rules, rep_ctx,
             tspec = F.flash_tile_spec(r)
             tile = 0 if tspec is None \
                 else eval_term_batch(tspec, env, sizes2, rules)
-            t_row = 2 * T_full + 2 * tile if r.trainable \
-                else T_full + tile
+            ring = ring_term(r)
+            t_row = 2 * T_full + 2 * tile + ring if r.trainable \
+                else T_full + tile + ring
             if r.scanned:
                 blocks[r.module_path] = blocks.get(r.module_path, 0) + t_row
             else:
@@ -513,7 +535,7 @@ def _stage_tables(cfg, model, rows, rules, rep_ctx,
                 tspec = F.flash_tile_spec(r)
                 tile = 0 if tspec is None \
                     else eval_term_batch(tspec, env, sizes2, rules)
-                t_row = T_full + tile
+                t_row = T_full + tile + ring_term(r)
             blocks[r.module_path] = blocks.get(r.module_path, 0) + t_row
         transient = zeros2
         for v in blocks.values():
@@ -632,6 +654,9 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
     """Evaluate every cell of ``grid`` columnarly; byte-identical to the
     per-cell path (``SweepEngine.evaluate`` per ``grid.cells()`` cell)."""
     t0 = time.perf_counter()
+    # same up-front ep/cp validation the cell path hits via
+    # grid.cells() -> make_context -> planner.check_parallel
+    grid.check_parallel()
     cols = build_columns(grid)
     if cols.n == 0:
         return SW.SweepResults(grid=grid, results=[],

@@ -29,7 +29,8 @@ from typing import Optional
 
 from repro.core.parser import ParsedLayer
 from repro.core.spec import ActTerm, ParamSpec, dtype_bytes
-from repro.mesh_ctx import DEFAULT_RULES, shard_factor
+from repro.mesh_ctx import (CONTEXT_AXIS, DEFAULT_RULES, EXPERT_AXIS,
+                            shard_factor)
 
 AXIS_LAYERS = "layers"
 
@@ -74,7 +75,15 @@ def term_env(ctx: "PredictContext") -> dict:
     """Scalar evaluation environment for TermSpec dims.  ``mb`` is the
     *pipeline* micro-batch: under pipeline parallelism only one
     microbatch's activations are in flight per term (the stash multiplier
-    in ``core.stages`` accounts for the schedule's in-flight copies)."""
+    in ``core.stages`` accounts for the schedule's in-flight copies).
+
+    The expert-parallel / context-parallel divisors (``ctx.ep`` /
+    ``ctx.cp``) deliberately do NOT appear as env tokens: they divide
+    through the shard-factor side of every TermSpec instead — the
+    `experts`/`expert_buf` and `seq` logical axes map onto the `expert`
+    and `context` mesh axes — so every existing spec scales with ep/cp
+    automatically and the scalar and columnar paths cannot disagree on
+    where the division happens."""
     from repro.models.transformer import LOSS_CHUNK
     slen = ctx.max_len or ctx.seq_len
     return {"mb": ctx.pp_micro_batch, "gb": ctx.global_batch,
@@ -189,6 +198,22 @@ class PredictContext:
     def dp(self) -> int:
         return (self.mesh_shape.get("data", 1)
                 * self.mesh_shape.get("pod", 1))
+
+    @property
+    def ep(self) -> int:
+        """Expert-parallel degree: the mesh's `expert` axis.  Divides
+        ONLY the MoE `experts` weight stacks and `expert_buf` dispatch
+        buffers (through the rule table) — never dense layers."""
+        return int(self.mesh_shape.get(EXPERT_AXIS, 1))
+
+    @property
+    def cp(self) -> int:
+        """Context-parallel (ring-attention) degree: the mesh's `context`
+        axis.  Divides the seq dim of train/prefill activations through
+        the `seq` rule; every TermSpec with a seq-axis dim scales
+        automatically.  Decode caches stay on `cache_seq` (cp is
+        rejected for decode by planner.check_parallel)."""
+        return int(self.mesh_shape.get(CONTEXT_AXIS, 1))
 
 
 def _stacked(p: ParamSpec, row: ParsedLayer) -> tuple[tuple, tuple]:
@@ -355,15 +380,55 @@ def _flash_tile_bytes(row: ParsedLayer, ctx: PredictContext) -> int:
     return eval_term(spec, term_env(ctx), ctx.mesh_shape, ctx.rules)
 
 
+def ring_kv_spec(row: ParsedLayer) -> Optional[TermSpec]:
+    """Per-hop ring-attention KV block of one attention row under
+    context parallelism: each cp shard holds its own KV slice plus one
+    in-flight send + recv buffer pair rotating around the ring.  GQA
+    rows rotate k+v ``(mb, seq, Hkv, hd)`` bf16 blocks (mult 4 = (k+v)
+    x (send+recv)); MLA rows rotate the compressed latent.  The seq dim
+    carries the `seq` axis so the block shards by cp (and SP's model
+    split) exactly like the activations it travels with.  None for
+    non-attention rows; callers gate on ``ctx.cp > 1`` and
+    ``ctx.kind != "decode"`` (decode has no ring)."""
+    if row.layer.kind != "attention":
+        return None
+    meta = row.layer.meta
+    tok = "enc" if meta.get("cross") else "seq"
+    if meta.get("attn_kind") == "mla":
+        mla = meta["mla"]
+        width = mla.kv_lora_rank + mla.qk_rope_head_dim
+        return TermSpec(dims=("mb", tok, width),
+                        axes=("batch", "seq", None), nbytes=2, mult=2)
+    if "n_kv_heads" in meta:
+        return TermSpec(dims=("mb", tok, meta["n_kv_heads"],
+                              meta["head_dim"]),
+                        axes=("batch", "seq", "kv_heads", None),
+                        nbytes=2, mult=4)
+    return None
+
+
+def _ring_bytes(row: ParsedLayer, ctx: PredictContext) -> int:
+    """Ring-hop send/recv transient (0 without a context axis > 1)."""
+    if ctx.cp <= 1 or ctx.kind == "decode":
+        return 0
+    spec = ring_kv_spec(row)
+    if spec is None:
+        return 0
+    return eval_term(spec, term_env(ctx), ctx.mesh_shape, ctx.rules)
+
+
 def act_factor_transient(row: ParsedLayer, ctx: PredictContext) -> int:
     """Peak transient working set of ONE instance (recomputed block during
-    its backward, or plain forward for frozen modules)."""
+    its backward, or plain forward for frozen modules).  Under context
+    parallelism the ring-attention per-hop KV send/recv buffers ride on
+    top (folded into act_transient by the assembler)."""
     if not row.layer.acts:
         return 0
     total = sum(layer_act_terms(row, ctx).values())
     tiles = _flash_tile_bytes(row, ctx)
+    ring = _ring_bytes(row, ctx)
     if ctx.kind == "train" and row.trainable:
         # recomputed fwd + cotangents (+ p and ds score tiles in the
         # flash backward)
-        return 2 * total + 2 * tiles
-    return total + tiles
+        return 2 * total + 2 * tiles + ring
+    return total + tiles + ring

@@ -86,6 +86,61 @@ class PlanReport:
                 + (f" — {self.note}" if self.note else ""))
 
 
+def check_parallel(cfg, mesh_shape: dict, kind: str,
+                   seq_len: Optional[int] = None) -> None:
+    """Reject parallelism plans the architecture / step kind cannot run.
+
+    The ONE validation gate for the `expert` (ep) and `context` (cp)
+    mesh axes — ``make_context`` (every per-cell path) and the columnar
+    sweep (grid-level, ``SweepGrid.check_parallel``) both call it, so
+    invalid combos fail with the same clean ValueError everywhere
+    instead of a silent misprediction or a deep traceback:
+
+    * ``expert`` axis on an arch without MoE layers (nothing to shard);
+    * ``expert`` degree beyond — or not dividing — the routed-expert
+      count (the EP all_to_all needs equal per-shard expert groups; a
+      non-divisible axis would be silently inert in the model and
+      unrunnable by the runtime);
+    * ``context`` axis on a decode step (token-at-a-time: no seq dim to
+      ring over — decode KV caches stay on `cache_seq`);
+    * ``context`` degree that does not divide the sequence length (ring
+      attention needs equal per-shard blocks; unlike head counts there
+      is no graceful-replication story for a lopsided ring).
+    """
+    from repro.launch import mesh as M
+    ep, cp = M.ep_degree(mesh_shape), M.cp_degree(mesh_shape)
+    if ep > 1:
+        if cfg.moe is None:
+            raise ValueError(
+                f"expert-parallel mesh axis (expert={ep}) on dense arch "
+                f"{cfg.name!r}: no MoE layers to shard — drop the expert "
+                f"axis or pick an MoE architecture")
+        if ep > cfg.moe.n_experts:
+            raise ValueError(
+                f"expert={ep} exceeds {cfg.name!r}'s "
+                f"{cfg.moe.n_experts} routed experts; cap the axis with "
+                f"--max-expert {cfg.moe.n_experts} or shrink the mesh")
+        if cfg.moe.n_experts % ep:
+            raise ValueError(
+                f"expert={ep} does not divide {cfg.name!r}'s "
+                f"{cfg.moe.n_experts} routed experts: the EP all_to_all "
+                f"needs equal per-shard expert groups (a non-divisible "
+                f"axis would be silently inert in the memory model and "
+                f"unrunnable by the shard_map runtime)")
+    if cp > 1:
+        if kind == "decode":
+            raise ValueError(
+                f"context-parallel mesh axis (context={cp}) is invalid "
+                f"for decode: a token-at-a-time step has no sequence dim "
+                f"to ring over (decode KV caches shard via cache_seq "
+                f"instead)")
+        if seq_len is not None and seq_len % cp:
+            raise ValueError(
+                f"context={cp} does not divide seq_len {seq_len}: ring "
+                f"attention needs equal per-shard sequence blocks — use "
+                f"a divisible seq_len or a smaller context axis")
+
+
 def make_context(cfg, mesh_shape: dict, *, kind: str, global_batch: int,
                  seq_len: int, backend: str = "tpu", grad_accum: int = 1,
                  remat: Optional[str] = None,
@@ -96,12 +151,15 @@ def make_context(cfg, mesh_shape: dict, *, kind: str, global_batch: int,
     sweep engine and ``check`` share it, so their predictions can never
     diverge on context construction.  The pipeline degree comes from the
     mesh's ``pipe`` axis; ``microbatches``/``schedule`` set how the batch
-    fills that pipeline (inert when the mesh has no pipe axis)."""
+    fills that pipeline (inert when the mesh has no pipe axis); the
+    `expert`/`context` axes are validated against the arch and step kind
+    (``check_parallel``)."""
     from repro.core.stages import SCHEDULES
     from repro.launch import mesh as M
     if schedule not in SCHEDULES:
         raise ValueError(
             f"unknown schedule {schedule!r}; known: {SCHEDULES}")
+    check_parallel(cfg, mesh_shape, kind, seq_len)
     opt = optimizer or cfg.optimizer
     return F.PredictContext(
         mesh_shape=mesh_shape, rules=M.arch_rules(cfg, kind),
@@ -206,26 +264,64 @@ def plan_min_chips(arch: str, shape_name, chips=(4, 8, 16, 32, 64),
                    chip: str = "v5e", policy: TrainPolicy = FULL_TRAIN,
                    backend: str = "tpu", headroom: float = HEADROOM,
                    allow_pp: bool = True, max_pp: int = 8,
+                   allow_ep: bool = False, max_ep: int = 8,
+                   allow_cp: bool = False, max_cp: int = 8,
                    microbatches=(1, 4, 8), schedules=("1f1b", "gpipe"),
                    profile=None, engine=None):
     """Smallest chip count that fits the shape, pipeline parallelism
-    allowed: sweeps every (data, model[, pipe]) factorization of each
-    candidate chip count x microbatch count x schedule and returns the
-    Pareto-min :class:`~repro.core.sweep.SweepResult` (None if nothing
-    fits).  ``allow_pp=False`` restricts to the 2-axis plans, so
+    allowed: sweeps every (data, model[, expert][, context][, pipe])
+    factorization of each candidate chip count x microbatch count x
+    schedule and returns the Pareto-min
+    :class:`~repro.core.sweep.SweepResult` (None if nothing fits).
+    ``allow_pp=False`` restricts to the 2-axis plans, so
     ``plan_min_chips(...) vs plan_min_chips(..., allow_pp=False)``
-    quantifies what the pipe axis buys."""
+    quantifies what the pipe axis buys; ``allow_ep=True`` and
+    ``allow_cp=True`` add the expert and context axes the same way.
+
+    This is a SEARCH, so unlike an explicit ``planner.check`` mesh the
+    enumerated factorizations that :func:`check_parallel` would reject
+    (an expert degree beyond the arch's routed experts — or any expert
+    degree > 1 on a dense arch — and context degrees that don't divide
+    the shape's seq_len or that land on a decode shape) are simply
+    FILTERED out of the candidate set rather than aborting the whole
+    search; the remaining legal plans are swept and the Pareto-min
+    returned (None when nothing fits or nothing is legal)."""
     from repro.core import sweep as SW
+    from repro.configs import get_config
     shape = _resolve_shape(shape_name)
-    axes = ("data", "model", "pipe") if allow_pp else ("data", "model")
+    axes: tuple = ("data", "model")
+    max_axis: dict = {}
+    if allow_ep:
+        axes += ("expert",)
+        max_axis["expert"] = max_ep
+    if allow_cp:
+        axes += ("context",)
+        max_axis["context"] = max_cp
+    if allow_pp:
+        axes += ("pipe",)
+        max_axis["pipe"] = max_pp
     grid = SW.SweepGrid(
         arch=arch, chips=tuple(chips), mesh_axes=axes,
-        max_axis={"pipe": max_pp} if allow_pp else None, chip=chip,
+        max_axis=max_axis or None, chip=chip,
         microbatches=tuple(microbatches) if allow_pp else (1,),
         schedules=tuple(schedules) if allow_pp else ("1f1b",),
         global_batches=(shape.global_batch,), seq_lens=(shape.seq_len,),
         kind=shape.kind, policy=policy, backend=backend,
         headroom=headroom, profile=profile)
+    if allow_ep or allow_cp:
+        cfg = get_config(SW.normalize_arch(arch))
+
+        def legal(mesh: dict) -> bool:
+            try:
+                check_parallel(cfg, mesh, shape.kind, shape.seq_len)
+                return True
+            except ValueError:
+                return False
+
+        meshes = [m for m in grid.meshes() if legal(m)]
+        if not meshes:
+            return None
+        grid.mesh_shapes = meshes
     res = (engine or SW.SweepEngine()).sweep(grid)
     return res.min_chips()
 

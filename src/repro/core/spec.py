@@ -34,6 +34,7 @@ AXIS_HEADS = "heads"          # merged attention heads*head_dim output dim
 AXIS_KV_HEADS = "kv_heads"    # merged kv heads*head_dim output dim
 AXIS_FFN = "ffn"              # feed-forward hidden dimension
 AXIS_EXPERTS = "experts"      # routed-expert dimension
+AXIS_EXPERT_BUF = "expert_buf"  # MoE dispatch/capacity buffer dims (EP-only)
 AXIS_LORA = "lora"            # MLA low-rank bottleneck dims
 AXIS_CONV = "conv"            # conv kernel dims (mamba, vit patch)
 AXIS_SSM = "ssm"              # ssm state / head dims

@@ -3,9 +3,10 @@
 The paper's estimator answers "will this config OOM?" for ONE cell;
 capacity planning (xMem-style scheduler admission, cluster sizing) needs
 that answer for 10^5-10^6 candidate configurations at once: every mesh
-factorization of a chip count (including a ``pipe`` pipeline axis) x
-optimizer x remat policy x pipeline schedule x microbatch count x
-grad-accum x global batch x sequence length x chip type.
+factorization of a chip count (including ``pipe`` pipeline, ``expert``
+expert-parallel, and ``context`` ring-attention axes) x optimizer x
+remat policy x pipeline schedule x microbatch count x grad-accum x
+global batch x sequence length x chip type.
 ``sweep(SweepGrid(...))`` evaluates such a grid through a dual-mode
 :class:`SweepEngine`:
 
@@ -21,7 +22,7 @@ grad-accum x global batch x sequence length x chip type.
 
 The two modes are byte-identical — every verdict and every peak-bytes
 value — with or without a calibration profile (asserted per-cell by
-tests/test_batch.py and on the 5,208-cell parity set + a 124k-cell grid
+tests/test_batch.py and on the 7,152-cell parity set + a 124k-cell grid
 by ``benchmarks/sweep_throughput.py --verify``).
 
 Results are wrapped in a :class:`SweepResults` container with
@@ -37,6 +38,10 @@ CLI::
     PYTHONPATH=src python -m repro.core.sweep --arch llama3_1_8b \
         --chips 64 --mesh-axes data,model,pipe --max-pipe 4 \
         --schedule 1f1b,gpipe --microbatches 1,4,8 --batch 64 --seq-len 4096
+    PYTHONPATH=src python -m repro.core.sweep --arch deepseek_v2_lite_16b \
+        --chips 64 --mesh-axes data,model,expert,context,pipe \
+        --max-expert 8 --max-context 4 --max-pipe 4 --batch 64 \
+        --seq-len 8192
 
 ``--dry-run`` prints the per-knob cardinality table + a runtime estimate
 first; ``--mode cell`` selects the reference path; an empty grid exits
@@ -160,10 +165,29 @@ class SweepGrid:
                 f"unknown schedule(s) {bad}; known: {SCHEDULES}")
         return scheds
 
+    def check_parallel(self) -> None:
+        """Validate the expert/context mesh axes against every
+        (arch, mesh, seq) combo up front, through the SAME
+        ``planner.check_parallel`` gate the per-cell path hits in
+        ``make_context`` — so both sweep modes and the CLI reject an
+        invalid grid with one clean ValueError instead of a traceback
+        (or, columnar-side, a silent misprediction)."""
+        from repro.configs import get_config
+        meshes = self.meshes()
+        if not any(m.get("expert", 1) > 1 or m.get("context", 1) > 1
+                   for m in meshes):
+            return
+        for arch in _seq(self.arch):
+            cfg = get_config(normalize_arch(arch))
+            for mesh in meshes:
+                for seq in _seq(self.seq_lens):
+                    PL.check_parallel(cfg, mesh, self.kind, int(seq))
+
     def cells(self) -> Iterator["SweepCell"]:
         """Deterministic cell enumeration (first-fit order: cheap knobs
         vary fastest)."""
         self.check_schedules()
+        self.check_parallel()
         meshes = self.meshes()
         for arch in _seq(self.arch):
             arch = normalize_arch(arch)
@@ -251,6 +275,16 @@ class SweepResult:
     def pp(self) -> int:
         from repro.launch.mesh import pp_degree
         return pp_degree(self.mesh_shape)
+
+    @property
+    def ep(self) -> int:
+        from repro.launch.mesh import ep_degree
+        return ep_degree(self.mesh_shape)
+
+    @property
+    def cp(self) -> int:
+        from repro.launch.mesh import cp_degree
+        return cp_degree(self.mesh_shape)
 
     @property
     def mesh_str(self) -> str:
@@ -726,17 +760,21 @@ def _cardinality_table(grid: SweepGrid) -> str:
     """Per-knob cardinality breakdown of a grid — what ``size()``
     multiplies — so ``--dry-run`` users see where a cell explosion comes
     from before paying for it."""
-    from repro.launch.mesh import pp_degree
+    from repro.launch.mesh import cp_degree, ep_degree, pp_degree
     meshes = grid.meshes()
     pps = sorted({pp_degree(m) for m in meshes})
+    eps = sorted({ep_degree(m) for m in meshes})
+    cps = sorted({cp_degree(m) for m in meshes})
+    degrees = [f"{k} degrees {_preview(v)}"
+               for k, v in (("pp", pps), ("ep", eps), ("cp", cps))
+               if len(v) > 1 or v != [1]]
     pairs = [(a, g) for a in _seq(grid.grad_accums)
              for g in _seq(grid.global_batches) if not g % a]
     rows = [
         ("arch", len(_seq(grid.arch)), _preview(_seq(grid.arch))),
         ("chip type", len(_seq(grid.chip)), _preview(_seq(grid.chip))),
         ("mesh", len(meshes),
-         f"pp degrees {_preview(pps)}" if len(pps) > 1 or pps != [1]
-         else "2-axis factorizations"),
+         ", ".join(degrees) if degrees else "2-axis factorizations"),
         ("optimizer", len(_seq(grid.optimizers)),
          _preview(_seq(grid.optimizers))),
         ("remat", len(_seq(grid.remats)), _preview(_seq(grid.remats))),
@@ -798,6 +836,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                    help="cap the model (TP) axis size")
     p.add_argument("--max-pipe", type=int, default=None,
                    help="cap the pipe (PP) axis size")
+    p.add_argument("--max-expert", type=int, default=None,
+                   help="cap the expert (EP) axis size (MoE arches only)")
+    p.add_argument("--max-context", type=int, default=None,
+                   help="cap the context (CP / ring-attention) axis size "
+                        "(train/prefill kinds only)")
     p.add_argument("--schedule", default="1f1b",
                    help="comma list of pipeline schedules (1f1b,gpipe)")
     p.add_argument("--microbatches", type=_int_list, default=(1,),
@@ -868,6 +911,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         max_axis["model"] = args.max_model
     if args.max_pipe:
         max_axis["pipe"] = args.max_pipe
+    if args.max_expert:
+        max_axis["expert"] = args.max_expert
+    if args.max_context:
+        max_axis["context"] = args.max_context
     grid = SweepGrid(
         arch=arch,
         chips=args.chips,
@@ -883,6 +930,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         seq_lens=args.seq_len, kind=args.kind,
         policy=POLICIES[args.policy], backend=args.backend,
         headroom=args.headroom, profile=profile)
+    try:
+        # reject ep-on-dense / ep > n_experts / cp-on-decode /
+        # non-divisible cp with a clean argparse error, before any
+        # evaluation (and before --dry-run estimates a doomed grid)
+        grid.check_parallel()
+    except ValueError as e:
+        p.error(str(e))
 
     if args.dry_run:
         n = grid.size()

@@ -19,8 +19,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.mesh_ctx import (DEFAULT_RULES, PIPE_AXIS, assign_axes,
-                            mesh_axis_sizes, resolve_pspec)
+from repro.mesh_ctx import (CONTEXT_AXIS, DEFAULT_RULES, EXPERT_AXIS,
+                            PIPE_AXIS, assign_axes, mesh_axis_sizes,
+                            resolve_pspec)
 from repro.models.registry import Model
 from repro.train.optimizer import OptimizerConfig, opt_state_specs
 
@@ -85,6 +86,12 @@ def enumerate_meshes(n_chips: int,
     collectives-wise).  Including :data:`~repro.mesh_ctx.PIPE_AXIS` in
     ``axes`` enumerates pipeline-parallel plans: chips along ``pipe`` hold
     disjoint layer stages (core.stages) and never shard tensors.
+    Including :data:`~repro.mesh_ctx.EXPERT_AXIS` /
+    :data:`~repro.mesh_ctx.CONTEXT_AXIS` enumerates expert-parallel and
+    context-parallel (ring-attention) plans, capped by
+    ``{"expert": N}`` / ``{"context": N}`` (CLI ``--max-expert`` /
+    ``--max-context``); the planner rejects plans that are invalid for
+    the architecture or step kind (``planner.check_parallel``).
     """
     seen: set[tuple[int, ...]] = set()
     out: list[dict] = []
@@ -113,6 +120,16 @@ def pp_degree(mesh_shape: dict) -> int:
     return int(mesh_shape.get(PIPE_AXIS, 1))
 
 
+def ep_degree(mesh_shape: dict) -> int:
+    """Expert-parallel degree of a mesh shape (1 without an expert axis)."""
+    return int(mesh_shape.get(EXPERT_AXIS, 1))
+
+
+def cp_degree(mesh_shape: dict) -> int:
+    """Context-parallel degree of a mesh shape (1 without a context axis)."""
+    return int(mesh_shape.get(CONTEXT_AXIS, 1))
+
+
 def make_smoke_mesh(data: int = 1, model: int = 1) -> Mesh:
     """Tiny mesh for CPU tests (exercises the same code paths)."""
     return jax.make_mesh((data, model), ("data", "model"),
@@ -134,10 +151,21 @@ def arch_rules(cfg, kind: str = "train") -> dict:
         # global; GSPMD inserts the gather/scatter collectives.  Without
         # this, 30B+ archs cannot fit 16 GiB/chip at train_4k.
         rules["seq"] = ("model",)
+    if kind in ("train", "prefill"):
+        # Context parallelism (ring attention): the seq dim of every
+        # activation shards over `context` FIRST, SP's `model` split on
+        # what stays divisible.  Decode is token-at-a-time — no seq dim
+        # to split — so cp is rejected there (planner.check_parallel)
+        # and the decode `cache_seq` rule below never names `context`.
+        rules["seq"] = (CONTEXT_AXIS,) + rules["seq"]
     if kind == "prefill":
         # prefill caches derive from the seq-sharded residual stream, so
-        # XLA lays them out seq-sharded over `model` (matches SP)
-        rules["cache_seq"] = ("model",)
+        # XLA lays them out seq-sharded over `model` (matches SP) — and,
+        # under ring attention, over `context` first: each cp rank
+        # computes and holds only its sequence block's KV.  (Decode
+        # below is different: cp is rejected there, and its caches
+        # shard over `model` only.)
+        rules["cache_seq"] = (CONTEXT_AXIS, "model")
     elif kind == "decode":
         # Decode caches shard their sequence dim over `model`: none of the
         # zoo's GQA head counts fill a 16-way axis (8, 5, 16...), so

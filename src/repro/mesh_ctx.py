@@ -30,10 +30,26 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 # Its degree reaches the predictor as PredictContext.pp.
 PIPE_AXIS = "pipe"
 
+# The expert-parallel physical axis: chips along it hold disjoint routed
+# EXPERTS.  Unlike `pipe` it IS a tensor-sharding axis, but only the MoE
+# logical dims name it (`experts` weight stacks, `expert_buf` dispatch
+# buffers) — dense layers carry neither, so `expert` can never shard a
+# dense tensor.  Its degree reaches the predictor as PredictContext.ep.
+EXPERT_AXIS = "expert"
+
+# The context-parallel (ring-attention) physical axis: shards the `seq`
+# dim of train/prefill activations (launch.mesh.arch_rules prepends it to
+# the `seq` rule), with the per-hop ring KV send/recv transient modelled
+# in core.factors.ring_kv_spec.  Decode KV caches stay on `cache_seq`
+# (never mapped to this axis).  Degree reaches PredictContext.cp.
+CONTEXT_AXIS = "context"
+
 # logical axis -> tuple of physical mesh axes (applied together)
 DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "batch": ("pod", "data"),
     "seq": (),                  # sequence-parallel policies set ("model",) etc.
+                                # and launch.mesh.arch_rules prepends
+                                # CONTEXT_AXIS for train/prefill
     "vocab": ("model",),
     "embed": (),                # residual dim replicated by default
     "embed_cols": ("model",),   # untied embedding tables shard columns:
@@ -42,7 +58,10 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "heads": ("model",),
     "kv_heads": ("model",),
     "ffn": ("model",),
-    "experts": ("model",),
+    "experts": (EXPERT_AXIS, "model"),  # routed-expert stacks: EP first,
+                                        # TP on what stays divisible
+    "expert_buf": (EXPERT_AXIS,),       # MoE dispatch/capacity buffers
+                                        # shard over EP only
     "lora": ("model",),
     "conv": (),
     "ssm": ("model",),

@@ -12,6 +12,13 @@ TPU-native ``shard_map``):
 
 When no mesh is active (CPU smoke tests) a mathematically identical dense
 fallback runs every expert on every token with combine weights.
+
+For the MEMORY MODEL the spec below carries the expert-parallel metadata:
+the routed weight stacks' leading ``E`` dim is the ``experts`` logical
+axis (rule: ``mesh_ctx.EXPERT_AXIS`` first, then TP on what stays
+divisible) and the dispatch/capacity buffers carry the EP-only
+``expert_buf`` axis — so a mesh with an ``expert`` axis divides exactly
+the MoE weights and dispatch buffers, never a dense layer's tensors.
 """
 
 from __future__ import annotations
@@ -25,7 +32,8 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.spec import (ActTerm, LayerSpec, ParamSpec,
-                             AXIS_EMBED, AXIS_EXPERTS, AXIS_FFN)
+                             AXIS_EMBED, AXIS_EXPERTS, AXIS_EXPERT_BUF,
+                             AXIS_FFN)
 from repro.mesh_ctx import current_mesh, mesh_axis_sizes
 
 
@@ -55,13 +63,15 @@ def moe_spec(name: str, d_model: int, moe, dtype: str = "bfloat16") -> LayerSpec
                     ("batch", "seq", AXIS_EMBED)),
             ActTerm(f"{name}.router", ("B", "S", E), "float32",
                     ("batch", "seq", None)),
-            # dispatched expert buffers (top_k * capacity_factor copies)
+            # dispatched expert buffers (top_k * capacity_factor copies);
+            # the capacity dim carries the EP-only `expert_buf` axis: each
+            # expert shard holds its own experts' fixed-capacity blocks
             ActTerm(f"{name}.dispatch",
                     ("B", "S", int(d_model * moe.top_k * cap)), dtype,
-                    ("batch", "seq", AXIS_EMBED)),
+                    ("batch", "seq", AXIS_EXPERT_BUF)),
             ActTerm(f"{name}.h",
                     ("B", "S", int(3 * F * moe.top_k * cap)), dtype,
-                    ("batch", "seq", None)),
+                    ("batch", "seq", AXIS_EXPERT_BUF)),
         ] + ([ActTerm(f"{name}.shared_h",
                       ("B", "S", 3 * F * moe.n_shared_experts), dtype,
                       ("batch", "seq", AXIS_FFN))]

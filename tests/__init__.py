@@ -1,0 +1,2 @@
+# Package marker so `python -m tests.regen_golden` works from the repo
+# root; pytest still discovers test modules normally (rootdir on sys.path).

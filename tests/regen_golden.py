@@ -1,0 +1,119 @@
+"""Golden-snapshot generator: the frozen per-component byte breakdown.
+
+    PYTHONPATH=src python -m tests.regen_golden          # all arches
+    PYTHONPATH=src python -m tests.regen_golden llava15_7b ...
+
+For every registered architecture x train/prefill/decode at ONE canonical
+cell (mesh ``data=2,model=2``, global batch 8, seq 1024, tpu backend,
+chip v5e) this writes ``tests/golden/<arch>.json`` holding every
+:class:`repro.core.predictor.PredictedMemory` component — raw AND under a
+fixed calibration profile — plus the per-module breakdown.
+
+``tests/test_golden.py`` replays the same cells and fails with a
+diff-style message naming the FIRST divergent component on any byte
+change, so refactors of the memory model can no longer drift bytes
+silently.  Regenerating is an explicit, reviewable act: run this module
+and commit the JSON diff.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.calibrate.profile import CalibrationProfile
+from repro.configs import ShapeConfig
+from repro.core import planner as PL
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+#: the canonical cell every snapshot is taken at
+CANON_MESH = {"data": 2, "model": 2}
+CANON_SEQ = 1024
+CANON_BATCH = 8
+CANON_CHIP = "v5e"
+CANON_BACKEND = "tpu"
+KINDS = ("train", "prefill", "decode")
+
+#: PredictedMemory fields frozen per cell, in assertion order
+COMPONENTS = ("param_bytes", "grad_bytes", "opt_bytes", "act_saved_bytes",
+              "act_transient_bytes", "loss_bytes", "input_bytes",
+              "cache_bytes", "output_copy_bytes", "calibration_bytes",
+              "peak_bytes")
+
+#: fixed non-identity profile for the calibrated leg (never fitted — its
+#: only job is to exercise the scaled path deterministically)
+GOLDEN_PROFILE = CalibrationProfile(
+    coefficients={"static": 1.0417, "act_saved": 0.9313,
+                  "act_transient": 1.1902, "overhead": 0.8641},
+    chip_constant_bytes={"v5e": 134217728, "*": 33554432})
+
+
+def snapshot(arch: str, engine=None) -> dict:
+    """The golden payload for one arch: kind -> raw/calibrated ->
+    components (+ the per-module table on the raw leg)."""
+    from repro.core import sweep as SW
+    engine = engine or SW.SweepEngine()
+    budget = int(PL.chip_hbm(CANON_CHIP) * PL.HEADROOM)
+    out: dict = {}
+    for kind in KINDS:
+        shape = ShapeConfig("golden", CANON_SEQ, CANON_BATCH, kind)
+        per: dict = {}
+        for variant, profile in (("raw", None),
+                                 ("calibrated", GOLDEN_PROFILE)):
+            rep = engine.report(arch, shape, dict(CANON_MESH),
+                                backend=CANON_BACKEND, budget_bytes=budget,
+                                chip=CANON_CHIP, profile=profile)
+            comp = {c: int(getattr(rep.prediction, c)) for c in COMPONENTS}
+            if variant == "raw":
+                comp["per_module"] = {
+                    path: {k: (int(v) if k != "trainable" else bool(v))
+                           for k, v in m.items()}
+                    for path, m in rep.prediction.per_module.items()}
+            per[variant] = comp
+        out[kind] = per
+    return out
+
+
+def golden_path(arch: str) -> str:
+    return os.path.join(GOLDEN_DIR, f"{arch}.json")
+
+
+def first_divergence(want: dict, got: dict, prefix: str = "") -> str:
+    """Human-readable path of the first differing leaf (or '' if equal);
+    walks kinds -> variants -> components in deterministic order."""
+    if want == got:
+        return ""
+    for key in list(want) + [k for k in got if k not in want]:
+        w, g = want.get(key), got.get(key)
+        here = f"{prefix}/{key}" if prefix else str(key)
+        if isinstance(w, dict) and isinstance(g, dict):
+            sub = first_divergence(w, g, here)
+            if sub:
+                return sub
+        elif w != g:
+            return (f"{here}: golden {w!r} != current {g!r}")
+    return f"{prefix}: structural difference"
+
+
+def main(argv=None) -> int:
+    import sys
+    from repro.configs import registered_archs
+    from repro.core import sweep as SW
+    arches = argv if argv else registered_archs()
+    arches = [SW.normalize_arch(a) for a in arches]
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    engine = SW.SweepEngine()
+    for arch in arches:
+        payload = snapshot(arch, engine=engine)
+        path = golden_path(arch)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {os.path.relpath(path)}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    raise SystemExit(main(sys.argv[1:] or None))

@@ -7,7 +7,10 @@ byte for byte on every field of every result row.
 
 Split out from tests/test_batch.py so the deterministic parity tests run
 even where hypothesis is not installed (same importorskip convention as
-tests/test_mesh_ctx.py).
+tests/test_mesh_ctx.py).  CI installs hypothesis via requirements-dev.txt
+and runs under the shared "ci" settings profile registered in
+tests/conftest.py (fixed seed, no deadline); strategies cover the
+expert-parallel / context-parallel mesh axes alongside pp.
 """
 
 import pytest
@@ -20,7 +23,7 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.calibrate.profile import CalibrationProfile  # noqa: E402
-from repro.configs import registered_archs  # noqa: E402
+from repro.configs import get_config, registered_archs  # noqa: E402
 from repro.core import sweep as SW  # noqa: E402
 from repro.mesh_ctx import DEFAULT_RULES, shard_factor  # noqa: E402
 
@@ -70,20 +73,72 @@ def test_property_columnar_equals_cell(arch, chips, kind, backend, accums,
     data=st.sampled_from([1, 2, 4, 8, 16]),
     model=st.sampled_from([1, 2, 4, 8, 16]),
     pod=st.sampled_from([None, 1, 2]),
+    expert=st.sampled_from([None, 1, 2, 4]),
+    context=st.sampled_from([None, 1, 2, 4]),
     extra=st.sampled_from([(), ("data",)]),
     axes_seed=st.integers(0, 2 ** 31))
 def test_property_batch_shard_factor_equals_scalar(dims, data, model, pod,
-                                                   extra, axes_seed):
+                                                   expert, context, extra,
+                                                   axes_seed):
     import random
 
     from repro.core.batch import batch_shard_factor
     rng = random.Random(axes_seed)
     pool = [None, "batch", "seq", "vocab", "heads", "kv_heads", "ffn",
-            "ssm", "layers", "cache_seq", "embed_cols", "experts"]
+            "ssm", "layers", "cache_seq", "embed_cols", "experts",
+            "expert_buf"]
     axes = tuple(rng.choice(pool) for _ in dims)
     mesh = {"data": data, "model": model}
     if pod is not None:
         mesh["pod"] = pod
-    want = shard_factor(dims, axes, mesh, dict(DEFAULT_RULES), extra)
-    got = batch_shard_factor(dims, axes, mesh, dict(DEFAULT_RULES), extra)
+    if expert is not None:
+        mesh["expert"] = expert
+    if context is not None:
+        mesh["context"] = context
+    # half the runs exercise the train/prefill rule where `seq` maps to
+    # the context axis (launch.mesh.arch_rules), half the default table
+    rules = dict(DEFAULT_RULES)
+    if rng.random() < 0.5:
+        rules["seq"] = ("context",) + tuple(rules["seq"])
+    want = shard_factor(dims, axes, mesh, dict(rules), extra)
+    got = batch_shard_factor(dims, axes, mesh, dict(rules), extra)
     assert int(got) == want
+
+
+_MOE_ARCHS = [a for a in registered_archs()
+              if get_config(a).moe is not None]
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    arch=st.sampled_from(_MOE_ARCHS),
+    kind=st.sampled_from(["train", "prefill"]),
+    ep=st.sampled_from([1, 2, 4]),
+    cp=st.sampled_from([1, 2, 4]),
+    pp=st.sampled_from([1, 2]),
+    sched=st.sampled_from(["1f1b", "gpipe"]),
+    mbs=st.lists(st.sampled_from([1, 2, 4, 8]), min_size=1, max_size=2,
+                 unique=True),
+    batches=st.lists(st.sampled_from([4, 8, 16]), min_size=1, max_size=2,
+                     unique=True),
+    seq=st.sampled_from([512, 1024, 2048]),
+    backend=st.sampled_from(["tpu", "cpu"]),
+    profile=_profiles)
+def test_property_columnar_equals_cell_epcp(arch, kind, ep, cp, pp, sched,
+                                            mbs, batches, seq, backend,
+                                            profile):
+    """ep x cp x pp meshes (heterogeneous with a plain 2-axis mesh in the
+    same grid): columnar must equal the per-cell reference on every row."""
+    meshes = [{"data": 2, "model": 1, "expert": ep, "context": cp,
+               "pipe": pp}, {"data": 2, "model": 2}]
+    grid = SW.SweepGrid(arch=arch, mesh_shapes=meshes, kind=kind,
+                        schedules=(sched,), microbatches=tuple(mbs),
+                        global_batches=tuple(batches), seq_lens=(seq,),
+                        backend=backend, profile=profile)
+    cell = SW.SweepEngine().sweep(grid, mode="cell")
+    col = SW.SweepEngine().sweep(grid, mode="columnar")
+    assert len(cell) == len(col) > 0
+    if col.columns is None:
+        pytest.fail("columnar mode did not engage")
+    for a, b in zip(cell.results, col.results):
+        assert a == b

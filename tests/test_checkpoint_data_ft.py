@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import tiny_batch
+from tests.conftest import tiny_batch
 from repro.checkpoint import (Checkpointer, latest_step, load_checkpoint,
                               save_checkpoint)
 from repro.configs import ShapeConfig, get_config

@@ -44,26 +44,24 @@ def nbytes_tree(tree) -> int:
     ("zamba2-2.7b", 2.7e9, 0.25),
     ("seamless-m4t-large-v2", 2.3e9, 0.35),
 ])
-def test_param_counts_match_published_size(arch, expect_params, tol):
+def test_param_counts_match_published_size(arch, expect_params, tol,
+                                            zoo_rows):
     """The spec tree reproduces each model's published parameter count."""
-    model = build_model(get_config(arch))
-    rows = parse_model(model.spec, FULL_TRAIN)
+    _, _, rows = zoo_rows(arch)
     n = total_params(rows)
     assert abs(n - expect_params) / expect_params < tol, \
         f"{arch}: {n/1e9:.2f}B params vs expected {expect_params/1e9:.2f}B"
 
 
-def test_parser_param_count_matches_allocation():
+def test_parser_param_count_matches_allocation(reduced_zoo):
     """Parsed counts == actually allocated leaves (exactness)."""
-    model = build_model(get_config("smollm-360m").reduced())
+    _, model, params = reduced_zoo("smollm-360m")
     rows = parse_model(model.spec, FULL_TRAIN)
-    params = model.init(jax.random.PRNGKey(0))
     assert total_params(rows) == PM.count_params(params)
 
 
-def test_policy_freezes_modules():
-    cfg = get_config("llava-next-mistral-7b").reduced()
-    model = build_model(cfg)
+def test_policy_freezes_modules(reduced_zoo):
+    _, model, _ = reduced_zoo("llava-next-mistral-7b")
     rows = parse_model(model.spec, LLAVA_STAGE1)
     frozen = [r for r in rows if not r.trainable]
     trainable = [r for r in rows if r.trainable]
@@ -75,9 +73,8 @@ def test_policy_freezes_modules():
     assert not any("vision" in p for p in t2)
 
 
-def test_active_params_moe_less_than_total():
-    model = build_model(get_config("deepseek-v2-lite-16b"))
-    rows = parse_model(model.spec, FULL_TRAIN)
+def test_active_params_moe_less_than_total(zoo_rows):
+    _, _, rows = zoo_rows("deepseek-v2-lite-16b")
     assert active_params(rows) < 0.35 * total_params(rows)
 
 
@@ -88,33 +85,31 @@ def test_active_params_moe_less_than_total():
 
 @pytest.mark.parametrize("arch", ["smollm-360m", "deepseek-v2-lite-16b",
                                   "mamba2-1.3b", "seamless-m4t-large-v2"])
-def test_param_factor_exact_unsharded(arch):
+def test_param_factor_exact_unsharded(arch, reduced_zoo):
     """Sum of param factors on a 1-device mesh == allocated param bytes."""
-    model = build_model(get_config(arch).reduced())
+    _, model, params = reduced_zoo(arch)
     rows = parse_model(model.spec, FULL_TRAIN)
     ctx = F.PredictContext(mesh_shape={}, global_batch=2, seq_len=32)
     predicted = sum(F.param_factor(r, ctx) for r in rows)
-    params = model.init(jax.random.PRNGKey(0))
     assert predicted == nbytes_tree(params)
 
 
 @pytest.mark.parametrize("opt", ["adamw", "adamw8bit", "adafactor"])
-def test_opt_factor_exact(opt):
+def test_opt_factor_exact(opt, reduced_zoo):
     """Optimizer-state factor == bytes of the real optimizer state."""
-    model = build_model(get_config("smollm-360m").reduced())
+    _, model, params = reduced_zoo("smollm-360m")
     rows = parse_model(model.spec, FULL_TRAIN)
     cfg = OptimizerConfig(name=opt, master_fp32=(opt != "adafactor"))
     ctx = F.PredictContext(mesh_shape={}, optimizer=opt,
                            master_fp32=(opt != "adafactor"),
                            global_batch=2, seq_len=32)
     predicted = sum(F.opt_factor(r, ctx) for r in rows)
-    params = model.init(jax.random.PRNGKey(0))
     state = init_opt_state(params, cfg)
     assert predicted == nbytes_tree(state)
 
 
-def test_grad_factor_zero_for_frozen():
-    model = build_model(get_config("llava-next-mistral-7b").reduced())
+def test_grad_factor_zero_for_frozen(reduced_zoo):
+    _, model, _ = reduced_zoo("llava-next-mistral-7b")
     rows = parse_model(model.spec, LLAVA_STAGE1)
     ctx = F.PredictContext(mesh_shape={}, global_batch=2, seq_len=32)
     for r in rows:
@@ -127,8 +122,8 @@ def test_grad_factor_zero_for_frozen():
             assert g > 0 and o > 0
 
 
-def test_grad_factor_zero_for_serving():
-    model = build_model(get_config("smollm-360m").reduced())
+def test_grad_factor_zero_for_serving(reduced_zoo):
+    _, model, _ = reduced_zoo("smollm-360m")
     rows = parse_model(model.spec, FULL_TRAIN)
     ctx = F.PredictContext(mesh_shape={}, kind="decode", global_batch=2,
                            seq_len=32)
@@ -149,9 +144,8 @@ def test_sharding_divides_factors():
     assert p1 / 16 <= p16 <= p1 / 2
 
 
-def test_zero_shards_optimizer_over_data():
-    model = build_model(get_config("llama3.2-3b"))
-    rows = parse_model(model.spec, FULL_TRAIN)
+def test_zero_shards_optimizer_over_data(zoo_rows):
+    _, _, rows = zoo_rows("llama3.2-3b")
     base = F.PredictContext(mesh_shape={"data": 8}, zero=False, fsdp=False,
                             global_batch=8, seq_len=128)
     zero = F.PredictContext(mesh_shape={"data": 8}, zero=True, fsdp=False,
@@ -164,9 +158,8 @@ def test_zero_shards_optimizer_over_data():
     assert p_zero == p_base             # but params stay replicated (ZeRO-2)
 
 
-def test_remat_reduces_saved_activations():
-    model = build_model(get_config("llama3.2-3b"))
-    rows = parse_model(model.spec, FULL_TRAIN)
+def test_remat_reduces_saved_activations(zoo_rows):
+    _, _, rows = zoo_rows("llama3.2-3b")
     none = F.PredictContext(mesh_shape={}, remat="none", global_batch=4,
                             seq_len=256)
     block = F.PredictContext(mesh_shape={}, remat="block", global_batch=4,
@@ -181,8 +174,8 @@ def test_remat_reduces_saved_activations():
 # ---------------------------------------------------------------------------
 
 
-def test_predict_peak_monotone_in_batch():
-    model = build_model(get_config("smollm-360m"))
+def test_predict_peak_monotone_in_batch(zoo_rows):
+    _, model, _ = zoo_rows("smollm-360m")
     peaks = []
     for b in (8, 16, 32):
         ctx = F.PredictContext(mesh_shape={}, global_batch=b, seq_len=512)
@@ -190,10 +183,9 @@ def test_predict_peak_monotone_in_batch():
     assert peaks[0] < peaks[1] < peaks[2]
 
 
-def test_predict_reports_per_module():
+def test_predict_reports_per_module(reduced_zoo):
     # llava15-7b carries the REAL (frozen) vision tower — the paper's case
-    cfg = get_config("llava15-7b").reduced()
-    model = build_model(cfg)
+    _, model, _ = reduced_zoo("llava15-7b")
     ctx = F.PredictContext(mesh_shape={}, global_batch=2, seq_len=64)
     pred = PR.predict(model, LLAVA_STAGE2, ctx)
     mods = pred.per_module
@@ -203,8 +195,8 @@ def test_predict_reports_per_module():
     assert frozen_opt == 0
 
 
-def test_cache_bytes_decode_scale_with_len():
-    model = build_model(get_config("llama3.2-3b"))
+def test_cache_bytes_decode_scale_with_len(zoo_rows):
+    _, model, _ = zoo_rows("llama3.2-3b")
     ctx1 = F.PredictContext(mesh_shape={}, kind="decode", global_batch=4,
                             seq_len=1024, max_len=1024)
     ctx2 = F.PredictContext(mesh_shape={}, kind="decode", global_batch=4,
@@ -214,9 +206,9 @@ def test_cache_bytes_decode_scale_with_len():
     assert c2 == 2 * c1 > 0
 
 
-def test_mla_cache_much_smaller_than_gqa_equivalent():
+def test_mla_cache_much_smaller_than_gqa_equivalent(zoo_rows):
     """MLA's latent cache (the paper-zoo's memory trick) is ~10x smaller."""
-    mla_model = build_model(get_config("deepseek-v2-lite-16b"))
+    _, mla_model, _ = zoo_rows("deepseek-v2-lite-16b")
     # architectural comparison -> tpu backend (no cpu-oracle fp32 twins)
     ctx = F.PredictContext(mesh_shape={}, kind="decode", global_batch=4,
                            seq_len=4096, max_len=4096, backend="tpu")

@@ -1,0 +1,297 @@
+"""Expert-parallel (ep) + context-parallel (cp) memory model (ISSUE-5).
+
+Contracts under test:
+
+* **Inertness** — a mesh with ``expert=1``/``context=1`` (or without the
+  axes) is byte-identical to prior main on every registered arch x
+  train/prefill/decode (the golden suite freezes the absolute bytes;
+  this file asserts the trivial-axis equivalence per arch).
+* **Semantics** — ``expert`` divides exactly the MoE weight stacks and
+  dispatch buffers (never dense layers); ``context`` divides the seq dim
+  of train/prefill activations and adds the ring-attention per-hop KV
+  send/recv transient; decode KV caches stay on ``cache_seq``.
+* **Parity** — scalar (un-memoized ``planner.check``), memoized cell
+  mode, and the columnar engine agree byte-for-byte on ep x cp x pp
+  grids, raw and calibrated.
+"""
+
+import pytest
+
+from repro.calibrate.profile import CalibrationProfile
+from repro.configs import ShapeConfig, get_config, registered_archs
+from repro.core import factors as F
+from repro.core import planner
+from repro.core import sweep as SW
+from repro.core.parser import parse_model
+from repro.core.spec import FULL_TRAIN
+from repro.mesh_ctx import DEFAULT_RULES, shard_factor
+from repro.models import build_model
+
+ARCHS = registered_archs()
+MOE_ARCHS = [a for a in ARCHS if get_config(a).moe is not None]
+
+PROFILE = CalibrationProfile(
+    coefficients={"static": 1.0271, "act_saved": 0.9582,
+                  "act_transient": 1.1514, "overhead": 0.8899},
+    chip_constant_bytes={"v5e": 98765432, "*": 11111111})
+
+#: ep x cp x pp crossed, as the acceptance grid demands
+EPCP_PP_MESHES = [
+    {"data": 2, "model": 1, "expert": e, "context": c, "pipe": p}
+    for e in (1, 2, 4) for c in (1, 2, 4) for p in (1, 2, 4)]
+
+
+# ---------------------------------------------------------------------------
+# inertness: trivial axes reproduce prior main on every arch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_trivial_ep_cp_axes_byte_identical_per_arch(arch, sweep_engine):
+    """expert=1 x context=1 x pipe=1 == the axis-free mesh, for every
+    component of every kind (with the golden suite pinning the axis-free
+    bytes to prior main, this closes the ep=1/cp=1 no-drift argument)."""
+    budget = int(planner.chip_hbm("v5e") * planner.HEADROOM)
+    for kind in ("train", "prefill", "decode"):
+        shape = ShapeConfig("cell", 1024, 8, kind)
+        base = sweep_engine.report(arch, shape, {"data": 2, "model": 2},
+                                   backend="tpu", budget_bytes=budget)
+        triv = sweep_engine.report(
+            arch, shape,
+            {"data": 2, "model": 2, "expert": 1, "context": 1, "pipe": 1},
+            backend="tpu", budget_bytes=budget)
+        assert triv.peak_bytes == base.peak_bytes, (arch, kind)
+        for f in ("param_bytes", "grad_bytes", "opt_bytes",
+                  "act_saved_bytes", "act_transient_bytes", "loss_bytes",
+                  "input_bytes", "cache_bytes", "output_copy_bytes"):
+            assert getattr(triv.prediction, f) \
+                == getattr(base.prediction, f), (arch, kind, f)
+
+
+# ---------------------------------------------------------------------------
+# semantics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", MOE_ARCHS)
+def test_ep_divides_only_moe_terms(arch):
+    """The expert axis shrinks MoE params (E-dim weight stacks) and the
+    dispatch-buffer activations; every dense module's bytes are
+    untouched."""
+    shape = ShapeConfig("cell", 1024, 8, "train")
+    base = planner.check(arch, shape, {"data": 2, "model": 1})
+    ep = planner.check(arch, shape, {"data": 2, "model": 1, "expert": 4})
+    assert ep.prediction.param_bytes < base.prediction.param_bytes
+    shrunk = []
+    for path, m in base.prediction.per_module.items():
+        e = ep.prediction.per_module[path]
+        rows = (m["param"], m["grad"], m["opt"], m["act"])
+        erows = (e["param"], e["grad"], e["opt"], e["act"])
+        if "blocks" in path:            # the MoE stacks live here
+            shrunk.append(erows < rows)
+        else:                           # embed / head / norms: untouched
+            assert erows == rows, path
+    assert any(shrunk)
+
+
+def test_ep_shard_factor_on_expert_dims_only():
+    """Rule-table check: `expert` divides `experts`/`expert_buf` dims
+    and nothing else (heads, ffn, vocab, batch stay put)."""
+    mesh = {"data": 2, "model": 2, "expert": 4}
+    rules = dict(DEFAULT_RULES)
+    # experts rule is (expert, model): E=64 takes expert x4, then model
+    # x2 on what stays divisible -> 8-way; expert_buf is EP-only -> 4
+    assert shard_factor((64, 2048, 1408), ("experts", "embed", None),
+                        mesh, rules) == 8
+    assert shard_factor((64,), ("experts",), mesh, rules) == 8
+    assert shard_factor((15360,), ("expert_buf",), mesh, rules) == 4
+    for ax in ("heads", "ffn", "vocab", "batch"):
+        with_ep = shard_factor((64, 4096), (ax, None), mesh, rules)
+        without = shard_factor((64, 4096), (ax, None),
+                               {"data": 2, "model": 2}, rules)
+        assert with_ep == without, ax
+
+
+def test_cp_divides_seq_activations_and_adds_ring_transient():
+    shape = ShapeConfig("cell", 2048, 8, "train")
+    base = planner.check("llama3.2-3b", shape, {"data": 2, "model": 1})
+    cp = planner.check("llama3.2-3b", shape,
+                       {"data": 2, "model": 1, "context": 4})
+    # saved seq activations divide by cp
+    assert cp.prediction.act_saved_bytes * 4 \
+        == base.prediction.act_saved_bytes
+    # the ring KV send/recv buffers exist only under cp
+    cfg = get_config("llama3.2-3b")
+    rows = parse_model(build_model(cfg).spec, FULL_TRAIN)
+    attn = next(r for r in rows if r.layer.kind == "attention")
+    spec = F.ring_kv_spec(attn)
+    assert spec is not None and spec.nbytes == 2 and spec.mult == 4
+    ctx = planner.make_context(cfg, {"data": 2, "model": 1, "context": 4},
+                               kind="train", global_batch=8, seq_len=2048)
+    assert F._ring_bytes(attn, ctx) > 0
+    ctx1 = planner.make_context(cfg, {"data": 2, "model": 1},
+                                kind="train", global_batch=8, seq_len=2048)
+    assert F._ring_bytes(attn, ctx1) == 0
+
+
+def test_cp_shards_prefill_cache_but_not_decode():
+    """Under ring-attention prefill each cp rank holds only its sequence
+    block's KV, so the prefill `cache_seq` rule names `context` (ahead
+    of `model`) and prefill cache bytes divide by cp; decode never does
+    (cp is rejected there, and its `cache_seq` stays model-only)."""
+    from repro.launch.mesh import arch_rules
+    cfg = get_config("llama3.2-3b")
+    assert "context" in arch_rules(cfg, "train")["seq"]
+    assert "context" in arch_rules(cfg, "prefill")["seq"]
+    assert arch_rules(cfg, "prefill")["cache_seq"][0] == "context"
+    assert "context" not in arch_rules(cfg, "decode").get("cache_seq", ())
+    assert "context" not in arch_rules(cfg, "decode").get("seq", ())
+    shape = ShapeConfig("cell", 2048, 8, "prefill")
+    base = planner.check("llama3.1-8b", shape, {"data": 1, "model": 1})
+    cp4 = planner.check("llama3.1-8b", shape,
+                        {"data": 1, "model": 1, "context": 4})
+    assert cp4.prediction.cache_bytes * 4 == base.prediction.cache_bytes
+
+
+def test_plan_min_chips_filters_illegal_enumerations():
+    """plan_min_chips is a search: enumerated meshes check_parallel
+    would reject are filtered, not fatal — non-divisible cp degrees
+    drop out, a dense arch with allow_ep keeps its expert=1 slice."""
+    shape = ShapeConfig("cell", 1002, 8, "train")      # 1002 % 4 != 0
+    r = planner.plan_min_chips("deepseek-v2-lite-16b", shape,
+                               chips=(32, 64), allow_cp=True, max_cp=4)
+    assert r is not None and r.cp in (1, 2)
+    r2 = planner.plan_min_chips(
+        "smollm-360m", ShapeConfig("cell", 1024, 8, "train"),
+        chips=(8,), allow_ep=True)
+    assert r2 is not None and r2.ep == 1
+    # decode + allow_cp: every cp>1 mesh filtered, cp=1 slice searched
+    r3 = planner.plan_min_chips(
+        "smollm-360m", ShapeConfig("cell", 512, 4, "decode"),
+        chips=(8,), allow_cp=True, allow_pp=False)
+    assert r3 is None or r3.cp == 1
+
+
+def test_ring_spec_shapes_gqa_vs_mla():
+    gqa_rows = parse_model(build_model(get_config("llama3.1-8b")).spec,
+                           FULL_TRAIN)
+    mla_rows = parse_model(
+        build_model(get_config("deepseek-v2-lite-16b")).spec, FULL_TRAIN)
+    gqa = next(r for r in gqa_rows if r.layer.kind == "attention")
+    mla = next(r for r in mla_rows if r.layer.kind == "attention"
+               and r.layer.meta.get("attn_kind") == "mla")
+    sg = F.ring_kv_spec(gqa)
+    assert sg.mult == 4                      # (k + v) x (send + recv)
+    sm = F.ring_kv_spec(mla)
+    assert sm.mult == 2                      # one latent x (send + recv)
+    mcfg = get_config("deepseek-v2-lite-16b").mla
+    assert mcfg.kv_lora_rank + mcfg.qk_rope_head_dim in sm.dims
+    # non-attention rows have no ring
+    ssm_rows = parse_model(build_model(get_config("mamba2-1.3b")).spec,
+                           FULL_TRAIN)
+    assert all(F.ring_kv_spec(r) is None for r in ssm_rows
+               if r.layer.kind != "attention")
+
+
+def test_predict_context_ep_cp_properties():
+    """ep/cp derive from the mesh (unlike pp, which make_context sets
+    from the pipe axis explicitly)."""
+    ctx = F.PredictContext(mesh_shape={"data": 2, "expert": 4,
+                                       "context": 2})
+    assert (ctx.ep, ctx.cp) == (4, 2)
+    assert F.PredictContext(mesh_shape={}).ep == 1
+    assert F.PredictContext(mesh_shape={}).cp == 1
+    cfg = get_config("deepseek-v2-lite-16b")
+    mctx = planner.make_context(
+        cfg, {"data": 2, "expert": 4, "context": 2, "pipe": 2},
+        kind="train", global_batch=8, seq_len=1024)
+    assert (mctx.ep, mctx.cp, mctx.pp) == (4, 2, 2)
+
+
+# ---------------------------------------------------------------------------
+# parity: check == cell == columnar on ep x cp x pp grids
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["train", "prefill"])
+def test_columnar_matches_cell_epcp_pp_grid(kind):
+    pytest.importorskip("numpy")
+    grid = SW.SweepGrid(
+        arch="deepseek-v2-lite-16b", mesh_shapes=EPCP_PP_MESHES,
+        kind=kind, schedules=("1f1b", "gpipe"), microbatches=(1, 4),
+        grad_accums=(1, 2) if kind == "train" else (1,),
+        global_batches=(8,), seq_lens=(1024,), backend="cpu")
+    cell = SW.SweepEngine().sweep(grid, mode="cell")
+    col = SW.SweepEngine().sweep(grid, mode="columnar")
+    assert col.columns is not None
+    assert len(cell) == len(col) > 0
+    for a, b in zip(cell.results, col.results):
+        assert a == b, f"\ncell: {a!r}\ncol:  {b!r}"
+
+
+def test_columnar_matches_cell_epcp_calibrated():
+    pytest.importorskip("numpy")
+    grid = SW.SweepGrid(
+        arch="deepseek-v2-lite-16b",
+        mesh_shapes=[m for m in EPCP_PP_MESHES if m["pipe"] < 4],
+        schedules=("1f1b",), microbatches=(1, 8),
+        global_batches=(8,), seq_lens=(1024,), backend="tpu",
+        profile=PROFILE)
+    cell = SW.SweepEngine().sweep(grid, mode="cell")
+    col = SW.SweepEngine().sweep(grid, mode="columnar")
+    for a, b in zip(cell.results, col.results):
+        assert a == b
+
+
+def test_columnar_matches_cell_cp_dense_arch():
+    """cp on a dense (non-MoE) arch: legal, and still byte-par."""
+    pytest.importorskip("numpy")
+    grid = SW.SweepGrid(
+        arch="llava15-7b",
+        mesh_shapes=[{"data": 2, "context": 2},
+                     {"data": 1, "context": 4, "pipe": 2},
+                     {"model": 2, "context": 2}],
+        schedules=("1f1b",), microbatches=(1, 4),
+        global_batches=(8, 16), seq_lens=(1024,), backend="cpu")
+    cell = SW.SweepEngine().sweep(grid, mode="cell")
+    col = SW.SweepEngine().sweep(grid, mode="columnar")
+    for a, b in zip(cell.results, col.results):
+        assert a == b
+
+
+def test_cell_path_matches_unmemoized_check_epcp():
+    grid = SW.SweepGrid(
+        arch="deepseek-v2-lite-16b",
+        mesh_shapes=[{"data": 1, "model": 1, "expert": 4, "context": 2,
+                      "pipe": 2}],
+        schedules=("1f1b", "gpipe"), microbatches=(1, 4),
+        global_batches=(8,), seq_lens=(1024,), backend="cpu")
+    res = SW.SweepEngine().sweep(grid, mode="cell")
+    assert len(res) > 0
+    for r in res.results:
+        shape = ShapeConfig("cell", r.seq_len, r.global_batch, r.kind)
+        ref = planner.check(r.arch, shape, r.mesh_shape,
+                            backend=r.backend, grad_accum=r.grad_accum,
+                            remat=r.remat, optimizer=r.optimizer,
+                            chip=r.chip, microbatches=r.microbatches,
+                            schedule=r.schedule)
+        assert ref.peak_bytes == r.peak_bytes, r
+
+
+def test_sweep_result_exposes_ep_cp():
+    grid = SW.SweepGrid(
+        arch="deepseek-v2-lite-16b",
+        mesh_shapes=[{"data": 2, "expert": 2, "context": 2}],
+        global_batches=(8,), seq_lens=(1024,), backend="tpu")
+    r = SW.sweep(grid).results[0]
+    assert (r.ep, r.cp, r.pp) == (2, 2, 1)
+
+
+def test_enumerate_meshes_expert_context_axes():
+    from repro.launch.mesh import cp_degree, enumerate_meshes, ep_degree
+    meshes = enumerate_meshes(16, ("data", "expert", "context"),
+                              {"expert": 4, "context": 2})
+    assert all(m["data"] * m["expert"] * m["context"] == 16
+               for m in meshes)
+    assert {ep_degree(m) for m in meshes} == {1, 2, 4}
+    assert {cp_degree(m) for m in meshes} == {1, 2}

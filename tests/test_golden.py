@@ -1,0 +1,66 @@
+"""Golden-snapshot regression suite: every Eq.1 component byte-frozen.
+
+For each registered architecture x train/prefill/decode at the canonical
+cell (see tests/regen_golden.py), the full per-component breakdown —
+raw and under a fixed calibration profile, plus the per-module table —
+must equal the committed snapshot in tests/golden/<arch>.json exactly.
+
+On any divergence the failure names the FIRST differing component
+(e.g. ``train/calibrated/act_transient_bytes: golden 123 != current
+456``) so a refactor that drifts bytes is caught at the component, not
+just the total.  If the change is intentional, regenerate with::
+
+    PYTHONPATH=src python -m tests.regen_golden
+
+and commit the JSON diff for review.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.configs import registered_archs
+from tests.regen_golden import (GOLDEN_DIR, KINDS, first_divergence,
+                                golden_path, snapshot)
+
+REGEN_HINT = ("regenerate with `PYTHONPATH=src python -m "
+              "tests.regen_golden` and commit the diff if this byte "
+              "change is intentional")
+
+
+@pytest.mark.parametrize("arch", registered_archs())
+def test_golden_component_breakdown(arch, sweep_engine):
+    path = golden_path(arch)
+    assert os.path.exists(path), \
+        f"missing golden snapshot {path}; {REGEN_HINT}"
+    with open(path) as f:
+        want = json.load(f)
+    got = snapshot(arch, engine=sweep_engine)
+    if want != got:
+        pytest.fail(f"golden drift for {arch} at "
+                    f"{first_divergence(want, got)}; {REGEN_HINT}")
+
+
+def test_golden_covers_all_arches_and_kinds():
+    """The committed snapshot set is complete: 12 arches x 3 kinds x
+    raw+calibrated, and no stale files for unregistered arches."""
+    arches = registered_archs()
+    files = {f[:-5] for f in os.listdir(GOLDEN_DIR) if f.endswith(".json")}
+    assert files == set(arches), \
+        f"golden dir out of sync: extra {files - set(arches)}, " \
+        f"missing {set(arches) - files}; {REGEN_HINT}"
+    for arch in arches:
+        with open(golden_path(arch)) as f:
+            payload = json.load(f)
+        assert set(payload) == set(KINDS), arch
+        for kind in KINDS:
+            assert set(payload[kind]) == {"raw", "calibrated"}, (arch, kind)
+
+
+def test_first_divergence_names_component():
+    want = {"train": {"raw": {"param_bytes": 10, "opt_bytes": 4}}}
+    got = {"train": {"raw": {"param_bytes": 10, "opt_bytes": 5}}}
+    msg = first_divergence(want, got)
+    assert msg == "train/raw/opt_bytes: golden 4 != current 5"
+    assert first_divergence(want, want) == ""

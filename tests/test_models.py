@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import tiny_batch
+from tests.conftest import tiny_batch
 from repro.configs import ARCH_NAMES, ShapeConfig, get_config
 from repro.core.spec import FULL_TRAIN
 from repro.models import build_model
@@ -19,8 +19,12 @@ from repro.train import OptimizerConfig, TrainState, make_train_step
 from repro.train.optimizer import init_opt_state
 
 
-def make_state(model, policy=FULL_TRAIN, opt="adamw"):
-    params = model.init(jax.random.PRNGKey(0))
+def make_state(model, params=None, policy=FULL_TRAIN, opt="adamw"):
+    """TrainState from (optionally pre-initialized, session-cached)
+    params — the jitted steps never donate in tests, so shared params
+    are never invalidated."""
+    if params is None:
+        params = model.init(jax.random.PRNGKey(0))
     mask = PM.trainable_mask(model.spec, policy)
     trainable, _ = PM.partition_params(params, mask)
     opt_state = init_opt_state(trainable, OptimizerConfig(name=opt))
@@ -28,10 +32,9 @@ def make_state(model, policy=FULL_TRAIN, opt="adamw"):
 
 
 @pytest.mark.parametrize("arch", ARCH_NAMES)
-def test_train_step_smoke(arch):
-    cfg = get_config(arch).reduced()
-    model = build_model(cfg)
-    state = make_state(model)
+def test_train_step_smoke(arch, reduced_zoo):
+    cfg, model, params = reduced_zoo(arch)
+    state = make_state(model, params)
     shape = ShapeConfig("t", 64, 2, "train")
     batch = tiny_batch(model, shape)
     step = jax.jit(make_train_step(model, FULL_TRAIN,
@@ -49,10 +52,8 @@ def test_train_step_smoke(arch):
 
 
 @pytest.mark.parametrize("arch", ARCH_NAMES)
-def test_prefill_decode_smoke(arch):
-    cfg = get_config(arch).reduced()
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+def test_prefill_decode_smoke(arch, reduced_zoo):
+    cfg, model, params = reduced_zoo(arch)
     shape = ShapeConfig("p", 32, 2, "prefill")
     batch = tiny_batch(model, shape)
     logits, cache = jax.jit(model.prefill)(params, batch)
@@ -69,12 +70,10 @@ def test_prefill_decode_smoke(arch):
 @pytest.mark.parametrize("arch", ["smollm-360m", "qwen3-32b",
                                   "deepseek-v2-lite-16b", "mamba2-1.3b",
                                   "zamba2-2.7b"])
-def test_decode_matches_forward(arch):
+def test_decode_matches_forward(arch, reduced_zoo):
     """Teacher-forced decode over a short sequence must reproduce the
     full-context forward logits (cache correctness, incl. MLA + SSM)."""
-    cfg = get_config(arch).reduced()
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    cfg, model, params = reduced_zoo(arch)
     S = 16
     tokens = jax.random.randint(jax.random.PRNGKey(3), (1, S), 0, cfg.vocab)
 
@@ -97,12 +96,11 @@ def test_decode_matches_forward(arch):
         atol=tol, rtol=tol)
 
 
-def test_vlm_frozen_vision_stage1():
+def test_vlm_frozen_vision_stage1(reduced_zoo):
     """LLaVA stage-1: only the projector trains; vision/LM stay frozen."""
     from repro.core.spec import LLAVA_STAGE1
-    cfg = get_config("llava-next-mistral-7b").reduced()
-    model = build_model(cfg)
-    state = make_state(model, LLAVA_STAGE1)
+    cfg, model, params = reduced_zoo("llava-next-mistral-7b")
+    state = make_state(model, params, LLAVA_STAGE1)
     shape = ShapeConfig("t", 64, 2, "train")
     batch = tiny_batch(model, shape)
     step = jax.jit(make_train_step(model, LLAVA_STAGE1,
@@ -122,10 +120,9 @@ def test_vlm_frozen_vision_stage1():
             assert same, f"frozen leaf moved: {p0}"
 
 
-def test_loss_decreases_under_training():
-    cfg = get_config("smollm-360m").reduced()
-    model = build_model(cfg)
-    state = make_state(model)
+def test_loss_decreases_under_training(reduced_zoo):
+    cfg, model, params = reduced_zoo("smollm-360m")
+    state = make_state(model, params)
     shape = ShapeConfig("t", 64, 4, "train")
     batch = tiny_batch(model, shape)  # overfit one fixed batch
     step = jax.jit(make_train_step(model, FULL_TRAIN,
@@ -137,15 +134,14 @@ def test_loss_decreases_under_training():
     assert losses[-1] < losses[0] * 0.7, losses[::6]
 
 
-def test_grad_accum_equivalence():
+def test_grad_accum_equivalence(reduced_zoo):
     """grad_accum=2 must match a single full-batch step (same update)."""
-    cfg = get_config("smollm-360m").reduced()
-    model = build_model(cfg)
+    cfg, model, params = reduced_zoo("smollm-360m")
     shape = ShapeConfig("t", 32, 4, "train")
     batch = tiny_batch(model, shape)
 
-    s1 = make_state(model)
-    s2 = make_state(model)
+    s1 = make_state(model, params)
+    s2 = make_state(model, params)
     step1 = jax.jit(make_train_step(model, FULL_TRAIN,
                                     OptimizerConfig(name="adamw")))
     step2 = jax.jit(make_train_step(model, FULL_TRAIN,
@@ -163,10 +159,8 @@ def test_grad_accum_equivalence():
 
 
 @pytest.mark.parametrize("remat", ["none", "block", "dots"])
-def test_remat_policies_same_loss(remat):
-    cfg = get_config("smollm-360m").reduced()
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+def test_remat_policies_same_loss(remat, reduced_zoo):
+    cfg, model, params = reduced_zoo("smollm-360m")
     shape = ShapeConfig("t", 32, 2, "train")
     batch = tiny_batch(model, shape)
     loss, _ = jax.jit(lambda p, b: model.loss(p, b, remat=remat))(params,

@@ -25,8 +25,12 @@ ARCHS = registered_archs()
 PPS = (1, 2, 3, 4, 8)
 
 
-def rows_of(arch, policy=FULL_TRAIN):
-    return parse_model(build_model(get_config(arch)).spec, policy)
+@pytest.fixture(scope="session")
+def rows_of(zoo_rows):
+    """Session-cached parse tables (same spec trees the engine memoizes)."""
+    def get(arch, policy=FULL_TRAIN):
+        return list(zoo_rows(arch, policy)[2])
+    return get
 
 
 # ---------------------------------------------------------------------------
@@ -35,7 +39,7 @@ def rows_of(arch, policy=FULL_TRAIN):
 
 
 @pytest.mark.parametrize("arch", ARCHS)
-def test_partition_exact_cover(arch):
+def test_partition_exact_cover(arch, rows_of):
     """Summing any repeat-linear quantity over stages reproduces the
     whole model — no unit lost, none double-counted."""
     rows = rows_of(arch)
@@ -48,7 +52,7 @@ def test_partition_exact_cover(arch):
 
 
 @pytest.mark.parametrize("arch", ARCHS)
-def test_partition_contiguity(arch):
+def test_partition_contiguity(arch, rows_of):
     """Stages walk the original row order monotonically, and a split
     scan stack's chunk repeats sum to the original depth."""
     rows = rows_of(arch)
@@ -80,7 +84,7 @@ def test_partition_contiguity(arch):
 
 
 @pytest.mark.parametrize("arch", ARCHS)
-def test_partition_balance_bound(arch):
+def test_partition_balance_bound(arch, rows_of):
     """DP optimum never exceeds the greedy guarantee:
     max(front, tail) + ceil(middle_total/pp) + max_unit."""
     rows = rows_of(arch)
@@ -105,7 +109,7 @@ def test_partition_balance_bound(arch):
         assert max(plan.weights) <= bound, (arch, pp)
 
 
-def test_partition_pins_embedding_and_head():
+def test_partition_pins_embedding_and_head(rows_of):
     rows = rows_of("llama3.1-8b")
     plan = ST.partition(rows, 4)
     stage0_kinds = {r.layer.kind for r in plan.stages[0]}
@@ -119,7 +123,7 @@ def test_partition_pins_embedding_and_head():
 
 @pytest.mark.parametrize("policy", [FULL_TRAIN, LLAVA_STAGE2],
                          ids=["full", "stage2-frozen-tower"])
-def test_partition_pins_vision_tower(policy):
+def test_partition_pins_vision_tower(policy, rows_of):
     """The vision tower (frozen or not) is never split: all its rows ride
     on stage 0."""
     rows = rows_of("llava15-7b", policy)
@@ -136,7 +140,7 @@ def test_partition_pins_vision_tower(policy):
         assert sum(r.repeat for r in tower) == sum(r.repeat for r in full)
 
 
-def test_partition_pins_audio_encoder():
+def test_partition_pins_audio_encoder(rows_of):
     rows = rows_of("seamless-m4t-large-v2")
     plan = ST.partition(rows, 4)
     for si, stage in enumerate(plan.stages):
@@ -145,7 +149,7 @@ def test_partition_pins_audio_encoder():
                 assert si == 0, (si, r.path)
 
 
-def test_partition_atomic_shared_blocks():
+def test_partition_atomic_shared_blocks(rows_of):
     """zamba2's weight-tied shared attention (invocation_repeat) is never
     split across stages."""
     rows = rows_of("zamba2-2.7b")

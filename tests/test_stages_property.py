@@ -3,8 +3,11 @@
 Generates synthetic parse tables (random segment structures: pinned
 front towers, splittable scan stacks, atomic oddballs, pinned tails) and
 asserts the partition invariants — contiguity, exact cover, balance
-bound, pinning — for arbitrary (rows, pp).  Runs whenever ``hypothesis``
-is installed (skipped otherwise, like tests/test_batch_property.py); the
+bound, pinning — for arbitrary (rows, pp), including expert-stacked MoE
+segments (the rows an expert-parallel mesh shards).  Runs whenever
+``hypothesis`` is installed (skipped otherwise, like
+tests/test_batch_property.py; CI installs it via requirements-dev.txt
+and uses the shared "ci" profile from tests/conftest.py); the
 deterministic twin over the real zoo lives in tests/test_stages.py.
 """
 
@@ -21,14 +24,20 @@ from repro.core.spec import LayerSpec, ParamSpec  # noqa: E402
 
 def _mk_rows(segments):
     """segments: list of (module, modality, repeat, scanned, trainable,
-    n_layers, width) -> ParsedLayer rows."""
+    n_layers, width, kind) -> ParsedLayer rows.  kind "moe" builds an
+    expert-stacked weight (leading `experts` axis, as models/moe.py
+    does) so the partitioner property suite also covers MoE stacks —
+    the rows an expert-parallel mesh axis shards."""
     rows = []
     for (module, modality, repeat, scanned, trainable, n_layers,
-         width) in segments:
+         width, kind) in segments:
         for li in range(n_layers):
-            layer = LayerSpec(
-                name=f"l{li}", kind="linear",
-                params={"w": ParamSpec(shape=(width, width))})
+            if kind == "moe":
+                params = {"wg": ParamSpec(shape=(8, width, width),
+                                          axes=("experts", None, None))}
+            else:
+                params = {"w": ParamSpec(shape=(width, width))}
+            layer = LayerSpec(name=f"l{li}", kind=kind, params=params)
             rows.append(ParsedLayer(
                 path=f"{module}/l{li}", module_path=module,
                 modality=modality, layer=layer, repeat=repeat,
@@ -44,17 +53,18 @@ def model_shapes(draw):
         segs.append((f"front{i}", draw(st.sampled_from(
             ["vision", "audio", "text"])), 1, False,
             draw(st.booleans()), draw(st.integers(1, 3)),
-            draw(st.sampled_from([8, 16]))))
+            draw(st.sampled_from([8, 16])), "linear"))
     n_mid = draw(st.integers(1, 3))
     for i in range(n_mid):
         segs.append((f"mid{i}", "text", draw(st.integers(2, 24)), True,
                      draw(st.booleans()), draw(st.integers(1, 4)),
-                     draw(st.sampled_from([8, 16, 32]))))
+                     draw(st.sampled_from([8, 16, 32])),
+                     draw(st.sampled_from(["linear", "moe"]))))
     n_tail = draw(st.integers(0, 2))
     for i in range(n_tail):
         segs.append((f"tail{i}", "text", 1, False, draw(st.booleans()),
                      draw(st.integers(1, 2)),
-                     draw(st.sampled_from([8, 16]))))
+                     draw(st.sampled_from([8, 16])), "linear"))
     return _mk_rows(segs)
 
 

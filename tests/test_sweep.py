@@ -276,3 +276,120 @@ def test_grid_size_counts_divisibility_filter():
     assert grid.size() == len(SW.SweepGrid(
         arch="smollm-360m", chips=4).meshes()) * 7
     assert grid.size() == sum(1 for _ in grid.cells())
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel / context-parallel negative paths (ISSUE-5): invalid
+# combos must die with ONE clean ValueError from planner.check_parallel —
+# identical across planner.check, both sweep modes, and the CLI.
+# ---------------------------------------------------------------------------
+
+
+def test_check_rejects_ep_on_dense_arch():
+    shape = ShapeConfig("cell", 512, 8, "train")
+    with pytest.raises(ValueError, match="dense arch"):
+        planner.check("smollm-360m", shape, {"data": 2, "expert": 2})
+
+
+def test_check_rejects_ep_beyond_expert_count():
+    shape = ShapeConfig("cell", 512, 8, "train")
+    with pytest.raises(ValueError, match="routed experts"):
+        planner.check("deepseek-v2-lite-16b", shape,
+                      {"data": 1, "expert": 128})
+
+
+def test_check_rejects_non_divisible_ep():
+    """ep <= n_experts but non-divisible would be silently inert in the
+    model (rule never applies) and unrunnable by the EP all_to_all."""
+    shape = ShapeConfig("cell", 512, 8, "train")
+    with pytest.raises(ValueError, match="does not divide"):
+        planner.check("deepseek-v2-lite-16b", shape,   # 64 % 3 != 0
+                      {"data": 1, "expert": 3})
+
+
+def test_check_rejects_cp_on_decode():
+    shape = ShapeConfig("cell", 512, 8, "decode")
+    with pytest.raises(ValueError, match="invalid for decode"):
+        planner.check("llama3.2-3b", shape, {"data": 2, "context": 2})
+
+
+def test_check_rejects_non_divisible_cp():
+    shape = ShapeConfig("cell", 1000, 8, "train")
+    with pytest.raises(ValueError, match="does not divide seq_len"):
+        planner.check("llama3.2-3b", shape, {"data": 2, "context": 3})
+
+
+def test_check_accepts_trivial_ep_cp_axes():
+    """Size-1 expert/context axes are inert, whatever the arch/kind."""
+    for kind in ("train", "prefill", "decode"):
+        shape = ShapeConfig("cell", 512, 8, kind)
+        r = planner.check("smollm-360m", shape,
+                          {"data": 2, "expert": 1, "context": 1})
+        base = planner.check("smollm-360m", shape, {"data": 2})
+        assert r.peak_bytes == base.peak_bytes, kind
+
+
+@pytest.mark.parametrize("mode", ["columnar", "cell"])
+def test_sweep_rejects_invalid_ep_cp_grids(mode):
+    bad_grids = [
+        SW.SweepGrid(arch="smollm-360m",                  # dense + ep
+                     mesh_shapes=[{"data": 2, "expert": 2}],
+                     global_batches=(8,), seq_lens=(512,)),
+        SW.SweepGrid(arch="deepseek-v2-lite-16b",         # decode + cp
+                     mesh_shapes=[{"data": 2, "context": 2}],
+                     kind="decode",
+                     global_batches=(8,), seq_lens=(512,)),
+        SW.SweepGrid(arch="deepseek-v2-lite-16b",         # cp % seq != 0
+                     mesh_shapes=[{"data": 2, "context": 4}],
+                     global_batches=(8,), seq_lens=(1022,)),
+        SW.SweepGrid(arch="deepseek-v2-lite-16b",         # ep > n_experts
+                     mesh_shapes=[{"expert": 128}],
+                     global_batches=(8,), seq_lens=(512,)),
+    ]
+    for grid in bad_grids:
+        with pytest.raises(ValueError):
+            SW.sweep(grid, mode=mode)
+
+
+def test_sweep_cli_rejects_invalid_ep_cp(capsys):
+    cases = [
+        (["--arch", "smollm_360m", "--chips", "8", "--mesh-axes",
+          "data,expert", "--batch", "8", "--seq-len", "512"],
+         "dense arch"),
+        (["--arch", "deepseek_v2_lite_16b", "--chips", "8", "--mesh-axes",
+          "data,context", "--kind", "decode", "--batch", "8",
+          "--seq-len", "512"],
+         "invalid for decode"),
+        (["--arch", "deepseek_v2_lite_16b", "--chips", "8", "--mesh-axes",
+          "data,context", "--batch", "8", "--seq-len", "1023"],
+         "does not divide seq_len"),
+    ]
+    for argv, needle in cases:
+        with pytest.raises(SystemExit) as exc:    # clean argparse error
+            SW.main(argv)
+        assert exc.value.code == 2
+        assert needle in capsys.readouterr().err
+
+
+def test_sweep_cli_ep_cp_knobs(capsys):
+    rc = SW.main(["--arch", "deepseek_v2_lite_16b", "--chips", "16",
+                  "--mesh-axes", "data,model,expert,context",
+                  "--max-expert", "4", "--max-context", "2",
+                  "--batch", "16", "--seq-len", "512", "--top", "5"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "expert=" in out and "context=" in out
+
+
+def test_plan_min_chips_ep_cp_never_worse():
+    """Allowing the expert/context axes can only unlock configs, never
+    lose them (the 2-axis plans stay in the enumerated set)."""
+    shape = ShapeConfig("cell", 1024, 8, "train")
+    base = planner.plan_min_chips(
+        "deepseek-v2-lite-16b", shape, chips=(8, 16), allow_pp=False)
+    epcp = planner.plan_min_chips(
+        "deepseek-v2-lite-16b", shape, chips=(8, 16), allow_pp=False,
+        allow_ep=True, max_ep=4, allow_cp=True, max_cp=4)
+    if base is not None:
+        assert epcp is not None
+        assert epcp.n_chips <= base.n_chips

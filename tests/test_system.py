@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import run_with_devices, tiny_batch
+from tests.conftest import run_with_devices, tiny_batch
 from repro.configs import ShapeConfig, get_config
 from repro.models import build_model
 from repro.serve import generate
