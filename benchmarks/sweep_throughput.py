@@ -22,16 +22,24 @@ so the perf trajectory is tracked across PRs.  Scales:
   schedules on a 5-axis (data, model, expert, context, pipe) mesh
   enumeration (use with ``--min-cells-per-sec`` / ``--min-speedup``
   floors);
+* ``serve``: ~39k decode cells — the CI serving-fleet gate crossing
+  paged-KV block sizes x pool utilizations x prefix-cache hit rates x
+  request mixes x a speculative draft model;
 * ``pr1``: the original 1,080-cell PR-1 grid (under_1s trajectory).
 
-``--verify`` additionally replays the 7,152-cell parity set — every
+``--verify`` additionally replays the 9,136-cell parity set — every
 arch x kind x backend x policy, with and without a calibration profile,
 pp in {1, 2, 4} x microbatches in {1, 4, 8} x {1f1b, gpipe} pipeline
-grids over the whole zoo, plus the ISSUE-5 acceptance grids crossing
+grids over the whole zoo, the ISSUE-5 acceptance grids crossing
 ep {1, 2, 4} x cp {1, 2, 4} with that pipeline set (full cross on the
 MoE arches, the legal slices elsewhere: dense arches pin expert=1,
-decode pins context=1) — through un-memoized ``planner.check`` cell by
-cell and fails on any byte difference (seconds, not timed).
+decode pins context=1), plus the ISSUE-6 serving-fleet grids (paged
+block sizes x utilization x hit rates x mixes on decode AND prefill for
+all 12 arches, speculative drafts, calibrated paged cells — each grid's
+all-neutral combo asserts prior-main cells stay bit-identical) —
+through un-memoized ``planner.check`` cell by cell, comparing peak,
+verdict AND the pool/draft/hit-savings components, failing on any byte
+difference (seconds, not timed).
 """
 
 from __future__ import annotations
@@ -47,8 +55,12 @@ from common import write_bench  # noqa: E402
 
 from repro.configs import ShapeConfig, registered_archs  # noqa: E402
 from repro.core import planner, sweep as SW  # noqa: E402
+from repro.serve.fleet import RequestMix  # noqa: E402
 
-PARITY_CELLS = 7152
+PARITY_CELLS = 9136
+
+# continuous-batching request mix for the serve parity/smoke grids
+SERVE_MIX = RequestMix.make(0.25, ((512, 1), (2048, 3)))
 
 PP_MESHES = [{"data": 2, "model": 2, "pipe": 1},
              {"data": 2, "model": 1, "pipe": 2},
@@ -86,6 +98,17 @@ def build_grid(scale: str = "large") -> SW.SweepGrid:
             global_batches=(8, 16, 32, 64, 128, 256, 512, 1024, 2048,
                             4096),
             seq_lens=(2048,), chip="v5e", backend="tpu")
+    if scale == "serve":                    # ~39k cells: CI serve gate —
+        return SW.SweepGrid(                # paged-KV pool x prefix
+            arch="llama3.2-3b",             # cache x mix x draft knobs
+            chips=(64, 128), chip="v5e", kind="decode",
+            global_batches=(4, 8, 16, 32, 64, 128),
+            seq_lens=(512, 1024, 2048, 4096),
+            block_sizes=(0, 16, 32), utilizations=(1.0, 0.9),
+            prefix_hit_rates=(0.0, 0.3, 0.6), prefix_len=256,
+            mixes=(None, SERVE_MIX,
+                   RequestMix.make(0.5, ((1024, 1),))),
+            draft_archs=("", "smollm-360m"), backend="tpu")
     if scale == "smoke":                    # ~47k cells: CI perf gate,
         return SW.SweepGrid(                # ep x cp x pp x mb x sched on
             arch="deepseek-v2-lite-16b",    # the MoE arch (5-axis meshes)
@@ -173,6 +196,37 @@ def parity_set() -> list:
         schedules=("1f1b", "gpipe"), microbatches=(1, 8),
         global_batches=(8,), seq_lens=(1024,), backend="cpu",
         profile=profile))
+    # ISSUE-6 serving-fleet grids: paged-KV block sizes x utilization x
+    # prefix-cache hit rates x request mixes (the all-neutral combo in
+    # each grid doubles as the "prior-main cells stay bit-identical at
+    # neutral serve knobs" acceptance leg).
+    for arch in registered_archs():         # paged decode: 12 x 128
+        grids.append(SW.SweepGrid(
+            arch=arch, chips=8, kind="decode",
+            global_batches=(4, 8), seq_lens=(1024,),
+            block_sizes=(0, 16), utilizations=(1.0, 0.9),
+            prefix_hit_rates=(0.0, 0.5), prefix_len=256,
+            mixes=(None, SERVE_MIX), backend="tpu"))
+    for arch in registered_archs():         # paged prefill: 12 x 32
+        grids.append(SW.SweepGrid(
+            arch=arch, chips=8, kind="prefill",
+            global_batches=(4,), seq_lens=(1024, 2048),
+            block_sizes=(0, 16), utilizations=(0.9,),
+            prefix_hit_rates=(0.0, 0.5), prefix_len=256,
+            backend="tpu"))
+    for arch in ("llama3.2-3b", "deepseek-v2-lite-16b"):
+        grids.append(SW.SweepGrid(          # speculative draft: 2 x 16
+            arch=arch, kind="decode",
+            mesh_shapes=({"data": 2}, {"data": 1, "model": 2}),
+            global_batches=(4, 8), seq_lens=(1024,),
+            block_sizes=(0, 16), draft_archs=("", "smollm-360m"),
+            backend="tpu"))
+        grids.append(SW.SweepGrid(          # calibrated paged: 2 x 16
+            arch=arch, chips=8, kind="decode",
+            global_batches=(4, 8), seq_lens=(1024,),
+            block_sizes=(16,), utilizations=(0.9,),
+            prefix_hit_rates=(0.0, 0.5), prefix_len=256,
+            backend="tpu", profile=profile))
     return grids
 
 
@@ -181,7 +235,9 @@ def _columns(res) -> list:
     return [(r.peak_bytes, r.fits, r.arch, r.chip, r.optimizer, r.remat,
              r.schedule, r.microbatches,
              r.grad_accum, r.global_batch, r.seq_len,
-             tuple(sorted(r.mesh_shape.items()))) for r in res.results]
+             tuple(sorted(r.mesh_shape.items())),
+             r.serve, r.pool_bytes, r.hit_saved_bytes, r.draft_bytes)
+            for r in res.results]
 
 
 def _verify_parity(verbose: bool) -> dict:
@@ -204,8 +260,13 @@ def _verify_parity(verbose: bool) -> dict:
                 backend=r.backend, grad_accum=r.grad_accum, remat=r.remat,
                 optimizer=r.optimizer, chip=r.chip,
                 headroom=grid.headroom, profile=grid.profile,
-                microbatches=r.microbatches, schedule=r.schedule)
-            if ref.peak_bytes != r.peak_bytes or ref.fits != r.fits:
+                microbatches=r.microbatches, schedule=r.schedule,
+                serve=r.serve)
+            if (ref.peak_bytes != r.peak_bytes or ref.fits != r.fits
+                    or ref.prediction.pool_bytes != r.pool_bytes
+                    or ref.prediction.draft_bytes != r.draft_bytes
+                    or ref.prediction.hit_saved_bytes
+                    != r.hit_saved_bytes):
                 mismatches += 1
                 if verbose and mismatches < 5:
                     print(f"MISMATCH vs check(): {r} vs {ref}")
@@ -298,7 +359,7 @@ def run(verbose: bool = True, verify: bool = False, scale: str = "large",
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scale", choices=("large", "smoke", "pr1"),
+    ap.add_argument("--scale", choices=("large", "smoke", "serve", "pr1"),
                     default="large")
     ap.add_argument("--verify", action="store_true",
                     help=f"replay the {PARITY_CELLS:,}-cell parity set "

@@ -101,6 +101,13 @@ class CalibrationProfile:
             loss_bytes=scale(pred.loss_bytes, self.coef("overhead")),
             input_bytes=scale(pred.input_bytes, self.coef("overhead")),
             cache_bytes=scale(pred.cache_bytes, self.coef("overhead")),
+            # serve terms: the KV pool is allocator overhead like the
+            # contiguous cache it replaces; the draft model is extra
+            # static residency (params + state), scaled accordingly
+            pool_bytes=scale(pred.pool_bytes, self.coef("overhead")),
+            hit_saved_bytes=scale(pred.hit_saved_bytes,
+                                  self.coef("overhead")),
+            draft_bytes=scale(pred.draft_bytes, c_s),
             calibration_bytes=self.chip_offset(chip))
 
     def scale_batch(self, values, term: str):

@@ -89,9 +89,12 @@ def table(profile=None, chip: str = "v5e",
 def breakdown(arch: str, shape: str = "train_4k",
               mesh: Optional[dict] = None, chip: str = "v5e",
               policy: str = "full", backend: str = "tpu",
-              microbatches: int = 1, schedule: str = "1f1b") -> str:
+              microbatches: int = 1, schedule: str = "1f1b",
+              serve=None) -> str:
     """Per-module (and, with a ``pipe`` mesh axis, per-stage) memory
-    breakdown of one architecture's prediction on a reference cell."""
+    breakdown of one architecture's prediction on a reference cell.
+    ``serve`` (a repro.serve.pool.ServeSpec, serve kinds only) adds the
+    paged-KV pool / prefix-savings / draft-residency summary line."""
     from repro.configs import get_config
     from repro.core import planner as PL
     from repro.core import predictor as PR
@@ -109,7 +112,8 @@ def breakdown(arch: str, shape: str = "train_4k",
     ctx = PL.make_context(cfg, mesh, kind=shp.kind,
                           global_batch=shp.global_batch,
                           seq_len=shp.seq_len, backend=backend,
-                          microbatches=microbatches, schedule=schedule)
+                          microbatches=microbatches, schedule=schedule,
+                          serve=serve)
     preds = PR.predict_stages(model, POLICIES[policy], ctx)
     peak_stage = max(range(len(preds)),
                      key=lambda i: preds[i].peak_bytes)
@@ -122,6 +126,24 @@ def breakdown(arch: str, shape: str = "train_4k",
            f"peak {pred.peak_bytes / GiB:.2f} GiB vs "
            f"{budget / GiB:.2f} GiB budget ({chip}) -> "
            f"{'FITS' if pred.peak_bytes <= budget else 'OOM'}", ""]
+
+    # serving-fleet summary (decode/prefill cells with active serve
+    # knobs): the paged pool replaces the slen-growing cache terms, so
+    # its line sits next to the peak it feeds instead of being dropped
+    if ctx.serve is not None and (pred.pool_bytes or pred.draft_bytes
+                                  or pred.hit_saved_bytes):
+        from repro.serve.pool import pool_blocks
+        s = ctx.serve
+        line = (f"serving: block {s.block_size} "
+                f"({pool_blocks(shp.seq_len, s)} blocks/seq), "
+                f"util {s.util_bp / 10000:.2f}, "
+                f"hit {s.hit_bp / 10000:.2f} -> "
+                f"kv_pool {gib(pred.pool_bytes)} GiB "
+                f"(prefix hits save {gib(pred.hit_saved_bytes)} GiB)")
+        if s.draft_arch:
+            line += (f"; draft {s.draft_arch} "
+                     f"{gib(pred.draft_bytes)} GiB resident")
+        out += [line, ""]
 
     # per-expert-shard / per-context-shard columns: re-predict the SAME
     # cell with the expert (resp. context) axis stripped; each module's
@@ -217,6 +239,21 @@ def main(argv=None) -> int:
     ap.add_argument("--schedule", default="1f1b",
                     choices=("1f1b", "gpipe"),
                     help="pipeline schedule for --breakdown")
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="paged-KV block size in tokens for --breakdown "
+                         "(serve kinds; 0 = contiguous)")
+    ap.add_argument("--utilization", type=float, default=1.0,
+                    help="KV pool utilization in (0,1] for --breakdown")
+    ap.add_argument("--prefix-hit-rate", type=float, default=0.0,
+                    help="prefix-cache hit rate in [0,1] for --breakdown")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="shared-prefix token count for --breakdown")
+    ap.add_argument("--mix", default=None, metavar="P[:LxW,...]",
+                    help="request mix for --breakdown (prefill fraction "
+                         "+ seq-len histogram, e.g. 0.3:512x1,4096x3)")
+    ap.add_argument("--draft-arch", default="",
+                    help="speculative-decode draft arch for --breakdown "
+                         "(decode kind only)")
     ap.add_argument("--chip", default=None,
                     help="reference chip (default v5e)")
     ap.add_argument("--mesh", default=None, metavar="data=16,model=16",
@@ -224,6 +261,13 @@ def main(argv=None) -> int:
     ap.add_argument("--shape", default=None,
                     help="reference shape (default train_4k)")
     args = ap.parse_args(argv)
+    serve_given = bool(args.block_size or args.utilization != 1.0
+                       or args.prefix_hit_rate or args.prefix_len
+                       or args.mix or args.draft_arch)
+    if serve_given and not args.breakdown:
+        ap.error("--block-size/--utilization/--prefix-hit-rate/"
+                 "--prefix-len/--mix/--draft-arch only apply to "
+                 "--breakdown")
     if args.breakdown:
         if args.profile:
             ap.error("--breakdown and --profile are mutually exclusive")
@@ -238,11 +282,22 @@ def main(argv=None) -> int:
             if args.policy not in POLICIES:
                 raise ValueError(f"unknown policy {args.policy!r}; "
                                  f"known: {sorted(POLICIES)}")
+            serve = None
+            if serve_given:
+                from repro.serve.fleet import parse_mix
+                from repro.serve.pool import ServeSpec
+                serve = ServeSpec.make(
+                    block_size=args.block_size,
+                    utilization=args.utilization,
+                    prefix_hit_rate=args.prefix_hit_rate,
+                    prefix_len=args.prefix_len,
+                    mix=parse_mix(args.mix) if args.mix else None,
+                    draft_arch=args.draft_arch)
             print(breakdown(args.arch, shape=args.shape or "train_4k",
                             mesh=mesh, chip=chip, policy=args.policy,
                             backend=args.backend,
                             microbatches=args.microbatches,
-                            schedule=args.schedule))
+                            schedule=args.schedule, serve=serve))
         except (KeyError, ValueError) as e:
             ap.error(str(e))
         return 0

@@ -55,7 +55,7 @@ from repro.core import factors as F
 from repro.core import planner as PL
 from repro.core import predictor as PR
 from repro.core import sweep as SW
-from repro.core.spec import dtype_bytes
+from repro.core.spec import FULL_TRAIN, dtype_bytes
 from repro.mesh_ctx import CONTEXT_AXIS, PIPE_AXIS
 
 I64 = np.int64
@@ -159,6 +159,7 @@ class CellColumns:
     remats: tuple                   # raw (may contain None)
     scheds: tuple                   # pipeline schedules ("1f1b"/"gpipe")
     mbs: tuple                      # pipeline microbatch counts
+    serves: tuple                   # Optional[ServeSpec] per combo
     pairs: tuple                    # (grad_accum, global_batch), enum order
     seqs: tuple
     kind: str
@@ -171,6 +172,7 @@ class CellColumns:
     remat_c: np.ndarray
     sched_c: np.ndarray
     mb_c: np.ndarray
+    srv_c: np.ndarray
     pair_c: np.ndarray
     seq_c: np.ndarray
     # per-cell knob values (int64)
@@ -183,8 +185,8 @@ class CellColumns:
 def build_columns(grid: "SW.SweepGrid") -> CellColumns:
     """Lower a grid to code columns.  Mirrors ``SweepGrid.cells()``:
     arch -> chip -> mesh -> optimizer -> remat -> schedule -> microbatch
-    -> accum -> batch -> seq, innermost fastest, with non-divisible
-    (batch, accum) pairs dropped."""
+    -> serve -> accum -> batch -> seq, innermost fastest, with
+    non-divisible (batch, accum) pairs dropped."""
     arches = tuple(SW.normalize_arch(a) for a in SW._seq(grid.arch))
     chips = tuple(SW._seq(grid.chip))
     meshes = tuple(grid.meshes())
@@ -192,33 +194,35 @@ def build_columns(grid: "SW.SweepGrid") -> CellColumns:
     remats = tuple(SW._seq(grid.remats))
     scheds = tuple(grid.check_schedules())
     mbs = tuple(int(m) for m in SW._seq(grid.microbatches))
+    serves = tuple(grid.serve_specs())
     pairs = tuple((int(a), int(g)) for a in SW._seq(grid.grad_accums)
                   for g in SW._seq(grid.global_batches) if not g % a)
     seqs = tuple(int(s) for s in SW._seq(grid.seq_lens))
 
     sizes = [len(arches), len(chips), len(meshes), len(opts), len(remats),
-             len(scheds), len(mbs), len(pairs), len(seqs)]
+             len(scheds), len(mbs), len(serves), len(pairs), len(seqs)]
     n = math.prod(sizes)
     if n == 0:
         z = np.zeros(0, I64)
         return CellColumns(0, arches, chips, meshes, opts, remats, scheds,
-                           mbs, pairs, seqs, grid.kind, grid.backend,
-                           z, z, z, z, z, z, z, z, z, z, z, z, z)
+                           mbs, serves, pairs, seqs, grid.kind,
+                           grid.backend,
+                           z, z, z, z, z, z, z, z, z, z, z, z, z, z)
     idx = np.arange(n, dtype=I64)
     codes = []
     for s in reversed(sizes):
         codes.append(idx % s)
         idx //= s
-    (seq_c, pair_c, mb_c, sched_c, remat_c, opt_c, mesh_c, chip_c,
+    (seq_c, pair_c, srv_c, mb_c, sched_c, remat_c, opt_c, mesh_c, chip_c,
      arch_c) = codes
     accum = np.array([p[0] for p in pairs], I64)[pair_c]
     gb = np.array([p[1] for p in pairs], I64)[pair_c]
     seq = np.array(seqs, I64)[seq_c]
     micro = np.array(mbs, I64)[mb_c]
     return CellColumns(n, arches, chips, meshes, opts, remats, scheds, mbs,
-                       pairs, seqs, grid.kind, grid.backend, arch_c,
-                       chip_c, mesh_c, opt_c, remat_c, sched_c, mb_c,
-                       pair_c, seq_c, accum, gb, seq, micro)
+                       serves, pairs, seqs, grid.kind, grid.backend,
+                       arch_c, chip_c, mesh_c, opt_c, remat_c, sched_c,
+                       mb_c, srv_c, pair_c, seq_c, accum, gb, seq, micro)
 
 
 # ---------------------------------------------------------------------------
@@ -254,6 +258,13 @@ class ColumnarResults:
     peak_bytes: np.ndarray
     budget_bytes: np.ndarray
     fits: np.ndarray                 # bool
+    # serving-fleet axis + peak-stage serve provenance (all-zero /
+    # single-None on grids without active serve knobs)
+    serves: tuple = (None,)
+    srv_c: Optional[np.ndarray] = None
+    pool_bytes: Optional[np.ndarray] = None
+    draft_bytes: Optional[np.ndarray] = None
+    hit_saved_bytes: Optional[np.ndarray] = None
 
     @property
     def n_chips(self) -> np.ndarray:
@@ -273,6 +284,14 @@ class ColumnarResults:
             global_batch=int(self.global_batch[i]),
             seq_len=int(self.seq_len[i]),
             kind=self.kind, backend=self.backend,
+            serve=None if self.srv_c is None
+            else self.serves[self.srv_c[i]],
+            pool_bytes=0 if self.pool_bytes is None
+            else int(self.pool_bytes[i]),
+            draft_bytes=0 if self.draft_bytes is None
+            else int(self.draft_bytes[i]),
+            hit_saved_bytes=0 if self.hit_saved_bytes is None
+            else int(self.hit_saved_bytes[i]),
             peak_bytes=int(self.peak_bytes[i]),
             budget_bytes=int(self.budget_bytes[i]),
             fits=bool(self.fits[i]), prediction=None)
@@ -322,12 +341,24 @@ def _knob_env(cfg, cols: CellColumns, pp: int) -> dict:
     (``PredictContext.eff_microbatches``); pp==1 / serve groups collapse
     the microbatch axis entirely (``_expanded`` False) so their tables
     are not built ``len(microbatches)`` times over identical columns —
-    the caller indexes them with the reduced (pair, seq) code."""
+    the caller indexes them with the reduced (pair, seq) code.
+
+    On serve kinds with any active serving-fleet spec the T axis expands
+    over (serve, pair, seq) instead — mutually exclusive with the train
+    microbatch expansion, because ``planner.check_serve`` rejects active
+    serve knobs on train kinds up front — and the env grows the paged-KV
+    ``pool_tok`` column (plus its hit-rate-0 twin for the hit-savings
+    delta), computed per (seq, serve) through the SAME
+    ``repro.serve.pool.pool_tokens`` exact-integer ledger the scalar
+    ``factors.term_env`` calls."""
     from repro.models.transformer import LOSS_CHUNK
     n_pairs, n_seq = len(cols.pairs), len(cols.seqs)
     accum_1 = np.repeat(np.array([p[0] for p in cols.pairs], I64), n_seq)
     gb_1 = np.repeat(np.array([p[1] for p in cols.pairs], I64), n_seq)
     seq_1 = np.tile(np.array(cols.seqs, I64), n_pairs)
+    serves = cols.serves
+    serve_on = cols.kind != "train" \
+        and any(s is not None for s in serves)
     expanded = pp > 1 and cols.kind == "train"
     if expanded:
         n_m = len(cols.mbs)
@@ -336,6 +367,13 @@ def _knob_env(cfg, cols: CellColumns, pp: int) -> dict:
         seq_t = np.tile(seq_1, n_m)
         micro_t = np.repeat(np.array(cols.mbs, I64), n_pairs * n_seq)
         eff_m = np.maximum(micro_t, 1)       # PredictContext.eff_microbatches
+    elif serve_on:
+        n_srv = len(serves)
+        accum_t = np.tile(accum_1, n_srv)
+        gb_t = np.tile(gb_1, n_srv)
+        seq_t = np.tile(seq_1, n_srv)
+        srv_t = np.repeat(np.arange(n_srv, dtype=I64), n_pairs * n_seq)
+        eff_m = np.ones_like(gb_t)
     else:
         accum_t, gb_t, seq_t = accum_1, gb_1, seq_1
         eff_m = np.ones_like(gb_t)
@@ -348,6 +386,21 @@ def _knob_env(cfg, cols: CellColumns, pp: int) -> dict:
         enc_t = np.array([int(s * ratio) for s in seq_t.tolist()], I64)
     else:
         enc_t = np.zeros(len(seq_t), I64)
+    if serve_on:
+        import dataclasses
+        from repro.serve.pool import pool_tokens
+        seq_l, srv_l = seq_t.tolist(), srv_t.tolist()
+        pool_tok = np.array([pool_tokens(s, serves[i])
+                             for s, i in zip(seq_l, srv_l)], I64)
+        nohit = [None if sp is None else dataclasses.replace(sp, hit_bp=0)
+                 for sp in serves]
+        pool_tok0 = np.array([pool_tokens(s, nohit[i])
+                              for s, i in zip(seq_l, srv_l)], I64)
+        active_t = np.array([serves[i] is not None for i in srv_l], bool)
+    else:
+        srv_t = np.zeros(len(seq_t), I64)
+        pool_tok = pool_tok0 = seq_t             # neutral: pool_tok == slen
+        active_t = np.zeros(len(seq_t), bool)
     env = {"mb": mb_t, "gb": gb_t, "seq": seq_t, "enc": enc_t,
            "slen": seq_t,                      # make_context: max_len=seq
            "chunk": np.minimum(LOSS_CHUNK, seq_t),
@@ -355,8 +408,11 @@ def _knob_env(cfg, cols: CellColumns, pp: int) -> dict:
            "tok_cross": np.where(enc_t > 0, enc_t, seq_t),
            "cache_mult": 3 if (cols.backend == "cpu"
                                and cols.kind == "decode") else 1,
+           "pool_tok": pool_tok,
            # derived (not TermSpec dims)
-           "_eff_m": eff_m, "_gb_in": gb_in, "_expanded": expanded}
+           "_pool_tok0": pool_tok0, "_srv_t": srv_t, "_active_t": active_t,
+           "_eff_m": eff_m, "_gb_in": gb_in, "_expanded": expanded,
+           "_serve_expanded": serve_on}
     return env
 
 
@@ -375,12 +431,18 @@ class _StageTables:
     cache: np.ndarray               # (n_mesh, T)
     boundary: np.ndarray            # (n_mesh, T)
     embed: int
+    # serving-fleet tables (None unless the env is serve-expanded, so
+    # non-serve grids pay zero extra gathers in the composition)
+    pool: Optional[np.ndarray] = None         # (n_mesh, T) paged-KV pool
+    pool_saved: Optional[np.ndarray] = None   # prefix-hit savings info
+    draft: Optional[np.ndarray] = None        # first stage only
 
 
 def _stage_tables(cfg, model, rows, rules, rep_ctx,
                   cols: CellColumns, env: dict, profile,
                   opt_res: tuple, remat_eval: tuple,
-                  mesh_ids, stage: int, pp: int) -> _StageTables:
+                  mesh_ids, stage: int, pp: int,
+                  drafts: Optional[dict] = None) -> _StageTables:
     """Tables for ONE pipeline stage's rows over the meshes in
     ``mesh_ids`` (the whole model when ``pp == 1``) — the columnar twin
     of ``compute_static`` / ``compute_acts`` / ``compute_overheads`` on
@@ -552,12 +614,67 @@ def _stage_tables(cfg, model, rows, rules, rep_ctx,
                         for s in PR.loss_specs(cfg, kind)))
     else:
         loss = full(0)
+    pool = pool_saved = draft = None
     if kind == "train":
         cache = full(0)
-    else:
+    elif not env["_serve_expanded"]:
         cache = full(sum((eval_term_batch(s, env, sizes2, rules)
                           for s in PR.cache_specs(rows)),
                          np.asarray(0, I64)))
+    else:
+        # paged-KV split (scalar twin: predictor._cache_bytes /
+        # _pool_terms on this stage's rows): the slen-growing cache terms
+        # price at pool_tok tokens per sequence; serve-active cells keep
+        # only the fixed remainder in cache and move the paged part to
+        # the pool table, while serve=None cells (pool_tok == slen there)
+        # recompose the contiguous cache exactly as fixed + paged.
+        active2 = np.broadcast_to(env["_active_t"][None, :], shape2)
+        fixed = full(sum((eval_term_batch(s, env, sizes2, rules)
+                          for s in PR.fixed_cache_specs(rows)),
+                         np.asarray(0, I64)))
+        paged = full(sum((eval_term_batch(s, env, sizes2, rules)
+                          for s in PR.pool_specs(rows)),
+                         np.asarray(0, I64)))
+        cache = np.where(active2, fixed, fixed + paged)
+        pool = np.where(active2, paged, 0)
+        if any(s is not None and s.hit_bp for s in cols.serves):
+            env0 = dict(env)
+            env0["pool_tok"] = env["_pool_tok0"]
+            paged0 = full(sum((eval_term_batch(s, env0, sizes2, rules)
+                               for s in PR.pool_specs(rows)),
+                              np.asarray(0, I64)))
+            pool_saved = np.where(active2, paged0 - paged, 0)
+        else:
+            pool_saved = np.zeros(shape2, I64)
+        if first and drafts:
+            # speculative-decode draft residency (scalar twin:
+            # predictor.draft_residency_bytes): the draft's params under
+            # ITS OWN rules + fsdp flag, plus its KV pool and fixed
+            # caches at the cell's serve knobs — first stage only, per-T
+            # masked to the cells whose spec names this draft
+            draft = np.zeros(shape2, I64)
+            srv_t = env["_srv_t"]
+            for dname, (dcfg, drows, drules) in drafts.items():
+                dmask = np.array(
+                    [sp is not None and sp.draft_arch == dname
+                     for sp in cols.serves], bool)[srv_t]
+                if not dmask.any():
+                    continue
+                d_extra = ("data",) if dcfg.fsdp else ()
+                dparams = np.zeros(n_mesh, I64)
+                for r in drows:
+                    for p in r.layer.params.values():
+                        dshape, daxes = F._stacked(p, r)
+                        dden = batch_shard_factor(dshape, daxes, sizes1,
+                                                  drules, d_extra)
+                        dparams = dparams + p.nbytes * r.repeat // dden
+                dterms = full(sum(
+                    (eval_term_batch(s, env, sizes2, drules)
+                     for s in (PR.pool_specs(drows)
+                               + PR.fixed_cache_specs(drows))),
+                    np.asarray(0, I64)))
+                draft = np.where(dmask[None, :],
+                                 dparams[:, None] + dterms, draft)
     embed = PR.embed_gather_const(rows, backend)
     bmult = PR.boundary_mult(stage, pp, kind)
     if bmult:
@@ -599,19 +716,21 @@ def _stage_tables(cfg, model, rows, rules, rep_ctx,
         saved=np.ascontiguousarray(
             np.broadcast_to(saved_stack, (len(remat_eval),) + shape2)),
         transient=full(transient), loss=loss, inputs=inputs, cache=cache,
-        boundary=boundary, embed=embed)
+        boundary=boundary, embed=embed, pool=pool, pool_saved=pool_saved,
+        draft=draft)
 
 
 def _stage_tables_jobs(cfg, model, rows, rules, rep_ctx, cols, env,
                        profile, opt_res, remat_eval, mesh_ids,
-                       stage: int, pp: int, jobs: int) -> _StageTables:
+                       stage: int, pp: int, jobs: int,
+                       drafts: Optional[dict] = None) -> _StageTables:
     """``_stage_tables`` with the mesh axis split over worker threads
     (order-identical results)."""
     mesh_ids = list(mesh_ids)
     if jobs <= 1 or len(mesh_ids) <= 1:
         return _stage_tables(cfg, model, rows, rules, rep_ctx, cols, env,
                              profile, opt_res, remat_eval, mesh_ids,
-                             stage, pp)
+                             stage, pp, drafts)
     from concurrent.futures import ThreadPoolExecutor
     chunks = [c.tolist() for c in
               np.array_split(np.asarray(mesh_ids), jobs) if len(c)]
@@ -619,23 +738,27 @@ def _stage_tables_jobs(cfg, model, rows, rules, rep_ctx, cols, env,
         parts = list(ex.map(
             lambda ids: _stage_tables(cfg, model, rows, rules, rep_ctx,
                                       cols, env, profile, opt_res,
-                                      remat_eval, ids, stage, pp),
+                                      remat_eval, ids, stage, pp, drafts),
             chunks))
     first = parts[0]
     cat = lambda pick, axis: np.concatenate(
         [pick(p) for p in parts], axis=axis)
+    opt_cat = lambda pick: None if pick(first) is None \
+        else cat(pick, 0)
     return _StageTables(
         static_sum=cat(lambda p: p.static_sum, 0),
         opt_trans=cat(lambda p: p.opt_trans, 0),
-        static_scaled=None if first.static_scaled is None
-        else cat(lambda p: p.static_scaled, 0),
+        static_scaled=opt_cat(lambda p: p.static_scaled),
         saved=cat(lambda p: p.saved, 1),
         transient=cat(lambda p: p.transient, 0),
         loss=cat(lambda p: p.loss, 0),
         inputs=cat(lambda p: p.inputs, 0),
         cache=cat(lambda p: p.cache, 0),
         boundary=cat(lambda p: p.boundary, 0),
-        embed=first.embed)
+        embed=first.embed,
+        pool=opt_cat(lambda p: p.pool),
+        pool_saved=opt_cat(lambda p: p.pool_saved),
+        draft=opt_cat(lambda p: p.draft))
 
 
 # ---------------------------------------------------------------------------
@@ -654,9 +777,10 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
     """Evaluate every cell of ``grid`` columnarly; byte-identical to the
     per-cell path (``SweepEngine.evaluate`` per ``grid.cells()`` cell)."""
     t0 = time.perf_counter()
-    # same up-front ep/cp validation the cell path hits via
-    # grid.cells() -> make_context -> planner.check_parallel
+    # same up-front ep/cp + serve validation the cell path hits via
+    # grid.cells() -> make_context -> planner.check_parallel/check_serve
     grid.check_parallel()
+    grid.check_serve()
     cols = build_columns(grid)
     if cols.n == 0:
         return SW.SweepResults(grid=grid, results=[],
@@ -674,6 +798,19 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
     pp_of = np.array([int(m.get(PIPE_AXIS, 1)) for m in cols.meshes], I64)
     is_gpipe_sched = np.array([s == "gpipe" for s in cols.scheds], bool)
     from repro.launch.mesh import arch_rules
+    # speculative-decode draft states: one (cfg, rows, rules) per distinct
+    # draft arch on the serve axis, parsed under FULL_TRAIN exactly like
+    # the scalar predictor._draft_state memo
+    drafts: dict = {}
+    for s in cols.serves:
+        if s is not None and s.draft_arch and s.draft_arch not in drafts:
+            dcfg, _, drows = engine._arch_state(
+                SW.normalize_arch(s.draft_arch), FULL_TRAIN)
+            drafts[s.draft_arch] = (dcfg, drows,
+                                    arch_rules(dcfg, cols.kind))
+    pool_arr = np.zeros(n, I64)
+    draft_arr = np.zeros(n, I64)
+    hit_arr = np.zeros(n, I64)
     block = n // len(cols.arches)
     for ai, arch in enumerate(cols.arches):
         sl = slice(ai * block, (ai + 1) * block)
@@ -694,6 +831,8 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
         t2_full = (cols.mb_c[sl] * n_pairs + cols.pair_c[sl]) * n_seq \
             + cols.seq_c[sl]
         t2_flat = cols.pair_c[sl] * n_seq + cols.seq_c[sl]
+        t2_srv = (cols.srv_c[sl] * n_pairs + cols.pair_c[sl]) * n_seq \
+            + cols.seq_c[sl]
         r_codes = remat_idx[cols.remat_c[sl]]
         accum_col = cols.accum[sl]
         gpipe_col = is_gpipe_sched[cols.sched_c[sl]]
@@ -703,6 +842,9 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
                                  for c in cols.chips], I64)[cols.chip_c[sl]]
 
         arch_peak = np.zeros(block, I64)
+        arch_pool = np.zeros(block, I64)
+        arch_draft = np.zeros(block, I64)
+        arch_hit = np.zeros(block, I64)
         for pp in sorted(set(pp_of.tolist())):
             mesh_ids = np.flatnonzero(pp_of == pp)
             sel = np.isin(m_c, mesh_ids)
@@ -713,17 +855,24 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
             lidx = np.full(len(cols.meshes), -1, I64)
             lidx[mesh_ids] = np.arange(len(mesh_ids), dtype=I64)
             lm = lidx[m_c[sel]]
-            t2 = (t2_full if env["_expanded"] else t2_flat)[sel]
+            serve_grp = env["_serve_expanded"]
+            t2 = (t2_full if env["_expanded"]
+                  else t2_srv if serve_grp else t2_flat)[sel]
             osel = o_c[sel]
             rsel = r_codes[sel]
             eff_m_cells = env["_eff_m"][t2]
             cls = ((accum_col[sel] > 1) | (eff_m_cells > 1)).astype(I64)
             gp = gpipe_col[sel]
             best = np.zeros(int(sel.sum()), I64)
+            if serve_grp:
+                b_pool = np.zeros_like(best)
+                b_draft = np.zeros_like(best)
+                b_hit = np.zeros_like(best)
             for s, srows in enumerate(plan.stages):
                 tabs = _stage_tables_jobs(
                     cfg, model, list(srows), rules, rep_ctx, cols, env,
-                    profile, opt_res, remat_eval, mesh_ids, s, pp, jobs)
+                    profile, opt_res, remat_eval, mesh_ids, s, pp, jobs,
+                    drafts)
                 # schedule stash: GPipe stages hold all m microbatch
                 # activation sets, 1F1B stage s holds min(pp - s, m)
                 stash = np.maximum(
@@ -755,9 +904,36 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
                              + profile.scale_batch(inp, "overhead")
                              + profile.scale_batch(cache, "overhead")
                              + chip_off[sel])
-                best = np.maximum(best, speak)
+                if serve_grp:
+                    # paged pool scales with the cache group, the draft
+                    # model's residency with the statics (profile.apply);
+                    # the peak-stage provenance is strictly-greater like
+                    # predictor.predict, so ties keep the earliest stage
+                    pool = tabs.pool[lm, t2]
+                    psv = tabs.pool_saved[lm, t2]
+                    drf = tabs.draft[lm, t2] if tabs.draft is not None \
+                        else np.zeros_like(pool)
+                    if profile is not None:
+                        pool = profile.scale_batch(pool, "overhead")
+                        psv = profile.scale_batch(psv, "overhead")
+                        drf = profile.scale_batch(drf, "static")
+                    speak = speak + pool + drf
+                    upd = speak > best
+                    best = np.where(upd, speak, best)
+                    b_pool = np.where(upd, pool, b_pool)
+                    b_draft = np.where(upd, drf, b_draft)
+                    b_hit = np.where(upd, psv, b_hit)
+                else:
+                    best = np.maximum(best, speak)
             arch_peak[sel] = best
+            if serve_grp:
+                arch_pool[sel] = b_pool
+                arch_draft[sel] = b_draft
+                arch_hit[sel] = b_hit
         peak[sl] = arch_peak
+        pool_arr[sl] = arch_pool
+        draft_arr[sl] = arch_draft
+        hit_arr[sl] = arch_hit
         per_opt = np.array([_intern(opt_tbl, opt_names, o)
                             for o in opt_res], I64)
         res_opt_c[sl] = per_opt[o_c]
@@ -778,6 +954,8 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
         opt_c=res_opt_c, remat_c=res_remat_c, sched_c=cols.sched_c,
         microbatches=cols.micro,
         grad_accum=cols.accum, global_batch=cols.gb, seq_len=cols.seq,
-        peak_bytes=peak, budget_bytes=budget, fits=peak <= budget)
+        peak_bytes=peak, budget_bytes=budget, fits=peak <= budget,
+        serves=cols.serves, srv_c=cols.srv_c, pool_bytes=pool_arr,
+        draft_bytes=draft_arr, hit_saved_bytes=hit_arr)
     return SW.SweepResults(grid=grid, columns=columns,
                            elapsed_s=time.perf_counter() - t0)

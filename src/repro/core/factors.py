@@ -56,9 +56,12 @@ AXIS_LAYERS = "layers"
 #: flash q/kv chunk (min(FLASH_CHUNK, seq)), ``tok_cross`` cross-attention
 #: cache length (enc, falling back to slen), ``cache_mult`` the cpu-oracle
 #: decode bf16-twin multiplier (a dimension-shaped multiplier: it scales
-#: prod(dims) but carries no shardable axis).
+#: prod(dims) but carries no shardable axis), ``pool_tok`` the effective
+#: paged-pool tokens per sequence (slen folded through the serve knobs —
+#: block padding, utilization, prefix-cache hits, request mix; equals
+#: slen exactly when no serve spec is active).
 TERM_VARS = ("mb", "gb", "seq", "enc", "slen", "chunk", "qc", "tok_cross",
-             "cache_mult")
+             "cache_mult", "pool_tok")
 
 
 @dataclass(frozen=True)
@@ -85,6 +88,7 @@ def term_env(ctx: "PredictContext") -> dict:
     automatically and the scalar and columnar paths cannot disagree on
     where the division happens."""
     from repro.models.transformer import LOSS_CHUNK
+    from repro.serve.pool import pool_tokens
     slen = ctx.max_len or ctx.seq_len
     return {"mb": ctx.pp_micro_batch, "gb": ctx.global_batch,
             "seq": ctx.seq_len, "enc": ctx.enc_seq, "slen": slen,
@@ -92,7 +96,8 @@ def term_env(ctx: "PredictContext") -> dict:
             "qc": min(FLASH_CHUNK, ctx.seq_len),
             "tok_cross": ctx.enc_seq or slen,
             "cache_mult": 3 if (ctx.backend == "cpu"
-                                and ctx.kind == "decode") else 1}
+                                and ctx.kind == "decode") else 1,
+            "pool_tok": pool_tokens(slen, ctx.serve)}
 
 
 def eval_term(spec: TermSpec, env: dict, mesh_shape: dict,
@@ -144,6 +149,12 @@ class PredictContext:
     # accumulate in f32.  Used when validating against this container's
     # compiled-memory ground truth (see DESIGN.md §2).
     backend: str = "cpu"
+    # Serving-fleet knobs (repro.serve.pool.ServeSpec) for serve kinds:
+    # paged-KV block pool, prefix-cache hits, request mix, draft model.
+    # Always None for train kinds and when every knob is neutral —
+    # planner.make_context normalizes, so serve=None cells are
+    # bit-identical to pre-serve predictions.
+    serve: Optional[object] = None
 
     @property
     def act_saved_bytes_per_bf16(self) -> int:

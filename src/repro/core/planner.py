@@ -141,25 +141,76 @@ def check_parallel(cfg, mesh_shape: dict, kind: str,
                 f"a divisible seq_len or a smaller context axis")
 
 
+def check_serve(cfg, serve, kind: str) -> None:
+    """Reject serving-fleet knobs the step kind / registry cannot honor.
+
+    The serve twin of :func:`check_parallel` — ``make_context`` (every
+    per-cell path), ``SweepGrid.check_serve`` (grid-level, both sweep
+    modes) and the sweep CLI all route through it, so invalid serve
+    plans fail with one clean ValueError everywhere.  Range errors
+    (hit rate outside [0,1], utilization outside (0,1], non-page-aligned
+    block sizes) are rejected even earlier, at ServeSpec construction.
+
+    * any active serve knob on a train kind (the block pool, prefix
+      cache, request mix and draft model are serving-runtime concepts —
+      a train step has no KV pool to page);
+    * a draft model on a non-decode kind (speculative decoding drafts
+      ahead of the decode loop only);
+    * a draft arch that is not in the config registry.
+    """
+    if serve is None or serve.is_neutral:
+        return
+    if kind == "train":
+        raise ValueError(
+            f"serve knobs (block_size/utilization/prefix-hit-rate/mix/"
+            f"draft) are invalid for kind 'train': a train step has no "
+            f"KV pool to page — drop them or sweep a serve kind")
+    if serve.draft_arch:
+        if kind != "decode":
+            raise ValueError(
+                f"draft_arch {serve.draft_arch!r} is invalid for kind "
+                f"{kind!r}: speculative decoding is a decode-time "
+                f"technique — drop the draft or use kind 'decode'")
+        from repro.configs import registered_archs
+        from repro.core.sweep import normalize_arch
+        known = registered_archs()
+        try:
+            name = normalize_arch(serve.draft_arch)
+        except KeyError:
+            name = None
+        if name not in known:
+            raise ValueError(
+                f"unknown draft arch {serve.draft_arch!r}; known: "
+                f"{sorted(known)}")
+
+
 def make_context(cfg, mesh_shape: dict, *, kind: str, global_batch: int,
                  seq_len: int, backend: str = "tpu", grad_accum: int = 1,
                  remat: Optional[str] = None,
                  optimizer: Optional[str] = None,
                  microbatches: int = 1,
-                 schedule: str = "1f1b") -> F.PredictContext:
+                 schedule: str = "1f1b",
+                 serve=None) -> F.PredictContext:
     """The ONE place a planner/sweep cell becomes a PredictContext — the
     sweep engine and ``check`` share it, so their predictions can never
     diverge on context construction.  The pipeline degree comes from the
     mesh's ``pipe`` axis; ``microbatches``/``schedule`` set how the batch
     fills that pipeline (inert when the mesh has no pipe axis); the
     `expert`/`context` axes are validated against the arch and step kind
-    (``check_parallel``)."""
+    (``check_parallel``); serving-fleet knobs (``serve``, a
+    repro.serve.pool.ServeSpec) are validated by ``check_serve`` and a
+    fully-neutral spec is normalized to None, so neutral serve cells are
+    bit-identical to pre-serve predictions (and hit the same memo keys).
+    """
     from repro.core.stages import SCHEDULES
     from repro.launch import mesh as M
     if schedule not in SCHEDULES:
         raise ValueError(
             f"unknown schedule {schedule!r}; known: {SCHEDULES}")
     check_parallel(cfg, mesh_shape, kind, seq_len)
+    check_serve(cfg, serve, kind)
+    if serve is not None and serve.is_neutral:
+        serve = None
     opt = optimizer or cfg.optimizer
     return F.PredictContext(
         mesh_shape=mesh_shape, rules=M.arch_rules(cfg, kind),
@@ -170,7 +221,7 @@ def make_context(cfg, mesh_shape: dict, *, kind: str, global_batch: int,
         if cfg.encdec else 0,
         kind=kind, max_len=seq_len, grad_accum=grad_accum,
         pp=M.pp_degree(mesh_shape), microbatches=microbatches,
-        schedule=schedule)
+        schedule=schedule, serve=serve)
 
 
 def _resolve_shape(shape):
@@ -187,7 +238,7 @@ def check(arch: str, shape_name, mesh_shape: dict,
           remat: Optional[str] = None, optimizer: Optional[str] = None,
           chip: str = "v5e", headroom: float = HEADROOM,
           profile=None, microbatches: int = 1,
-          schedule: str = "1f1b") -> PlanReport:
+          schedule: str = "1f1b", serve=None) -> PlanReport:
     """Reference single-cell evaluation: fresh build, no caches.
 
     ``shape_name`` may be a registered shape name ("train_4k") or a
@@ -208,7 +259,7 @@ def check(arch: str, shape_name, mesh_shape: dict,
                        seq_len=shape.seq_len, backend=backend,
                        grad_accum=grad_accum, remat=remat,
                        optimizer=optimizer, microbatches=microbatches,
-                       schedule=schedule)
+                       schedule=schedule, serve=serve)
     pred = PR.predict(model, policy, ctx, profile=profile, chip=chip)
     budget = int((hbm_bytes if hbm_bytes is not None
                   else chip_hbm(chip)) * headroom)
@@ -324,6 +375,137 @@ def plan_min_chips(arch: str, shape_name, chips=(4, 8, 16, 32, 64),
         grid.mesh_shapes = meshes
     res = (engine or SW.SweepEngine()).sweep(grid)
     return res.min_chips()
+
+
+@dataclass
+class ConcurrencyReport:
+    """Answer to "max concurrent sequences per replica on chip X"."""
+
+    arch: str
+    chip: str
+    mesh_shape: dict
+    kind: str
+    seq_len: int
+    max_concurrency: int          # 0 when even one sequence OOMs
+    peak_bytes: int               # peak at max_concurrency (or at 1 if 0)
+    budget_bytes: int
+    serve: Optional[object] = None
+
+    def __str__(self) -> str:
+        return (f"{self.arch} on {self.chip} x {self.mesh_shape}: "
+                f"{self.max_concurrency} concurrent seqs @ "
+                f"{self.seq_len} tokens ({self.peak_bytes / GiB:.2f} / "
+                f"{self.budget_bytes / GiB:.2f} GiB)")
+
+
+def plan_max_concurrency(arch: str, seq_len: int,
+                         mesh_shape: Optional[dict] = None,
+                         chip: str = "v5e", kind: str = "decode",
+                         serve=None, backend: str = "tpu",
+                         policy: TrainPolicy = FULL_TRAIN,
+                         headroom: float = HEADROOM, cap: int = 65536,
+                         profile=None, engine=None) -> ConcurrencyReport:
+    """Max concurrent sequences one replica sustains on ``chip`` —
+    ROADMAP question 1.  Peak bytes are monotone nondecreasing in the
+    concurrency (every gb-bearing term has a nonnegative coefficient at
+    a FIXED mesh), so an exponential probe + binary search finds the
+    largest fitting global_batch exactly."""
+    from repro.configs import ShapeConfig
+    from repro.core import sweep as SW
+    engine = engine or SW.SweepEngine()
+    mesh_shape = dict(mesh_shape or {"data": 1, "model": 1})
+    budget = int(chip_hbm(chip) * headroom)
+
+    def peak(gb: int) -> int:
+        shape = ShapeConfig("concurrency", seq_len, gb, kind)
+        rep = engine.report(arch, shape, mesh_shape, policy=policy,
+                            backend=backend, budget_bytes=budget,
+                            chip=chip, profile=profile, serve=serve)
+        return rep.peak_bytes
+
+    if peak(1) > budget:
+        return ConcurrencyReport(
+            arch=arch, chip=chip, mesh_shape=mesh_shape, kind=kind,
+            seq_len=seq_len, max_concurrency=0, peak_bytes=peak(1),
+            budget_bytes=budget, serve=serve)
+    lo = 1                                   # known to fit
+    hi = 2
+    while hi <= cap and peak(hi) <= budget:
+        lo, hi = hi, hi * 2
+    hi = min(hi, cap + 1)                    # first known (or assumed) OOM
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if peak(mid) <= budget:
+            lo = mid
+        else:
+            hi = mid
+    return ConcurrencyReport(
+        arch=arch, chip=chip, mesh_shape=mesh_shape, kind=kind,
+        seq_len=seq_len, max_concurrency=lo, peak_bytes=peak(lo),
+        budget_bytes=budget, serve=serve)
+
+
+@dataclass
+class FleetReport:
+    """Answer to "replicas needed for N QPS at p99 context length"."""
+
+    arch: str
+    chip: str
+    mesh_shape: dict
+    qps: float
+    latency_s: float
+    seq_len: int                  # plan at the p99 context length
+    concurrent_requests: int      # Little's law: ceil(qps * latency)
+    per_replica: int              # plan_max_concurrency answer
+    replicas: int
+    chips_per_replica: int
+    total_chips: int
+    serve: Optional[object] = None
+
+    def __str__(self) -> str:
+        return (f"{self.arch}: {self.qps:g} QPS x {self.latency_s:g}s = "
+                f"{self.concurrent_requests} in flight / {self.per_replica}"
+                f" per replica -> {self.replicas} replicas "
+                f"({self.total_chips} x {self.chip})")
+
+
+def plan_replicas(arch: str, qps: float, seq_len: int,
+                  latency_s: float = 10.0,
+                  mesh_shape: Optional[dict] = None, chip: str = "v5e",
+                  kind: str = "decode", serve=None, backend: str = "tpu",
+                  policy: TrainPolicy = FULL_TRAIN,
+                  headroom: float = HEADROOM, profile=None,
+                  engine=None) -> FleetReport:
+    """Replicas needed to serve ``qps`` at the p99 context ``seq_len`` —
+    ROADMAP question 2.  Little's law sizes the in-flight population
+    (``L = qps x latency``); :func:`plan_max_concurrency` sizes one
+    replica; the fleet is the ceiling of the quotient."""
+    import math
+    from repro.launch import mesh as M
+    if qps <= 0 or latency_s <= 0:
+        raise ValueError(
+            f"qps ({qps}) and latency_s ({latency_s}) must be positive")
+    per = plan_max_concurrency(arch, seq_len, mesh_shape=mesh_shape,
+                               chip=chip, kind=kind, serve=serve,
+                               backend=backend, policy=policy,
+                               headroom=headroom, profile=profile,
+                               engine=engine)
+    if per.max_concurrency == 0:
+        raise ValueError(
+            f"{arch} cannot serve even one {seq_len}-token sequence on "
+            f"{chip} x {per.mesh_shape} (peak "
+            f"{per.peak_bytes / GiB:.2f} GiB vs budget "
+            f"{per.budget_bytes / GiB:.2f} GiB) — use a bigger mesh or "
+            f"chip")
+    concurrent = max(math.ceil(qps * latency_s), 1)
+    replicas = -(-concurrent // per.max_concurrency)
+    chips = M.mesh_chips(per.mesh_shape)
+    return FleetReport(
+        arch=arch, chip=chip, mesh_shape=per.mesh_shape, qps=qps,
+        latency_s=latency_s, seq_len=seq_len,
+        concurrent_requests=concurrent, per_replica=per.max_concurrency,
+        replicas=replicas, chips_per_replica=chips,
+        total_chips=replicas * chips, serve=serve)
 
 
 def adam_state_bytes(arch: str) -> int:

@@ -15,6 +15,7 @@ vision tower vs. trainable language model) is visible, as in the paper.
 
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass, field
 
@@ -44,6 +45,16 @@ class PredictedMemory:
     # per-chip constant overhead added by an applied CalibrationProfile
     # (repro.calibrate); 0 on the uncalibrated path.
     calibration_bytes: int = 0
+    # serving-fleet terms (0 unless ctx.serve is active): the paged
+    # KV-pool allocation (replaces the slen-bearing cache terms, which
+    # then report only their fixed non-paged remainder in cache_bytes)
+    # and the speculative-decode draft model's residency (params + its
+    # own pool) on the first stage.
+    pool_bytes: int = 0
+    draft_bytes: int = 0
+    # informational: pool bytes the prefix-cache hit rate saved vs. the
+    # same cell at hit-rate 0.  NOT part of peak_bytes.
+    hit_saved_bytes: int = 0
     # pipeline-parallel provenance: which of n_stages stages this
     # prediction describes (0/1 on the non-pipelined path).  predict()
     # returns the max-peak stage; predict_stages() returns all of them.
@@ -56,7 +67,8 @@ class PredictedMemory:
         return (self.param_bytes + self.grad_bytes + self.opt_bytes
                 + self.act_saved_bytes + self.act_transient_bytes
                 + self.loss_bytes + self.input_bytes + self.cache_bytes
-                + self.output_copy_bytes + self.calibration_bytes)
+                + self.output_copy_bytes + self.calibration_bytes
+                + self.pool_bytes + self.draft_bytes)
 
     def summary(self) -> str:
         rows = [("params", self.param_bytes), ("grads", self.grad_bytes),
@@ -65,8 +77,12 @@ class PredictedMemory:
                 ("loss", self.loss_bytes), ("inputs", self.input_bytes),
                 ("cache", self.cache_bytes),
                 ("out_copy", self.output_copy_bytes),
-                ("calib", self.calibration_bytes),
-                ("PEAK", self.peak_bytes)]
+                ("calib", self.calibration_bytes)]
+        if self.pool_bytes or self.draft_bytes or self.hit_saved_bytes:
+            rows += [("kv_pool", self.pool_bytes),
+                     ("draft", self.draft_bytes),
+                     ("hit_saved", self.hit_saved_bytes)]
+        rows += [("PEAK", self.peak_bytes)]
         out = "\n".join(f"  {k:<10s} {v / GiB:9.3f} GiB" for k, v in rows)
         if self.n_stages > 1:
             out = (f"  stage      {self.stage} of {self.n_stages} "
@@ -135,6 +151,35 @@ def cache_specs(rows: list[ParsedLayer]) -> list[F.TermSpec]:
                       "cache_mult"),
                 axes=("layers", "batch", None, "ffn", None), nbytes=2))
     return specs
+
+
+def _is_paged(spec: F.TermSpec) -> bool:
+    """A cache term is pool-managed iff it grows with the live context
+    (carries the ``slen`` dim).  Fixed-footprint terms — cross-attention
+    caches over the encoder, SSM states, conv tails — are allocated once
+    per sequence and never enter the block pool."""
+    return "slen" in spec.dims
+
+
+def pool_specs(rows: list[ParsedLayer]) -> list[F.TermSpec]:
+    """The slen-growing cache terms of :func:`cache_specs`, re-keyed onto
+    the ``pool_tok`` env dim: effective tokens per sequence after the
+    serve knobs (block padding, utilization slack, prefix-cache hits,
+    request mix).  With a neutral serve spec ``pool_tok == slen`` and
+    these terms are byte-identical to their contiguous originals."""
+    out = []
+    for s in cache_specs(rows):
+        if _is_paged(s):
+            out.append(F.TermSpec(
+                dims=tuple("pool_tok" if d == "slen" else d
+                           for d in s.dims),
+                axes=s.axes, nbytes=s.nbytes, mult=s.mult))
+    return out
+
+
+def fixed_cache_specs(rows: list[ParsedLayer]) -> list[F.TermSpec]:
+    """The non-paged remainder of :func:`cache_specs` (see _is_paged)."""
+    return [s for s in cache_specs(rows) if not _is_paged(s)]
 
 
 def decode_transient_groups(
@@ -251,8 +296,71 @@ def _cache_bytes(model, ctx: F.PredictContext,
     if ctx.kind == "train":
         return 0
     env = F.term_env(ctx)
+    specs = fixed_cache_specs(rows) if ctx.serve is not None \
+        else cache_specs(rows)
     return sum(F.eval_term(s, env, ctx.mesh_shape, ctx.rules)
-               for s in cache_specs(rows))
+               for s in specs)
+
+
+def _pool_terms(rows: list[ParsedLayer],
+                ctx: F.PredictContext) -> tuple[int, int]:
+    """(pool_bytes, hit_saved_bytes) of the paged KV pool — the
+    slen-growing cache terms re-priced at ``pool_tok`` tokens per
+    sequence.  hit_saved is the delta vs. the same cell with the
+    prefix-cache hit rate forced to 0 (informational, not in peak)."""
+    if ctx.kind == "train" or ctx.serve is None:
+        return 0, 0
+    import dataclasses
+    from repro.serve.pool import pool_tokens
+    specs = pool_specs(rows)
+    env = F.term_env(ctx)
+    pool = sum(F.eval_term(s, env, ctx.mesh_shape, ctx.rules)
+               for s in specs)
+    saved = 0
+    if ctx.serve.hit_bp:
+        env0 = dict(env)
+        env0["pool_tok"] = pool_tokens(
+            ctx.max_len or ctx.seq_len,
+            dataclasses.replace(ctx.serve, hit_bp=0))
+        saved = sum(F.eval_term(s, env0, ctx.mesh_shape, ctx.rules)
+                    for s in specs) - pool
+    return pool, saved
+
+
+@functools.lru_cache(maxsize=16)
+def _draft_state(arch: str, kind: str):
+    """(cfg, rows, rules) of a speculative-decode draft model — memoized:
+    a pure function of (arch, kind), parsed under FULL_TRAIN (trainability
+    is irrelevant at serve kinds, where grads/opt are zero by kind)."""
+    from repro.configs import get_config
+    from repro.core.spec import FULL_TRAIN
+    from repro.launch.mesh import arch_rules
+    from repro.models import build_model
+    cfg = get_config(arch)
+    rows = parse_model(build_model(cfg).spec, FULL_TRAIN)
+    return cfg, rows, arch_rules(cfg, kind)
+
+
+def draft_residency_bytes(ctx: F.PredictContext) -> int:
+    """Speculative-decode draft-model residency: the draft's (frozen)
+    params under ITS OWN sharding rules + fsdp flag, plus its KV pool and
+    fixed caches under the same serve knobs (minus draft_arch — drafts
+    don't nest).  Lives on the first pipeline stage with the inputs."""
+    serve = ctx.serve
+    if serve is None or not serve.draft_arch:
+        return 0
+    import dataclasses
+    from repro.core.sweep import normalize_arch
+    dcfg, drows, drules = _draft_state(normalize_arch(serve.draft_arch),
+                                       ctx.kind)
+    dctx = dataclasses.replace(
+        ctx, rules=drules, fsdp=dcfg.fsdp,
+        serve=dataclasses.replace(serve, draft_arch=""))
+    params = sum(F.param_factor(r, dctx) for r in drows)
+    env = F.term_env(dctx)
+    caches = sum(F.eval_term(s, env, dctx.mesh_shape, dctx.rules)
+                 for s in pool_specs(drows) + fixed_cache_specs(drows))
+    return params + caches
 
 
 def _decode_transients(rows: list[ParsedLayer], ctx: F.PredictContext) -> int:
@@ -320,6 +428,11 @@ class OverheadTerms:
     cache_bytes: int
     embed_gather_bytes: int
     boundary_bytes: int = 0
+    # serving-fleet terms (ctx.serve active): paged pool on the stage's
+    # rows, draft residency on the first stage, prefix-hit savings info
+    pool_bytes: int = 0
+    draft_bytes: int = 0
+    hit_saved_bytes: int = 0
 
 
 def compute_static(rows: list[ParsedLayer],
@@ -395,13 +508,17 @@ def compute_overheads(model, rows: list[ParsedLayer],
     every stage with a pipeline edge."""
     first = stage == 0
     last = stage == n_stages - 1
+    pool, hit_saved = _pool_terms(rows, ctx)
     return OverheadTerms(
         loss_bytes=_loss_terms(model.cfg, ctx) if last else 0,
         input_bytes=_input_bytes(model, kind, ctx) if first else 0,
         cache_bytes=_cache_bytes(model, ctx, rows),
         embed_gather_bytes=_embed_gather_bytes(rows, ctx),
         boundary_bytes=_boundary_bytes(model.cfg, ctx, kind, stage,
-                                       n_stages))
+                                       n_stages),
+        pool_bytes=pool,
+        draft_bytes=draft_residency_bytes(ctx) if first else 0,
+        hit_saved_bytes=hit_saved)
 
 
 def assemble(static: StaticTerms, acts: ActTermsAgg, over: OverheadTerms,
@@ -426,6 +543,8 @@ def assemble(static: StaticTerms, acts: ActTermsAgg, over: OverheadTerms,
         loss_bytes=over.loss_bytes, input_bytes=over.input_bytes,
         cache_bytes=over.cache_bytes,
         output_copy_bytes=static.output_copy_bytes,
+        pool_bytes=over.pool_bytes, draft_bytes=over.draft_bytes,
+        hit_saved_bytes=over.hit_saved_bytes,
         stage=stage, n_stages=n_stages)
     for path, p, g, o, trainable in static.per_module:
         out.per_module[path] = {"param": p, "grad": g, "opt": o, "act": 0,

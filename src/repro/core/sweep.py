@@ -128,6 +128,18 @@ class SweepGrid:
     # measurement-fitted CalibrationProfile (repro.calibrate) applied to
     # every cell; its hash participates in the engine's memo keys
     profile: object = None
+    # serving-fleet knobs (serve kinds only; the all-neutral combo is
+    # normalized to serve=None so it stays bit-identical to a pre-serve
+    # cell): paged-KV block sizes (0 = contiguous), pool utilizations,
+    # prefix-cache hit rates over a shared prefix_len-token prefix,
+    # request mixes (repro.serve.fleet.RequestMix or None), and
+    # speculative-decode draft arches ("" = none).
+    block_sizes: Sequence[int] = (0,)
+    utilizations: Sequence[float] = (1.0,)
+    prefix_hit_rates: Sequence[float] = (0.0,)
+    prefix_len: int = 0
+    mixes: Sequence = (None,)
+    draft_archs: Sequence[str] = ("",)
 
     def meshes(self) -> list[dict]:
         from repro.launch.mesh import enumerate_meshes
@@ -141,6 +153,36 @@ class SweepGrid:
                                         self.max_axis))
         return out
 
+    def serve_specs(self) -> tuple:
+        """The serve axis: one Optional[ServeSpec] per combination of the
+        serving-fleet knob lists, in deterministic cross-product order.
+        The all-neutral combination maps to ``None`` (no serve spec), so
+        a default grid has a single-element ``(None,)`` axis and every
+        cell is bit-identical to a pre-serve sweep."""
+        from repro.serve.fleet import RequestMix
+        from repro.serve.pool import ServeSpec
+        mixes = self.mixes if isinstance(self.mixes, (tuple, list)) \
+            else (self.mixes,)
+        mixes = tuple(mixes) or (None,)
+        out = []
+        for b in _seq(self.block_sizes):
+            for u in _seq(self.utilizations):
+                for h in _seq(self.prefix_hit_rates):
+                    for m in mixes:
+                        if m is not None and not isinstance(m, RequestMix):
+                            raise ValueError(
+                                f"mixes entries must be RequestMix or "
+                                f"None, got {m!r}")
+                        for d in _seq(self.draft_archs):
+                            spec = ServeSpec.make(
+                                block_size=int(b or 0),
+                                utilization=float(u),
+                                prefix_hit_rate=float(h),
+                                prefix_len=int(self.prefix_len),
+                                mix=m, draft_arch=str(d or ""))
+                            out.append(None if spec.is_neutral else spec)
+        return tuple(out)
+
     def size(self) -> int:
         """Cheap cell cardinality: exactly ``sum(1 for _ in cells())``
         without yielding a single cell object — guard rails for CLI users
@@ -150,8 +192,8 @@ class SweepGrid:
         return (len(_seq(self.arch)) * len(_seq(self.chip))
                 * len(self.meshes()) * len(_seq(self.optimizers))
                 * len(_seq(self.remats)) * len(_seq(self.schedules))
-                * len(_seq(self.microbatches)) * pairs
-                * len(_seq(self.seq_lens)))
+                * len(_seq(self.microbatches)) * len(self.serve_specs())
+                * pairs * len(_seq(self.seq_lens)))
 
     def check_schedules(self) -> tuple:
         """Validate the schedule axis up front — the columnar path never
@@ -183,12 +225,30 @@ class SweepGrid:
                 for seq in _seq(self.seq_lens):
                     PL.check_parallel(cfg, mesh, self.kind, int(seq))
 
+    def check_serve(self) -> None:
+        """Validate the serving-fleet knob axes up front through the SAME
+        ``planner.check_serve`` gate the per-cell path hits in
+        ``make_context`` — both sweep modes and the CLI reject an
+        invalid serve grid with one clean ValueError.  Range errors
+        (hit rate outside [0,1] etc.) surface from ServeSpec
+        construction inside ``serve_specs()`` itself."""
+        from repro.configs import get_config
+        specs = self.serve_specs()
+        if all(s is None for s in specs):
+            return
+        for arch in _seq(self.arch):
+            cfg = get_config(normalize_arch(arch))
+            for spec in specs:
+                PL.check_serve(cfg, spec, self.kind)
+
     def cells(self) -> Iterator["SweepCell"]:
         """Deterministic cell enumeration (first-fit order: cheap knobs
         vary fastest)."""
         self.check_schedules()
         self.check_parallel()
+        self.check_serve()
         meshes = self.meshes()
+        serves = self.serve_specs()
         for arch in _seq(self.arch):
             arch = normalize_arch(arch)
             for chip in _seq(self.chip):
@@ -197,12 +257,13 @@ class SweepGrid:
                         for remat in _seq(self.remats):
                             for sched in _seq(self.schedules):
                                 for mb in _seq(self.microbatches):
-                                    yield from self._inner_cells(
-                                        arch, chip, mesh, opt, remat,
-                                        sched, int(mb))
+                                    for srv in serves:
+                                        yield from self._inner_cells(
+                                            arch, chip, mesh, opt, remat,
+                                            sched, int(mb), srv)
 
     def _inner_cells(self, arch, chip, mesh, opt, remat, sched,
-                     mb) -> Iterator["SweepCell"]:
+                     mb, srv=None) -> Iterator["SweepCell"]:
         for accum in _seq(self.grad_accums):
             for gb in _seq(self.global_batches):
                 if gb % accum:
@@ -215,7 +276,7 @@ class SweepGrid:
                         schedule=sched, microbatches=mb,
                         grad_accum=int(accum), global_batch=int(gb),
                         seq_len=int(seq), kind=self.kind,
-                        backend=self.backend)
+                        backend=self.backend, serve=srv)
 
 
 @dataclass(frozen=True)
@@ -234,6 +295,9 @@ class SweepCell:
     backend: str
     schedule: str = "1f1b"
     microbatches: int = 1
+    # Optional repro.serve.pool.ServeSpec (frozen/hashable); None when
+    # every serving-fleet knob is neutral
+    serve: Optional[object] = None
 
     @property
     def mesh_shape(self) -> dict:
@@ -265,6 +329,13 @@ class SweepResult:
     fits: bool
     schedule: str = "1f1b"
     microbatches: int = 1
+    # serving-fleet provenance: the cell's ServeSpec (None when neutral)
+    # and the peak stage's pool / draft / hit-savings bytes (all 0 when
+    # serve is None)
+    serve: Optional[object] = None
+    pool_bytes: int = 0
+    draft_bytes: int = 0
+    hit_saved_bytes: int = 0
     prediction: Optional[PR.PredictedMemory] = None
 
     @property
@@ -307,6 +378,12 @@ _COLUMNS = ("arch", "chip", "mesh", "optimizer", "remat", "sched",
             "micro", "accum", "batch", "seq", "peak_gib", "budget_gib",
             "fits")
 
+# serve columns appended when the grid has any active serving-fleet knob
+# (the writers would otherwise silently drop the new SweepResult fields):
+# per-sequence block count, pool/prefix-savings/draft bytes in GiB.
+_SERVE_COLUMNS = ("block", "blocks_per_seq", "hit", "pool_gib",
+                  "hit_saved_gib", "draft_gib")
+
 
 def _row_of(r: SweepResult) -> tuple:
     return (r.arch, r.chip, r.mesh_str, r.optimizer, r.remat,
@@ -314,6 +391,17 @@ def _row_of(r: SweepResult) -> tuple:
             r.grad_accum, r.global_batch, r.seq_len,
             f"{r.peak_bytes / GiB:.3f}", f"{r.budget_bytes / GiB:.3f}",
             "yes" if r.fits else "NO")
+
+
+def _serve_row_of(r: SweepResult) -> tuple:
+    from repro.serve.pool import pool_blocks
+    s = r.serve
+    return (s.block_size if s else 0,
+            pool_blocks(r.seq_len, s),
+            f"{(s.hit_bp if s else 0) / 10000:.2f}",
+            f"{r.pool_bytes / GiB:.3f}",
+            f"{r.hit_saved_bytes / GiB:.3f}",
+            f"{r.draft_bytes / GiB:.3f}")
 
 
 class SweepResults:
@@ -474,18 +562,36 @@ class SweepResults:
             return rows[:limit], len(rows) - limit
         return rows, 0
 
+    def _serve_active(self) -> bool:
+        """True when the grid swept any non-neutral serving-fleet knob —
+        the report then carries the serve columns instead of silently
+        dropping the pool/draft fields."""
+        try:
+            return any(s is not None for s in self.grid.serve_specs())
+        except (AttributeError, ValueError):
+            return False
+
+    def _report_columns(self):
+        if self._serve_active():
+            def row(r):
+                return _row_of(r) + _serve_row_of(r)
+            return _COLUMNS + _SERVE_COLUMNS, row
+        return _COLUMNS, _row_of
+
     def to_markdown(self, limit: Optional[int] = None,
                     title: str = "") -> str:
         rows, dropped = self._top_rows(limit)
-        out = RPT.markdown_table(_COLUMNS, [_row_of(r) for r in rows],
+        cols, row_of = self._report_columns()
+        out = RPT.markdown_table(cols, [row_of(r) for r in rows],
                                  title=title)
         if dropped:
             out += f"\n\n_... {dropped} more cells (use to_csv() for all)_"
         return out
 
     def to_csv(self) -> str:
-        return RPT.csv_table(_COLUMNS,
-                             [_row_of(r) for r in self.sorted_results()])
+        cols, row_of = self._report_columns()
+        return RPT.csv_table(cols,
+                             [row_of(r) for r in self.sorted_results()])
 
 
 # ---------------------------------------------------------------------------
@@ -567,7 +673,7 @@ class SweepEngine:
             acts = self._acts[akey] = PR.compute_acts(rows, ctx, ctx.kind)
 
         okey = base + (ctx.global_batch, ctx.micro_batch, ctx.seq_len,
-                       ctx.enc_seq, ctx.max_len)
+                       ctx.enc_seq, ctx.max_len, ctx.serve)
         over = self._over.get(okey)
         if over is None:
             over = self._over[okey] = PR.compute_overheads(
@@ -597,7 +703,7 @@ class SweepEngine:
         pkey = (base, "pipelined", ctx.optimizer, ctx.eff_grad_bytes,
                 ctx.remat, ctx.pp_micro_batch, ctx.global_batch,
                 ctx.seq_len, ctx.enc_seq, ctx.max_len, m, ctx.schedule,
-                phash, chip if phash is not None else None)
+                ctx.serve, phash, chip if phash is not None else None)
         pred = self._pred.get(pkey)
         if pred is not None:
             return pred
@@ -620,7 +726,8 @@ class SweepEngine:
                 acts = self._acts[akey] = PR.compute_acts(
                     list(srows), ctx, ctx.kind, stash=stash)
             okey = sbase + (ctx.global_batch, ctx.pp_micro_batch,
-                            ctx.seq_len, ctx.enc_seq, ctx.max_len, m)
+                            ctx.seq_len, ctx.enc_seq, ctx.max_len, m,
+                            ctx.serve)
             over = self._over.get(okey)
             if over is None:
                 over = self._over[okey] = PR.compute_overheads(
@@ -645,7 +752,7 @@ class SweepEngine:
                               grad_accum=cell.grad_accum, remat=cell.remat,
                               optimizer=cell.optimizer,
                               microbatches=cell.microbatches,
-                              schedule=cell.schedule)
+                              schedule=cell.schedule, serve=cell.serve)
         pred = self.predict_cell(cell.arch, policy, ctx, profile=profile,
                                  chip=cell.chip)
         budget = int(PL.chip_hbm(cell.chip) * headroom)
@@ -657,6 +764,9 @@ class SweepEngine:
             global_batch=cell.global_batch, seq_len=cell.seq_len,
             kind=cell.kind, backend=cell.backend,
             schedule=cell.schedule, microbatches=cell.microbatches,
+            serve=cell.serve, pool_bytes=pred.pool_bytes,
+            draft_bytes=pred.draft_bytes,
+            hit_saved_bytes=pred.hit_saved_bytes,
             peak_bytes=pred.peak_bytes, budget_bytes=budget,
             fits=pred.peak_bytes <= budget,
             prediction=pred if keep_prediction else None)
@@ -667,7 +777,7 @@ class SweepEngine:
                remat: Optional[str] = None,
                optimizer: Optional[str] = None, chip: str = "v5e",
                profile=None, microbatches: int = 1,
-               schedule: str = "1f1b") -> PL.PlanReport:
+               schedule: str = "1f1b", serve=None) -> PL.PlanReport:
         """PlanReport-shaped single-cell evaluation (planner.plan's
         memoized backend); byte-identical to ``planner.check``."""
         shape = PL._resolve_shape(shape)
@@ -678,7 +788,7 @@ class SweepEngine:
                               grad_accum=grad_accum, remat=remat,
                               optimizer=optimizer,
                               microbatches=microbatches,
-                              schedule=schedule)
+                              schedule=schedule, serve=serve)
         pred = self.predict_cell(arch, policy, ctx, profile=profile,
                                  chip=chip)
         return PL.PlanReport(arch=arch, shape=shape.name,
@@ -736,6 +846,10 @@ def _int_list(s: str) -> tuple[int, ...]:
     return tuple(int(x) for x in s.split(",") if x)
 
 
+def _float_list(s: str) -> tuple[float, ...]:
+    return tuple(float(x) for x in s.split(",") if x)
+
+
 def _str_list(s: Optional[str]) -> tuple:
     if not s:
         return (None,)
@@ -787,6 +901,13 @@ def _cardinality_table(grid: SweepGrid) -> str:
         ("seq len", len(_seq(grid.seq_lens)),
          _preview(_seq(grid.seq_lens))),
     ]
+    serves = grid.serve_specs()
+    if any(s is not None for s in serves):
+        rows.insert(-2, ("serve", len(serves), _preview(
+            ["neutral" if s is None else
+             f"b{s.block_size}/u{s.util_bp / 10000:g}/h{s.hit_bp / 10000:g}"
+             + (f"/d:{s.draft_arch}" if s.draft_arch else "")
+             for s in serves])))
     out = [f"  {'knob':<14s} {'count':>5s}  values"]
     for name, count, vals in rows:
         out.append(f"  {name:<14s} {count:>5d}  {vals}")
@@ -861,6 +982,29 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                    help="sequence lengths")
     p.add_argument("--kind", default="train",
                    choices=("train", "prefill", "decode"))
+    p.add_argument("--block-size", type=_int_list, default=(0,),
+                   metavar="B,B,...",
+                   help="paged-KV block sizes in tokens (0 = contiguous; "
+                        "positive values must be multiples of 8); serve "
+                        "kinds only")
+    p.add_argument("--utilization", type=_float_list, default=(1.0,),
+                   metavar="U,U,...",
+                   help="KV-pool utilizations in (0,1]; allocated pool "
+                        "bytes are inflated by 1/U (fragmentation slack)")
+    p.add_argument("--prefix-hit-rate", type=_float_list, default=(0.0,),
+                   metavar="H,H,...",
+                   help="prefix-cache hit rates in [0,1] over the shared "
+                        "--prefix-len token prefix")
+    p.add_argument("--prefix-len", type=int, default=0,
+                   help="shared-prefix token count the hit rate discounts")
+    p.add_argument("--mix", action="append", default=None,
+                   metavar="P[:LxW,...]",
+                   help="in-flight request mix: prefill fraction P plus "
+                        "an optional final-context histogram, e.g. "
+                        "0.3:512x1,2048x3 (repeatable)")
+    p.add_argument("--draft-arch", default="",
+                   help="comma list of speculative-decode draft arches "
+                        "('' = none); decode kind only")
     p.add_argument("--policy", default="full", choices=sorted(POLICIES))
     p.add_argument("--backend", default="tpu", choices=("tpu", "cpu"))
     p.add_argument("--headroom", type=float, default=PL.HEADROOM)
@@ -897,6 +1041,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 raise ValueError(
                     f"unknown schedule {s!r}; known: {SCHEDULES}")
         meshes = [_parse_mesh(m) for m in args.mesh] if args.mesh else None
+        from repro.serve.fleet import parse_mix
+        mixes = tuple(parse_mix(m) for m in args.mix) if args.mix \
+            else (None,)
     except (KeyError, ValueError) as e:
         p.error(str(e))
     profile = None
@@ -929,12 +1076,20 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         grad_accums=args.accum, global_batches=args.batch,
         seq_lens=args.seq_len, kind=args.kind,
         policy=POLICIES[args.policy], backend=args.backend,
-        headroom=args.headroom, profile=profile)
+        headroom=args.headroom, profile=profile,
+        block_sizes=args.block_size, utilizations=args.utilization,
+        prefix_hit_rates=args.prefix_hit_rate,
+        prefix_len=args.prefix_len, mixes=mixes,
+        draft_archs=tuple(args.draft_arch.split(","))
+        if args.draft_arch else ("",))
     try:
         # reject ep-on-dense / ep > n_experts / cp-on-decode /
-        # non-divisible cp with a clean argparse error, before any
-        # evaluation (and before --dry-run estimates a doomed grid)
+        # non-divisible cp — and serve knobs on train kinds / bad block
+        # alignment / out-of-range rates / unknown draft arches — with a
+        # clean argparse error, before any evaluation (and before
+        # --dry-run estimates a doomed grid)
         grid.check_parallel()
+        grid.check_serve()
     except ValueError as e:
         p.error(str(e))
 

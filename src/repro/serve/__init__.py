@@ -1,2 +1,26 @@
-from repro.serve.serve_step import make_prefill_step, make_decode_step  # noqa: F401
-from repro.serve.serve_step import generate, pad_cache  # noqa: F401
+"""Serving: jit'd prefill/decode steps plus the fleet memory model.
+
+``pool``/``fleet`` are pure-python (importable without jax — the sweep
+and planner paths need them cheaply); the jax-backed serve-step entry
+points are re-exported lazily so ``from repro.serve import pool`` never
+pays for (or requires) a jax import.
+"""
+
+from repro.serve.fleet import RequestMix, expected_len, parse_mix  # noqa: F401
+from repro.serve.pool import (PAGE_TOKENS, PoolAccounting,  # noqa: F401
+                              ServeSpec, pool_accounting, pool_blocks,
+                              pool_tokens)
+
+_STEP_EXPORTS = ("make_prefill_step", "make_decode_step", "generate",
+                 "pad_cache")
+
+
+def __getattr__(name):
+    if name in _STEP_EXPORTS:
+        from repro.serve import serve_step
+        return getattr(serve_step, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_STEP_EXPORTS))

@@ -35,11 +35,34 @@ CANON_CHIP = "v5e"
 CANON_BACKEND = "tpu"
 KINDS = ("train", "prefill", "decode")
 
+#: paged-serving snapshot leg: decode at the SAME canonical cell under
+#: fixed serving-fleet knobs (no draft model, so each golden stays a
+#: one-arch artifact); the plain "decode" leg above keeps freezing the
+#: contiguous-KV path
+SERVE_KIND = "decode_paged"
+
 #: PredictedMemory fields frozen per cell, in assertion order
 COMPONENTS = ("param_bytes", "grad_bytes", "opt_bytes", "act_saved_bytes",
               "act_transient_bytes", "loss_bytes", "input_bytes",
               "cache_bytes", "output_copy_bytes", "calibration_bytes",
               "peak_bytes")
+
+#: the serve leg additionally freezes the paged-KV pool, the prefix-hit
+#: savings and the (zero, draft-free) draft residency
+SERVE_COMPONENTS = COMPONENTS + ("pool_bytes", "hit_saved_bytes",
+                                 "draft_bytes")
+
+
+def canon_serve():
+    """The fixed ServeSpec of the decode_paged leg: 16-token blocks at
+    0.9 pool utilization, 0.5 prefix-cache hit rate over a 256-token
+    shared prefix, and a 25%-prefill request mix."""
+    from repro.serve.fleet import RequestMix
+    from repro.serve.pool import ServeSpec
+    return ServeSpec.make(
+        block_size=16, utilization=0.9, prefix_hit_rate=0.5,
+        prefix_len=256,
+        mix=RequestMix.make(0.25, ((512, 1), (CANON_SEQ, 3))))
 
 #: fixed non-identity profile for the calibrated leg (never fitted — its
 #: only job is to exercise the scaled path deterministically)
@@ -51,20 +74,26 @@ GOLDEN_PROFILE = CalibrationProfile(
 
 def snapshot(arch: str, engine=None) -> dict:
     """The golden payload for one arch: kind -> raw/calibrated ->
-    components (+ the per-module table on the raw leg)."""
+    components (+ the per-module table on the raw leg).  Kinds are the
+    three step kinds plus ``decode_paged`` (decode under the fixed
+    :func:`canon_serve` serving-fleet knobs)."""
     from repro.core import sweep as SW
     engine = engine or SW.SweepEngine()
     budget = int(PL.chip_hbm(CANON_CHIP) * PL.HEADROOM)
     out: dict = {}
-    for kind in KINDS:
-        shape = ShapeConfig("golden", CANON_SEQ, CANON_BATCH, kind)
+    for kind in KINDS + (SERVE_KIND,):
+        serve = canon_serve() if kind == SERVE_KIND else None
+        comps = SERVE_COMPONENTS if kind == SERVE_KIND else COMPONENTS
+        shape = ShapeConfig("golden", CANON_SEQ, CANON_BATCH,
+                            "decode" if kind == SERVE_KIND else kind)
         per: dict = {}
         for variant, profile in (("raw", None),
                                  ("calibrated", GOLDEN_PROFILE)):
             rep = engine.report(arch, shape, dict(CANON_MESH),
                                 backend=CANON_BACKEND, budget_bytes=budget,
-                                chip=CANON_CHIP, profile=profile)
-            comp = {c: int(getattr(rep.prediction, c)) for c in COMPONENTS}
+                                chip=CANON_CHIP, profile=profile,
+                                serve=serve)
+            comp = {c: int(getattr(rep.prediction, c)) for c in comps}
             if variant == "raw":
                 comp["per_module"] = {
                     path: {k: (int(v) if k != "trainable" else bool(v))

@@ -1,0 +1,457 @@
+"""Serving-fleet memory model (serve/pool.py, serve/fleet.py, the serve
+TermSpec seams in core/predictor.py + core/batch.py, and the planner
+fleet queries).
+
+Covers the ISSUE-6 test checklist: exact pool-ledger math (conservation,
+block alignment), ServeSpec/check_serve validation negative paths, the
+neutral-knob bit-parity guarantee (all-neutral serve == no serve at
+all), plan_max_concurrency / plan_replicas over the full decode-capable
+zoo, a columnar/scalar byte-parity grid including speculative-decode
+drafts, and the serve-column report writers.  The hypothesis twin over
+random serve specs lives in tests/test_serve_property.py.
+"""
+
+import pytest
+
+from repro.configs import ShapeConfig, get_config, registered_archs
+from repro.core import planner as PL
+from repro.core import sweep as SW
+from repro.serve.fleet import BP, RequestMix, expected_len, parse_mix
+from repro.serve.pool import (PAGE_TOKENS, ServeSpec, pool_accounting,
+                              pool_blocks, pool_tokens)
+
+GiB = 1 << 30
+
+# a mid-size serve spec with every knob active (the canonical test cell)
+FULL_SPEC = ServeSpec.make(block_size=16, utilization=0.9,
+                           prefix_hit_rate=0.5, prefix_len=256,
+                           mix=RequestMix.make(0.25, ((512, 1), (2048, 3))))
+
+
+# ---------------------------------------------------------------------------
+# request-mix math (serve/fleet.py)
+# ---------------------------------------------------------------------------
+
+
+def test_expected_len_identity():
+    assert expected_len(4096, None) == 4096
+    assert expected_len(4096, RequestMix()) == 4096
+    assert RequestMix().is_identity
+    assert not RequestMix.make(0.3).is_identity
+
+
+def test_expected_len_histogram_mean_capped_at_seq_len():
+    # plain decode-only histogram: exact floor mean of the capped lengths
+    mix = RequestMix.make(0.0, ((512, 1), (2048, 3)))
+    assert expected_len(4096, mix) == (512 + 3 * 2048) // 4
+    # lengths above the cell's KV capacity are clamped to seq_len
+    assert expected_len(1024, mix) == (512 + 3 * 1024) // 4
+
+
+def test_expected_len_prefill_midpoint():
+    # pure prefill phase is charged the chunked-prefill midpoint len//2
+    assert expected_len(4096, RequestMix.make(1.0)) == 4096 // 2
+    # 50/50 mix: (len + len//2) / 2
+    assert expected_len(4096, RequestMix.make(0.5)) == (4096 + 2048) // 2
+    # never below one live token
+    assert expected_len(1, RequestMix.make(1.0)) == 1
+
+
+def test_request_mix_validation():
+    with pytest.raises(ValueError, match="outside"):
+        RequestMix(prefill_bp=BP + 1)
+    with pytest.raises(ValueError, match="positive length"):
+        RequestMix(hist=((0, 1),))
+    with pytest.raises(ValueError, match="positive length"):
+        RequestMix(hist=((512, 0),))
+
+
+def test_parse_mix_syntax():
+    assert parse_mix("") is None
+    assert parse_mix("0") is None                    # identity -> None
+    mix = parse_mix("0.25:512x1,2048x3")
+    assert mix == RequestMix.make(0.25, ((512, 1), (2048, 3)))
+    assert parse_mix("0.3") == RequestMix.make(0.3)
+    with pytest.raises(ValueError, match="not a number"):
+        parse_mix("lots:512x1")
+    with pytest.raises(ValueError, match="LENxWEIGHT"):
+        parse_mix("0.3:512")
+
+
+# ---------------------------------------------------------------------------
+# block-pool ledger (serve/pool.py)
+# ---------------------------------------------------------------------------
+
+LEDGER_SPECS = (
+    ServeSpec(),                                       # neutral
+    ServeSpec.make(block_size=16),
+    ServeSpec.make(block_size=16, utilization=0.9),
+    ServeSpec.make(utilization=0.7),                   # contiguous
+    ServeSpec.make(block_size=32, prefix_hit_rate=1.0, prefix_len=512),
+    FULL_SPEC,
+)
+
+
+@pytest.mark.parametrize("spec", LEDGER_SPECS)
+@pytest.mark.parametrize("seq_len", (1, 17, 1024, 4096))
+def test_pool_ledger_conservation(spec, seq_len):
+    acc = pool_accounting(seq_len, spec)
+    # conservation: every pool token is live-unique, padding, or frag
+    assert acc.pool_tokens == acc.unique + acc.pad_slack + acc.frag_slack
+    assert acc.alloc_tokens == acc.unique + acc.pad_slack
+    assert acc.pad_slack >= 0 and acc.frag_slack >= 0
+    assert 0 <= acc.shared <= acc.live
+    assert acc.unique == acc.live - spec.hit_bp * acc.shared // BP
+    if spec.block_size:
+        # a block allocator hands out whole blocks only
+        assert acc.alloc_tokens == acc.blocks * spec.block_size
+        assert acc.pool_tokens % spec.block_size == 0
+        assert acc.pool_tokens >= acc.alloc_tokens
+    else:
+        assert acc.blocks == 0 and acc.alloc_tokens == acc.unique
+
+
+def test_pool_tokens_neutral_degenerates_to_seq_len():
+    assert pool_tokens(4096, None) == 4096
+    assert pool_tokens(4096, ServeSpec()) == 4096
+    assert pool_blocks(4096, None) == 0
+
+
+def test_pool_exact_when_fully_utilized_contiguous():
+    # util=1 + block=0 is exactly the contiguous KV byte count
+    mix = RequestMix.make(0.5, ((1024, 1),))
+    spec = ServeSpec.make(mix=mix)
+    assert pool_tokens(4096, spec) == expected_len(4096, mix)
+
+
+def test_pool_hit_rate_discounts_shared_prefix():
+    base = ServeSpec.make(block_size=16)
+    hit = ServeSpec.make(block_size=16, prefix_hit_rate=0.5,
+                         prefix_len=256)
+    full = ServeSpec.make(block_size=16, prefix_hit_rate=1.0,
+                          prefix_len=256)
+    assert pool_tokens(1024, hit) < pool_tokens(1024, base)
+    # a guaranteed hit removes the whole shared prefix
+    acc = pool_accounting(1024, full)
+    assert acc.unique == 1024 - 256
+    # prefix longer than the context: sharing caps at the live length
+    capped = pool_accounting(100, full)
+    assert capped.shared == 100 and capped.unique == 0
+
+
+def test_pool_utilization_inflates_in_whole_blocks():
+    spec = ServeSpec.make(block_size=16, utilization=0.9)
+    acc = pool_accounting(1024, spec)
+    assert acc.blocks == 64
+    assert acc.pool_tokens == -(-64 * BP // spec.util_bp) * 16  # 72 blocks
+    # contiguous inflation is token-granular
+    acc2 = pool_accounting(1024, ServeSpec.make(utilization=0.9))
+    assert acc2.pool_tokens == -(-1024 * BP // 9000)
+
+
+def test_serve_spec_validation():
+    with pytest.raises(ValueError, match="page-aligned"):
+        ServeSpec(block_size=12)                 # not a multiple of 8
+    with pytest.raises(ValueError, match="page-aligned"):
+        ServeSpec(block_size=-8)
+    with pytest.raises(ValueError, match="utilization"):
+        ServeSpec(util_bp=0)
+    with pytest.raises(ValueError, match="utilization"):
+        ServeSpec.make(utilization=1.5)
+    with pytest.raises(ValueError, match="hit rate"):
+        ServeSpec.make(prefix_hit_rate=-0.1)
+    with pytest.raises(ValueError, match="negative"):
+        ServeSpec(prefix_len=-1)
+    with pytest.raises(ValueError, match="prefix-len"):
+        ServeSpec.make(prefix_hit_rate=0.5)      # hit without a prefix
+    assert ServeSpec(block_size=PAGE_TOKENS).block_size == 8
+
+
+def test_serve_spec_neutrality():
+    assert ServeSpec().is_neutral
+    assert ServeSpec.make(mix=RequestMix()).is_neutral
+    for spec in (ServeSpec.make(block_size=16),
+                 ServeSpec.make(utilization=0.9),
+                 ServeSpec.make(prefix_hit_rate=0.1, prefix_len=1),
+                 ServeSpec.make(mix=RequestMix.make(0.3)),
+                 ServeSpec.make(draft_arch="smollm-360m")):
+        assert not spec.is_neutral
+
+
+# ---------------------------------------------------------------------------
+# check_serve / make_context validation gate
+# ---------------------------------------------------------------------------
+
+
+def test_check_serve_rejects_serve_on_train():
+    cfg = get_config("smollm-360m")
+    with pytest.raises(ValueError, match="train"):
+        PL.check_serve(cfg, ServeSpec.make(block_size=16), "train")
+    # neutral specs pass everywhere (they are normalized away)
+    PL.check_serve(cfg, ServeSpec(), "train")
+    PL.check_serve(cfg, None, "train")
+
+
+def test_check_serve_rejects_draft_off_decode():
+    cfg = get_config("smollm-360m")
+    with pytest.raises(ValueError, match="decode"):
+        PL.check_serve(cfg, ServeSpec.make(draft_arch="smollm-360m"),
+                       "prefill")
+
+
+def test_check_serve_rejects_unknown_draft():
+    cfg = get_config("llama3.2-3b")
+    with pytest.raises(ValueError, match="unknown draft arch"):
+        PL.check_serve(cfg, ServeSpec.make(draft_arch="gpt17"), "decode")
+
+
+def test_make_context_normalizes_neutral_serve():
+    cfg = get_config("smollm-360m")
+    ctx = PL.make_context(cfg, {"data": 2}, kind="decode",
+                          global_batch=8, seq_len=1024,
+                          serve=ServeSpec())
+    assert ctx.serve is None
+    ctx2 = PL.make_context(cfg, {"data": 2}, kind="decode",
+                           global_batch=8, seq_len=1024, serve=FULL_SPEC)
+    assert ctx2.serve == FULL_SPEC
+
+
+def test_neutral_serve_bit_identical_to_no_serve(sweep_engine):
+    shape = ShapeConfig("t", 2048, 8, "decode")
+    base = sweep_engine.report("llama3.2-3b", shape, {"data": 2},
+                               budget_bytes=16 * GiB)
+    neut = sweep_engine.report("llama3.2-3b", shape, {"data": 2},
+                               budget_bytes=16 * GiB, serve=ServeSpec())
+    assert neut.prediction is base.prediction    # same memo key
+    assert neut.peak_bytes == base.peak_bytes
+    assert neut.prediction.pool_bytes == 0
+    assert neut.prediction.draft_bytes == 0
+    assert neut.prediction.hit_saved_bytes == 0
+
+
+def test_paged_serve_changes_only_serve_components(sweep_engine):
+    shape = ShapeConfig("t", 2048, 8, "decode")
+    base = sweep_engine.report("llama3.2-3b", shape, {"data": 2},
+                               budget_bytes=16 * GiB).prediction
+    srv = sweep_engine.report("llama3.2-3b", shape, {"data": 2},
+                              budget_bytes=16 * GiB,
+                              serve=FULL_SPEC).prediction
+    # weights/acts are serving-invariant; only the KV terms move
+    assert srv.param_bytes == base.param_bytes
+    assert srv.act_saved_bytes == base.act_saved_bytes
+    assert srv.pool_bytes > 0
+    assert srv.hit_saved_bytes >= 0
+
+
+# ---------------------------------------------------------------------------
+# planner fleet queries (ROADMAP questions 1 + 2)
+# ---------------------------------------------------------------------------
+
+# smallest {"data": 1, "model": N} replica mesh that serves each zoo
+# arch at 2048 tokens on one v5e (from the probe in the PR notes)
+REPLICA_MODEL_DEGREE = {
+    "arctic-480b": 64,
+    "deepseek-v2-lite-16b": 4,
+    "llama3.1-8b": 4,
+    "llama3.2-3b": 1,
+    "llava-next-mistral-7b": 1,
+    "llava15-7b": 1,
+    "mamba2-1.3b": 1,
+    "minicpm3-4b": 1,
+    "qwen3-32b": 16,
+    "seamless-m4t-large-v2": 1,
+    "smollm-360m": 1,
+    "zamba2-2.7b": 1,
+}
+
+
+def test_replica_mesh_map_covers_the_zoo():
+    assert set(REPLICA_MODEL_DEGREE) == set(registered_archs())
+
+
+@pytest.mark.parametrize("arch", sorted(REPLICA_MODEL_DEGREE))
+def test_plan_max_concurrency_all_decode_arches(arch, sweep_engine):
+    mesh = {"data": 1, "model": REPLICA_MODEL_DEGREE[arch]}
+    rep = PL.plan_max_concurrency(arch, 2048, mesh_shape=mesh,
+                                  engine=sweep_engine)
+    assert rep.max_concurrency >= 1
+    assert rep.peak_bytes <= rep.budget_bytes
+    assert rep.kind == "decode" and rep.seq_len == 2048
+
+
+def test_plan_max_concurrency_is_maximal(sweep_engine):
+    rep = PL.plan_max_concurrency("llama3.2-3b", 2048, engine=sweep_engine)
+    shape = ShapeConfig("t", 2048, rep.max_concurrency + 1, "decode")
+    over = sweep_engine.report("llama3.2-3b", shape, rep.mesh_shape,
+                               budget_bytes=rep.budget_bytes)
+    assert over.peak_bytes > rep.budget_bytes    # one more seq OOMs
+
+
+def test_plan_max_concurrency_zero_when_nothing_fits(sweep_engine):
+    rep = PL.plan_max_concurrency("arctic-480b", 2048,
+                                  mesh_shape={"data": 1, "model": 1},
+                                  engine=sweep_engine)
+    assert rep.max_concurrency == 0
+    assert rep.peak_bytes > rep.budget_bytes
+
+
+def test_prefix_hits_never_reduce_concurrency(sweep_engine):
+    base = PL.plan_max_concurrency("llama3.2-3b", 2048,
+                                   engine=sweep_engine)
+    hit = PL.plan_max_concurrency(
+        "llama3.2-3b", 2048, engine=sweep_engine,
+        serve=ServeSpec.make(prefix_hit_rate=0.9, prefix_len=1024))
+    assert hit.max_concurrency >= base.max_concurrency
+
+
+def test_plan_replicas_consistent_with_concurrency(sweep_engine):
+    fleet = PL.plan_replicas("llama3.2-3b", qps=20, seq_len=2048,
+                             latency_s=10.0, engine=sweep_engine)
+    assert fleet.concurrent_requests == 200        # Little's law
+    per = fleet.per_replica
+    assert fleet.replicas == -(-fleet.concurrent_requests // per)
+    assert fleet.total_chips == fleet.replicas * fleet.chips_per_replica
+    assert "replicas" in str(fleet)
+
+
+def test_plan_replicas_validation(sweep_engine):
+    with pytest.raises(ValueError, match="positive"):
+        PL.plan_replicas("smollm-360m", qps=0, seq_len=1024,
+                         engine=sweep_engine)
+    with pytest.raises(ValueError, match="bigger mesh"):
+        PL.plan_replicas("arctic-480b", qps=1, seq_len=2048,
+                         mesh_shape={"data": 1, "model": 1},
+                         engine=sweep_engine)
+
+
+# ---------------------------------------------------------------------------
+# columnar/scalar byte-parity on a serve grid (incl. a draft model)
+# ---------------------------------------------------------------------------
+
+
+def _serve_grid(**kw):
+    base = dict(arch="smollm-360m", kind="decode",
+                mesh_shapes=({"data": 2}, {"data": 1, "model": 2}),
+                global_batches=(8,), seq_lens=(1024,),
+                block_sizes=(0, 16), utilizations=(1.0, 0.85),
+                prefix_hit_rates=(0.0, 0.5), prefix_len=128,
+                mixes=(None, RequestMix.make(0.25, ((512, 1), (2048, 3)))),
+                draft_archs=("", "smollm-360m"))
+    base.update(kw)
+    return SW.SweepGrid(**base)
+
+
+def _cell_key(r):
+    return (r.arch, tuple(sorted(r.mesh_shape.items())), r.global_batch,
+            r.seq_len, r.grad_accum, r.serve)
+
+
+def test_columnar_scalar_parity_on_serve_grid(sweep_engine):
+    grid = _serve_grid()
+    col = SW.sweep(grid, engine=sweep_engine, mode="columnar")
+    cell = SW.sweep(grid, engine=sweep_engine, mode="cell")
+    assert len(col) == len(cell) == grid.size()
+    by_key = {_cell_key(r): r for r in cell.results}
+    assert len(by_key) == len(cell)
+    for r in col.results:
+        s = by_key[_cell_key(r)]
+        assert (r.peak_bytes, r.pool_bytes, r.draft_bytes,
+                r.hit_saved_bytes, r.fits) == \
+               (s.peak_bytes, s.pool_bytes, s.draft_bytes,
+                s.hit_saved_bytes, s.fits), _cell_key(r)
+
+
+def test_draft_residency_positive_and_first_stage_only(sweep_engine):
+    shape = ShapeConfig("t", 1024, 8, "decode")
+    spec = ServeSpec.make(block_size=16, draft_arch="smollm-360m")
+    rep = sweep_engine.report("llama3.2-3b", shape, {"data": 2},
+                              budget_bytes=32 * GiB, serve=spec)
+    nod = sweep_engine.report("llama3.2-3b", shape, {"data": 2},
+                              budget_bytes=32 * GiB,
+                              serve=ServeSpec.make(block_size=16))
+    assert rep.prediction.draft_bytes > 0
+    assert rep.peak_bytes == nod.peak_bytes + rep.prediction.draft_bytes
+
+
+# ---------------------------------------------------------------------------
+# serve-column report writers + CLI (satellite: no silently-dropped fields)
+# ---------------------------------------------------------------------------
+
+
+def test_writers_render_serve_columns(sweep_engine):
+    grid = _serve_grid(mesh_shapes=({"data": 2},), draft_archs=("",))
+    res = SW.sweep(grid, engine=sweep_engine)
+    md = res.to_markdown(limit=4)
+    for col in ("block", "blocks_per_seq", "hit", "pool_gib",
+                "hit_saved_gib", "draft_gib"):
+        assert col in md, col
+    csv = res.to_csv()
+    head = csv.splitlines()[0]
+    assert "pool_gib" in head and "draft_gib" in head
+    assert len(csv.splitlines()) == len(res) + 1
+
+
+def test_writers_skip_serve_columns_on_neutral_grid(sweep_engine):
+    grid = SW.SweepGrid(arch="smollm-360m", chips=4,
+                        global_batches=(16,), seq_lens=(256,))
+    res = SW.sweep(grid, engine=sweep_engine)
+    assert "pool_gib" not in res.to_markdown(limit=3)
+    assert "pool_gib" not in res.to_csv().splitlines()[0]
+
+
+def test_sweep_cli_serve_smoke(capsys):
+    rc = SW.main(["--arch", "smollm_360m", "--mesh", "data=2",
+                  "--kind", "decode", "--batch", "8",
+                  "--seq-len", "1024", "--block-size", "0,16",
+                  "--utilization", "0.9", "--prefix-hit-rate", "0,0.5",
+                  "--prefix-len", "128", "--mix", "0.25:512x1,2048x3",
+                  "--top", "5"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "pool_gib" in out and "hit_saved_gib" in out
+
+
+def test_sweep_cli_rejects_serve_on_train(capsys):
+    with pytest.raises(SystemExit):
+        SW.main(["--arch", "smollm_360m", "--chips", "4",
+                 "--kind", "train", "--block-size", "16"])
+    assert "train" in capsys.readouterr().err
+
+
+def test_sweep_cli_rejects_bad_mix(capsys):
+    with pytest.raises(SystemExit):
+        SW.main(["--arch", "smollm_360m", "--chips", "4",
+                 "--kind", "decode", "--mix", "0.3:512"])
+    assert "LENxWEIGHT" in capsys.readouterr().err
+
+
+def test_sweep_cli_rejects_unknown_draft(capsys):
+    with pytest.raises(SystemExit):
+        SW.main(["--arch", "smollm_360m", "--chips", "4",
+                 "--kind", "decode", "--draft-arch", "gpt17"])
+    assert "unknown draft arch" in capsys.readouterr().err
+
+
+def test_breakdown_cli_serve_summary(capsys):
+    from repro.configs.__main__ import main as cfg_main
+    rc = cfg_main(["--breakdown", "--arch", "llama3_2_3b",
+                   "--shape", "decode_32k", "--mesh", "data=1,model=2",
+                   "--block-size", "16", "--utilization", "0.9",
+                   "--prefix-hit-rate", "0.5", "--prefix-len", "256"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "serving: block 16" in out
+    assert "kv_pool" in out and "prefix hits save" in out
+
+
+def test_breakdown_cli_rejects_serve_on_train_shape():
+    from repro.configs.__main__ import main as cfg_main
+    with pytest.raises(SystemExit):
+        cfg_main(["--breakdown", "--arch", "smollm_360m",
+                  "--block-size", "16"])       # default shape is train_4k
+
+
+def test_breakdown_cli_serve_needs_breakdown():
+    from repro.configs.__main__ import main as cfg_main
+    with pytest.raises(SystemExit):
+        cfg_main(["--block-size", "16"])

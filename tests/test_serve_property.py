@@ -1,0 +1,146 @@
+"""Property tests (hypothesis) for the serving-fleet pool model.
+
+Randomized ServeSpec/RequestMix draws assert the paged-pool ledger
+invariants — monotonicity in sequence length and concurrency, hit-rate
+zero meaning no prefix sharing, full utilization with contiguous
+allocation meaning the exact contiguous KV byte count, and block-count
+conservation — plus scalar/columnar byte-parity over random serve
+grids.  Same importorskip convention as tests/test_batch_property.py:
+CI installs hypothesis via requirements-dev.txt and runs the shared
+fixed-seed "ci" profile from tests/conftest.py; the deterministic twin
+lives in tests/test_serve.py.
+"""
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis; `pip install hypothesis` "
+           "to run them")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.configs import ShapeConfig  # noqa: E402
+from repro.core import sweep as SW  # noqa: E402
+from repro.serve.fleet import BP, RequestMix, expected_len  # noqa: E402
+from repro.serve.pool import (ServeSpec, pool_accounting,  # noqa: E402
+                              pool_tokens)
+
+GiB = 1 << 30
+
+_mixes = st.one_of(
+    st.none(),
+    st.builds(
+        RequestMix,
+        prefill_bp=st.integers(0, BP),
+        hist=st.lists(
+            st.tuples(st.integers(1, 8192), st.integers(1, 5)),
+            max_size=3).map(tuple)))
+
+_specs = st.builds(
+    ServeSpec,
+    block_size=st.sampled_from([0, 8, 16, 32, 128]),
+    util_bp=st.integers(1, BP),
+    hit_bp=st.integers(0, BP),
+    prefix_len=st.integers(1, 4096),   # >0 so any hit_bp is legal
+    mix=_mixes)
+
+_seq_lens = st.integers(1, 1 << 20)
+
+
+@settings(deadline=None)
+@given(spec=_specs, seq_len=_seq_lens)
+def test_property_pool_ledger_conservation(spec, seq_len):
+    acc = pool_accounting(seq_len, spec)
+    # allocated = live-unique + last-block padding + fragmentation slack
+    assert acc.pool_tokens == acc.unique + acc.pad_slack + acc.frag_slack
+    assert acc.pad_slack >= 0 and acc.frag_slack >= 0
+    assert 0 <= acc.shared <= acc.live
+    if spec.block_size:
+        assert acc.alloc_tokens == acc.blocks * spec.block_size
+        assert acc.pool_tokens % spec.block_size == 0
+    else:
+        assert acc.blocks == 0 and acc.alloc_tokens == acc.unique
+
+
+@settings(deadline=None)
+@given(spec=_specs, seq_len=_seq_lens, grow=st.integers(1, 1 << 16))
+def test_property_pool_monotone_in_seq_len(spec, seq_len, grow):
+    assert pool_tokens(seq_len + grow, spec) >= pool_tokens(seq_len, spec)
+
+
+@settings(deadline=None)
+@given(spec=_specs, seq_len=_seq_lens)
+def test_property_hit_zero_means_no_sharing(spec, seq_len):
+    nohit = ServeSpec(block_size=spec.block_size, util_bp=spec.util_bp,
+                      hit_bp=0, prefix_len=0, mix=spec.mix)
+    acc = pool_accounting(seq_len, nohit)
+    assert acc.shared == 0
+    assert acc.unique == acc.live == expected_len(seq_len, spec.mix)
+    # ... and prefix_len alone (without hits) changes nothing
+    withlen = ServeSpec(block_size=spec.block_size, util_bp=spec.util_bp,
+                        hit_bp=0, prefix_len=spec.prefix_len,
+                        mix=spec.mix)
+    assert pool_accounting(seq_len, withlen) == acc
+
+
+@settings(deadline=None)
+@given(mix=_mixes, seq_len=_seq_lens)
+def test_property_full_util_contiguous_is_exact(mix, seq_len):
+    spec = ServeSpec(block_size=0, util_bp=BP, mix=mix)
+    acc = pool_accounting(seq_len, spec)
+    assert acc.pool_tokens == expected_len(seq_len, mix)
+    assert acc.pad_slack == 0 and acc.frag_slack == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    block=st.sampled_from([0, 16, 32]),
+    util=st.sampled_from([1.0, 0.9, 0.6]),
+    hit=st.sampled_from([0.0, 0.5, 1.0]),
+    mix=_mixes,
+    draft=st.sampled_from(["", "smollm-360m"]),
+    batches=st.lists(st.integers(1, 32), min_size=1, max_size=2,
+                     unique=True),
+    seqs=st.lists(st.sampled_from([256, 512, 1024, 2048]), min_size=1,
+                  max_size=2, unique=True))
+def test_property_columnar_equals_cell_on_serve_grids(
+        block, util, hit, mix, draft, batches, seqs):
+    grid = SW.SweepGrid(
+        arch="smollm-360m", kind="decode",
+        mesh_shapes=({"data": 2}, {"data": 1, "model": 2}),
+        global_batches=tuple(batches), seq_lens=tuple(seqs),
+        block_sizes=tuple(dict.fromkeys((0, block))),
+        utilizations=(util,),
+        prefix_hit_rates=(hit,), prefix_len=256 if hit else 0,
+        mixes=(mix,), draft_archs=(draft,))
+    cell = SW.SweepEngine().sweep(grid, mode="cell")
+    col = SW.SweepEngine().sweep(grid, mode="columnar")
+    assert len(cell) == len(col) == grid.size()
+    for a, b in zip(cell.results, col.results):
+        assert a == b
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    gb=st.integers(1, 64),
+    extra=st.integers(1, 64),
+    seq=st.sampled_from([512, 1024, 2048]),
+    spec=_specs)
+def test_property_pool_bytes_monotone_in_concurrency(gb, extra, seq, spec,
+                                                     engine):
+    # more in-flight sequences can never shrink the KV pool (per-seq
+    # pool tokens are concurrency-independent; the pool term is linear
+    # in the batch): asserted at the report level on a shard-free mesh
+    def pool(n):
+        rep = engine.report("smollm-360m",
+                            ShapeConfig("t", seq, n, "decode"),
+                            {"data": 1, "model": 1},
+                            budget_bytes=1 << 62, serve=spec)
+        return rep.prediction.pool_bytes
+
+    assert pool(gb + extra) >= pool(gb)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return SW.SweepEngine()

@@ -13,7 +13,10 @@ deterministic twin over the real zoo lives in tests/test_stages.py.
 
 import pytest
 
-hyp = pytest.importorskip("hypothesis")
+hyp = pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis; `pip install hypothesis` "
+           "to run them (CI does, via requirements-dev.txt)")
 
 from hypothesis import given, settings, strategies as st  # noqa: E402
 

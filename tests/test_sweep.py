@@ -393,3 +393,27 @@ def test_plan_min_chips_ep_cp_never_worse():
     if base is not None:
         assert epcp is not None
         assert epcp.n_chips <= base.n_chips
+
+
+def test_report_writers_render_serve_columns():
+    """Regression (ISSUE-6): grids with active serving-fleet knobs must
+    carry the serve columns in BOTH writers instead of silently dropping
+    the pool/draft/hit-savings fields; neutral grids keep the old
+    column set exactly."""
+    grid = SW.SweepGrid(arch="smollm-360m", kind="decode",
+                        mesh_shapes=({"data": 2},),
+                        global_batches=(8,), seq_lens=(512,),
+                        block_sizes=(16,), utilizations=(0.9,),
+                        prefix_hit_rates=(0.5,), prefix_len=128)
+    res = SW.sweep(grid)
+    md, csv = res.to_markdown(limit=2), res.to_csv()
+    for col in ("block", "blocks_per_seq", "hit", "pool_gib",
+                "hit_saved_gib", "draft_gib"):
+        assert col in md and col in csv.splitlines()[0], col
+    assert len(csv.splitlines()) == len(res) + 1
+    neutral = SW.sweep(SW.SweepGrid(arch="smollm-360m", kind="decode",
+                                    mesh_shapes=({"data": 2},),
+                                    global_batches=(8,),
+                                    seq_lens=(512,)))
+    assert "pool_gib" not in neutral.to_markdown(limit=2)
+    assert "pool_gib" not in neutral.to_csv().splitlines()[0]
