@@ -1,0 +1,155 @@
+"""Memory-autopilot benchmark: mitigation-search latency + OOM avoidance.
+
+    PYTHONPATH=src python benchmarks/autopilot_bench.py
+
+Two gates, written to ``BENCH_autopilot.{json,md}``:
+
+* **Mitigation-search latency** — wall time of one full
+  :meth:`~repro.autopilot.mitigation.MitigationPlanner.plan` call
+  (enumerate every knob move, predict each through the memoized sweep
+  engine, rank) on the harness cell and on a pipeline cell, cold and
+  warm.  The closed loop runs this inside a training step's admission
+  window, so the warm path must stay well under a step time (tens of
+  milliseconds).
+
+* **OOM-avoidance rate** — every synthetic drift scenario run guarded
+  and unguarded through ResilientTrainer.  The guarded trainer must
+  complete ALL scenarios with zero injected OOMs and zero restarts
+  while the unguarded baseline aborts on each; any guarded abort or
+  OOM is a nonzero exit (the property CI pins).
+"""
+
+from __future__ import annotations
+
+import argparse
+import statistics
+import sys
+import time
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+
+from common import GiB, write_bench  # noqa: E402
+
+from repro.autopilot import (SCENARIOS, MitigationPlanner, base_cell,
+                             run_scenario)  # noqa: E402
+from repro.core import sweep as SW  # noqa: E402
+from repro.core.spec import FULL_TRAIN  # noqa: E402
+
+#: pipeline-parallel planning cell: more knob moves in scope
+#: (microbatch doubling joins accum/offload/remat/reshard)
+PP_CELL = SW.SweepCell(
+    arch="llama3.2-3b", chip="v5e",
+    mesh=(("data", 2), ("model", 2), ("pipe", 2)),
+    optimizer=None, remat="none", grad_accum=1, global_batch=64,
+    seq_len=2048, kind="train", backend="tpu",
+    microbatches=4, schedule="1f1b")
+
+
+def time_plan(planner: MitigationPlanner, cell, repeats: int = 5) -> dict:
+    """Cold (first, empty memo) + warm (median of repeats) plan latency."""
+    t0 = time.perf_counter()
+    plan = planner.plan(cell, ewma_ratio=1.2)
+    cold_ms = (time.perf_counter() - t0) * 1e3
+    warm = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        planner.plan(cell, ewma_ratio=1.2)
+        warm.append((time.perf_counter() - t0) * 1e3)
+    return {"candidates": len(plan.candidates),
+            "reaches_safety": plan.reaches_safety,
+            "cold_ms": round(cold_ms, 2),
+            "warm_ms": round(statistics.median(warm), 3)}
+
+
+def run(out_dir: str = None, verbose: bool = True) -> dict:
+    engine = SW.SweepEngine()
+    planner = MitigationPlanner(engine=engine, policy=FULL_TRAIN)
+    latency = {"harness-cell": time_plan(planner, base_cell()),
+               "pp-cell": time_plan(planner, PP_CELL)}
+
+    rows, guarded_failures = [], 0
+    for scn in SCENARIOS:
+        for guarded in (True, False):
+            r = run_scenario(scn, guarded, engine=engine)
+            rows.append(r)
+            if guarded and (r.aborted or r.oom_steps):
+                guarded_failures += 1
+            if verbose:
+                print(f"  {r}")
+    guarded_rows = [r for r in rows if r.guarded]
+    unguarded_rows = [r for r in rows if not r.guarded]
+    avoidance = {
+        "scenarios": len(SCENARIOS),
+        "guarded_completed": sum(r.completed for r in guarded_rows),
+        "guarded_oom_steps": sum(len(r.oom_steps) for r in guarded_rows),
+        "guarded_restarts": sum(r.restarts for r in guarded_rows),
+        "unguarded_aborted": sum(r.aborted for r in unguarded_rows),
+        "oom_avoidance_rate": round(
+            sum(r.oom_free and r.completed for r in guarded_rows)
+            / max(len(guarded_rows), 1), 3),
+        "runs": [{
+            "scenario": r.scenario, "guarded": r.guarded,
+            "completed": r.completed, "aborted": r.aborted,
+            "steps_done": r.steps_done, "n_steps": r.n_steps,
+            "oom_steps": list(r.oom_steps),
+            "mitigations": list(r.mitigations), "restarts": r.restarts,
+            "budget_gib": round(r.budget_bytes / GiB, 2),
+            "predicted_gib": [round(r.base_predicted_bytes / GiB, 2),
+                              round(r.final_predicted_bytes / GiB, 2)],
+        } for r in rows],
+    }
+
+    payload = {"benchmark": "autopilot", "plan_latency": latency,
+               "oom_avoidance": avoidance,
+               "guarded_failures": guarded_failures}
+
+    md = ["# Memory-autopilot benchmark", "",
+          "## Mitigation-search latency", "",
+          "| cell | candidates | cold (ms) | warm (ms) |",
+          "|---|---|---|---|"]
+    for name, row in latency.items():
+        md.append(f"| {name} | {row['candidates']} | {row['cold_ms']} "
+                  f"| {row['warm_ms']} |")
+    md += ["", "## OOM avoidance (guarded vs unguarded)", "",
+           "| scenario | mode | outcome | steps | ooms | mitigations |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        md.append(f"| {r.scenario} | "
+                  f"{'guarded' if r.guarded else 'unguarded'} | "
+                  f"{'completed' if r.completed else 'ABORTED'} | "
+                  f"{r.steps_done}/{r.n_steps} | {len(r.oom_steps)} | "
+                  f"{','.join(r.mitigations) or '-'} |")
+    md.append("")
+    md.append(f"OOM-avoidance rate: "
+              f"**{avoidance['oom_avoidance_rate']:.0%}** over "
+              f"{len(SCENARIOS)} scenarios; unguarded aborts: "
+              f"{avoidance['unguarded_aborted']}/{len(SCENARIOS)}.")
+
+    paths = write_bench("autopilot", payload, "\n".join(md),
+                        out_dir=out_dir)
+    if verbose:
+        print(f"wrote {paths[0]}")
+        print(f"plan latency: {latency}")
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=None, help="output dir for BENCH_*")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    payload = run(out_dir=args.out, verbose=not args.quiet)
+    bad = payload["guarded_failures"]
+    if bad:
+        print(f"FAIL: {bad} guarded run(s) aborted or OOMed",
+              file=sys.stderr)
+        return 1
+    if payload["oom_avoidance"]["unguarded_aborted"] != len(SCENARIOS):
+        print("FAIL: an unguarded baseline survived — scenarios no "
+              "longer cross the budget", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,7 +27,7 @@ so the perf trajectory is tracked across PRs.  Scales:
   request mixes x a speculative draft model;
 * ``pr1``: the original 1,080-cell PR-1 grid (under_1s trajectory).
 
-``--verify`` additionally replays the 9,136-cell parity set — every
+``--verify`` additionally replays the 9,544-cell parity set — every
 arch x kind x backend x policy, with and without a calibration profile,
 pp in {1, 2, 4} x microbatches in {1, 4, 8} x {1f1b, gpipe} pipeline
 grids over the whole zoo, the ISSUE-5 acceptance grids crossing
@@ -36,10 +36,13 @@ MoE arches, the legal slices elsewhere: dense arches pin expert=1,
 decode pins context=1), plus the ISSUE-6 serving-fleet grids (paged
 block sizes x utilization x hit rates x mixes on decode AND prefill for
 all 12 arches, speculative drafts, calibrated paged cells — each grid's
-all-neutral combo asserts prior-main cells stay bit-identical) —
-through un-memoized ``planner.check`` cell by cell, comparing peak,
-verdict AND the pool/draft/hit-savings components, failing on any byte
-difference (seconds, not timed).
+all-neutral combo asserts prior-main cells stay bit-identical), plus
+the ISSUE-7 optimizer-offload grids (offload off/on crossed with
+optimizer x grad-accum on every arch and with the pipeline schedules
+on a calibrated leg; each off cell asserts prior-main stays
+bit-identical) — through un-memoized ``planner.check`` cell by cell,
+comparing peak, verdict AND the pool/draft/hit-savings/offload
+components, failing on any byte difference (seconds, not timed).
 """
 
 from __future__ import annotations
@@ -57,7 +60,7 @@ from repro.configs import ShapeConfig, registered_archs  # noqa: E402
 from repro.core import planner, sweep as SW  # noqa: E402
 from repro.serve.fleet import RequestMix  # noqa: E402
 
-PARITY_CELLS = 9136
+PARITY_CELLS = 9544
 
 # continuous-batching request mix for the serve parity/smoke grids
 SERVE_MIX = RequestMix.make(0.25, ((512, 1), (2048, 3)))
@@ -134,10 +137,11 @@ def build_grid(scale: str = "large") -> SW.SweepGrid:
 
 
 def parity_set() -> list:
-    """The 7,152-cell parity set: PR 1's 1,080-cell throughput grid plus
+    """The 9,544-cell parity set: PR 1's 1,080-cell throughput grid plus
     per-arch train/serve grids on both oracle backends, the LLaVA frozen
-    policies, and calibrated variants — every cell re-checkable against
-    un-memoized ``planner.check``."""
+    policies, pipeline/ep-cp/serving-fleet/offload grids, and calibrated
+    variants — every cell re-checkable against un-memoized
+    ``planner.check``."""
     profile = _bench_profile()
     grids = [build_grid("pr1")]                               # 1,080
     for arch in registered_archs():                           # 12 x 272
@@ -227,6 +231,19 @@ def parity_set() -> list:
             block_sizes=(16,), utilizations=(0.9,),
             prefix_hit_rates=(0.0, 0.5), prefix_len=256,
             backend="tpu", profile=profile))
+    # ISSUE-7 optimizer-offload grids: offload off/on x optimizer x
+    # grad-accum on every arch (the off half doubles as the "prior-main
+    # cells stay bit-identical with offload off" acceptance leg).
+    for arch in registered_archs():         # offload train: 12 x 32
+        grids.append(SW.SweepGrid(
+            arch=arch, chips=8, offload_optimizer=(False, True),
+            optimizers=(None, "adafactor"), grad_accums=(1, 2),
+            global_batches=(8,), seq_lens=(1024,), backend="tpu"))
+    grids.append(SW.SweepGrid(              # calibrated offload x pp: 24
+        arch="llama3.2-3b", mesh_shapes=PP_MESHES,
+        offload_optimizer=(False, True), schedules=("1f1b", "gpipe"),
+        microbatches=(1, 8), global_batches=(8,), seq_lens=(1024,),
+        backend="cpu", profile=profile))
     return grids
 
 
@@ -236,7 +253,8 @@ def _columns(res) -> list:
              r.schedule, r.microbatches,
              r.grad_accum, r.global_batch, r.seq_len,
              tuple(sorted(r.mesh_shape.items())),
-             r.serve, r.pool_bytes, r.hit_saved_bytes, r.draft_bytes)
+             r.serve, r.pool_bytes, r.hit_saved_bytes, r.draft_bytes,
+             r.offload, r.offload_bytes)
             for r in res.results]
 
 
@@ -261,12 +279,13 @@ def _verify_parity(verbose: bool) -> dict:
                 optimizer=r.optimizer, chip=r.chip,
                 headroom=grid.headroom, profile=grid.profile,
                 microbatches=r.microbatches, schedule=r.schedule,
-                serve=r.serve)
+                serve=r.serve, offload_opt=r.offload)
             if (ref.peak_bytes != r.peak_bytes or ref.fits != r.fits
                     or ref.prediction.pool_bytes != r.pool_bytes
                     or ref.prediction.draft_bytes != r.draft_bytes
                     or ref.prediction.hit_saved_bytes
-                    != r.hit_saved_bytes):
+                    != r.hit_saved_bytes
+                    or ref.prediction.offload_bytes != r.offload_bytes):
                 mismatches += 1
                 if verbose and mismatches < 5:
                     print(f"MISMATCH vs check(): {r} vs {ref}")

@@ -1,0 +1,169 @@
+"""The closed loop: watch -> plan -> validate -> apply.
+
+:class:`Autopilot` owns the current :class:`~repro.core.sweep.SweepCell`
+(the knobs the job is actually running), a :class:`MemoryWatch` over its
+calibrated prediction, and a :class:`MitigationPlanner`.  Per step it
+ingests one telemetry sample; on a DRIFT or CRITICAL verdict it ranks
+mitigations and applies the best one — but only after re-validating the
+mutated cell through the un-memoized :func:`repro.core.planner.check`
+gate: the applied plan's predicted peak must equal the reference
+evaluation byte-for-byte, else :class:`MitigationError` aborts the
+apply (a planner/evaluator disagreement means the memory model cannot
+be trusted to steer the job).
+
+``on_restart`` is the fault-tolerance hook: every elastic-resize or
+preemption restart re-validates the (possibly new) mesh through
+:func:`repro.core.planner.check_parallel` and, if the watch's drift
+projection no longer clears the budget, applies the top-ranked plan
+before the trainer resumes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+from repro.configs import ShapeConfig
+from repro.core import planner as PL
+from repro.core import sweep as SW
+from repro.core.spec import FULL_TRAIN
+
+from .mitigation import Mitigation, MitigationPlan, MitigationPlanner
+from .watch import MemoryWatch, WatchSample, WatchState
+
+
+class MitigationError(RuntimeError):
+    """An applied plan failed re-validation against planner.check."""
+
+
+@dataclass
+class Autopilot:
+    """Closed-loop OOM avoidance around one training job's cell."""
+
+    cell: SW.SweepCell
+    policy: object = FULL_TRAIN
+    headroom: float = PL.HEADROOM
+    profile: object = None
+    engine: SW.SweepEngine = field(default_factory=SW.SweepEngine)
+    drift_tolerance: float = 1.05
+    guard_frac: float = 0.95
+    max_mitigations: int = 8
+    allow_reshard: bool = True
+
+    watch: MemoryWatch = field(init=False)
+    planner: MitigationPlanner = field(init=False)
+    applied: list = field(default_factory=list)    # Mitigation log
+    events: list = field(default_factory=list)     # (step, kind, detail)
+
+    def __post_init__(self):
+        self.planner = MitigationPlanner(
+            engine=self.engine, policy=self.policy,
+            headroom=self.headroom, profile=self.profile)
+        self.watch = MemoryWatch(
+            predicted_bytes=self._predict(self.cell),
+            budget_bytes=self.budget_bytes,
+            drift_tolerance=self.drift_tolerance,
+            guard_frac=self.guard_frac)
+
+    # -- predictions ---------------------------------------------------------
+    @property
+    def budget_bytes(self) -> int:
+        return int(PL.chip_hbm(self.cell.chip) * self.headroom)
+
+    @property
+    def predicted_bytes(self) -> int:
+        return self.watch.predicted_bytes
+
+    def _predict(self, cell: SW.SweepCell) -> int:
+        return self.engine.evaluate(cell, policy=self.policy,
+                                    headroom=self.headroom,
+                                    profile=self.profile).peak_bytes
+
+    # -- the loop ------------------------------------------------------------
+    def observe(self, step: int, observed) -> WatchSample:
+        """Ingest one telemetry sample; mitigate when the budget is
+        threatened.  ``observed`` is bytes, a dryrun record dict, or
+        None.  An ewma-only DRIFT (ratio past tolerance but projection
+        still clear of the guard band) is logged, not acted on — a
+        consistently-hot-but-fitting job should keep its knobs; knobs
+        move once the projection enters the guard band or crosses the
+        budget (CRITICAL)."""
+        sample = self.watch.observe(step, observed)
+        if sample.state in (WatchState.DRIFT, WatchState.CRITICAL):
+            self.events.append((int(step), sample.state.value,
+                                sample.projected_bytes))
+            threatened = (sample.state is WatchState.CRITICAL
+                          or sample.projected_bytes
+                          > self.guard_frac * self.budget_bytes)
+            if threatened:
+                self.mitigate(step, sample.ewma_ratio)
+        return sample
+
+    def mitigate(self, step: int,
+                 ewma_ratio: Optional[float] = None) -> Optional[Mitigation]:
+        """Rank mitigations for the current cell and apply the best one
+        (validated).  No-op once ``max_mitigations`` moves were spent —
+        the autopilot never thrashes knobs forever."""
+        if len(self.applied) >= self.max_mitigations:
+            self.events.append((int(step), "exhausted",
+                                len(self.applied)))
+            return None
+        ratio = self.watch.ewma_ratio if ewma_ratio is None else ewma_ratio
+        plan = self.planner.plan(self.cell, ewma_ratio=ratio,
+                                 allow_reshard=self.allow_reshard)
+        best = plan.best
+        if best is None:
+            self.events.append((int(step), "no-candidates", 0))
+            return None
+        self._apply(step, best)
+        return best
+
+    def _apply(self, step: int, m: Mitigation) -> None:
+        """Re-validate ``m`` against the un-memoized planner gate, then
+        make its cell the current one and re-point the watch."""
+        c = m.cell
+        shape = ShapeConfig("autopilot", c.seq_len, c.global_batch,
+                            c.kind)
+        ref = PL.check(c.arch, shape, c.mesh_shape, policy=self.policy,
+                       backend=c.backend, grad_accum=c.grad_accum,
+                       remat=c.remat, optimizer=c.optimizer, chip=c.chip,
+                       headroom=self.headroom, profile=self.profile,
+                       microbatches=c.microbatches, schedule=c.schedule,
+                       serve=c.serve, offload_opt=c.offload)
+        if ref.peak_bytes != m.predicted_bytes:
+            raise MitigationError(
+                f"mitigation {m.action!r} failed validation: planner."
+                f"check predicts {ref.peak_bytes} bytes for the mutated "
+                f"cell but the plan claimed {m.predicted_bytes}")
+        self.cell = c
+        self.applied.append(m)
+        self.events.append((int(step), f"apply:{m.action}",
+                            m.predicted_bytes))
+        # keep the EWMA: the drift multiplier (fragmentation, model
+        # error) is a property of the JOB, not of the knobs — observed
+        # usage scales with the new prediction, so the ratio carries over
+        self.watch.repredict(m.predicted_bytes, reset_ewma=False)
+
+    # -- fault-tolerance hook ------------------------------------------------
+    def on_restart(self, step: int = -1,
+                   mesh_shape: Optional[dict] = None) -> SW.SweepCell:
+        """Restart/elastic-resize hook: re-validate the mesh through
+        planner.check_parallel (a resize onto an illegal mesh must fail
+        loudly here, not as a silent misprediction), adopt it, and if
+        the drift projection no longer clears the budget apply the
+        top-ranked plan before the trainer resumes."""
+        cfg, _, _ = self.engine._arch_state(self.cell.arch, self.policy)
+        mesh = dict(mesh_shape) if mesh_shape is not None \
+            else self.cell.mesh_shape
+        PL.check_parallel(cfg, mesh, self.cell.kind, self.cell.seq_len)
+        if mesh_shape is not None and mesh != self.cell.mesh_shape:
+            self.cell = replace(self.cell,
+                                mesh=tuple(sorted(mesh.items())))
+            self.watch.repredict(self._predict(self.cell),
+                                 reset_ewma=False)
+            self.events.append((int(step), "resize",
+                                self.watch.predicted_bytes))
+        projected = int(self.watch.ewma_ratio * self.watch.predicted_bytes)
+        if projected > self.guard_frac * self.budget_bytes:
+            self.mitigate(step)
+        return self.cell

@@ -156,6 +156,7 @@ class CellColumns:
     chips: tuple
     meshes: tuple                   # of dict
     opts: tuple                     # raw (may contain None)
+    offs: tuple                     # offload-optimizer knob values (bool)
     remats: tuple                   # raw (may contain None)
     scheds: tuple                   # pipeline schedules ("1f1b"/"gpipe")
     mbs: tuple                      # pipeline microbatch counts
@@ -169,6 +170,7 @@ class CellColumns:
     chip_c: np.ndarray
     mesh_c: np.ndarray
     opt_c: np.ndarray
+    off_c: np.ndarray
     remat_c: np.ndarray
     sched_c: np.ndarray
     mb_c: np.ndarray
@@ -184,13 +186,14 @@ class CellColumns:
 
 def build_columns(grid: "SW.SweepGrid") -> CellColumns:
     """Lower a grid to code columns.  Mirrors ``SweepGrid.cells()``:
-    arch -> chip -> mesh -> optimizer -> remat -> schedule -> microbatch
-    -> serve -> accum -> batch -> seq, innermost fastest, with
+    arch -> chip -> mesh -> optimizer -> offload -> remat -> schedule ->
+    microbatch -> serve -> accum -> batch -> seq, innermost fastest, with
     non-divisible (batch, accum) pairs dropped."""
     arches = tuple(SW.normalize_arch(a) for a in SW._seq(grid.arch))
     chips = tuple(SW._seq(grid.chip))
     meshes = tuple(grid.meshes())
     opts = tuple(SW._seq(grid.optimizers))
+    offs = tuple(grid.offloads())
     remats = tuple(SW._seq(grid.remats))
     scheds = tuple(grid.check_schedules())
     mbs = tuple(int(m) for m in SW._seq(grid.microbatches))
@@ -199,30 +202,33 @@ def build_columns(grid: "SW.SweepGrid") -> CellColumns:
                   for g in SW._seq(grid.global_batches) if not g % a)
     seqs = tuple(int(s) for s in SW._seq(grid.seq_lens))
 
-    sizes = [len(arches), len(chips), len(meshes), len(opts), len(remats),
-             len(scheds), len(mbs), len(serves), len(pairs), len(seqs)]
+    sizes = [len(arches), len(chips), len(meshes), len(opts), len(offs),
+             len(remats), len(scheds), len(mbs), len(serves), len(pairs),
+             len(seqs)]
     n = math.prod(sizes)
     if n == 0:
         z = np.zeros(0, I64)
-        return CellColumns(0, arches, chips, meshes, opts, remats, scheds,
-                           mbs, serves, pairs, seqs, grid.kind,
+        return CellColumns(0, arches, chips, meshes, opts, offs, remats,
+                           scheds, mbs, serves, pairs, seqs, grid.kind,
                            grid.backend,
-                           z, z, z, z, z, z, z, z, z, z, z, z, z, z)
+                           z, z, z, z, z, z, z, z, z, z, z, z, z, z, z)
     idx = np.arange(n, dtype=I64)
     codes = []
     for s in reversed(sizes):
         codes.append(idx % s)
         idx //= s
-    (seq_c, pair_c, srv_c, mb_c, sched_c, remat_c, opt_c, mesh_c, chip_c,
-     arch_c) = codes
+    (seq_c, pair_c, srv_c, mb_c, sched_c, remat_c, off_c, opt_c, mesh_c,
+     chip_c, arch_c) = codes
     accum = np.array([p[0] for p in pairs], I64)[pair_c]
     gb = np.array([p[1] for p in pairs], I64)[pair_c]
     seq = np.array(seqs, I64)[seq_c]
     micro = np.array(mbs, I64)[mb_c]
-    return CellColumns(n, arches, chips, meshes, opts, remats, scheds, mbs,
-                       serves, pairs, seqs, grid.kind, grid.backend,
-                       arch_c, chip_c, mesh_c, opt_c, remat_c, sched_c,
-                       mb_c, srv_c, pair_c, seq_c, accum, gb, seq, micro)
+    return CellColumns(n, arches, chips, meshes, opts, offs, remats,
+                       scheds, mbs, serves, pairs, seqs, grid.kind,
+                       grid.backend,
+                       arch_c, chip_c, mesh_c, opt_c, off_c, remat_c,
+                       sched_c, mb_c, srv_c, pair_c, seq_c, accum, gb,
+                       seq, micro)
 
 
 # ---------------------------------------------------------------------------
@@ -265,6 +271,10 @@ class ColumnarResults:
     pool_bytes: Optional[np.ndarray] = None
     draft_bytes: Optional[np.ndarray] = None
     hit_saved_bytes: Optional[np.ndarray] = None
+    # Eq.1 offload-tier axis + peak-stage host-optimizer provenance
+    offs: tuple = (False,)
+    off_c: Optional[np.ndarray] = None
+    offload_bytes: Optional[np.ndarray] = None
 
     @property
     def n_chips(self) -> np.ndarray:
@@ -292,6 +302,10 @@ class ColumnarResults:
             else int(self.draft_bytes[i]),
             hit_saved_bytes=0 if self.hit_saved_bytes is None
             else int(self.hit_saved_bytes[i]),
+            offload=False if self.off_c is None
+            else bool(self.offs[self.off_c[i]]),
+            offload_bytes=0 if self.offload_bytes is None
+            else int(self.offload_bytes[i]),
             peak_bytes=int(self.peak_bytes[i]),
             budget_bytes=int(self.budget_bytes[i]),
             fits=bool(self.fits[i]), prediction=None)
@@ -421,8 +435,8 @@ class _StageTables:
     """Component-group tables for one (arch, pipeline stage) over
     (pp-group meshes x knob tuples)."""
 
-    static_sum: np.ndarray          # (n_mesh, n_opt, 2)  [cls: eff 2 / 4]
-    opt_trans: np.ndarray           # (n_mesh, n_opt)
+    static_sum: np.ndarray          # (n_mesh, n_opt, n_off, 2) [cls: 2/4]
+    opt_trans: np.ndarray           # (n_mesh, n_opt, n_off)
     static_scaled: Optional[np.ndarray]   # profile-scaled static group
     saved: np.ndarray               # (n_remat_eval, n_mesh, T)
     transient: np.ndarray           # (n_mesh, T)
@@ -436,6 +450,9 @@ class _StageTables:
     pool: Optional[np.ndarray] = None         # (n_mesh, T) paged-KV pool
     pool_saved: Optional[np.ndarray] = None   # prefix-hit savings info
     draft: Optional[np.ndarray] = None        # first stage only
+    # Eq.1 offload tier: host-resident optimizer bytes per offload flag
+    # (None on grids without the knob — zero gathers in the composition)
+    host_opt: Optional[np.ndarray] = None     # (n_mesh, n_opt, n_off)
 
 
 def _stage_tables(cfg, model, rows, rules, rep_ctx,
@@ -500,25 +517,49 @@ def _stage_tables(cfg, model, rows, rules, rep_ctx,
         param_arr += row_param
         if train and r.trainable:
             outcopy_arr += row_param
-    static_sum = (param_arr + outcopy_arr)[:, None, None] \
-        + opt_arr.T[:, :, None] + grad_arr.T[:, None, :]
+    # Eq.1 offload tier: per offload flag the resident optimizer bytes
+    # are either the full state (off) or the double-buffered staging
+    # window over it (on), with the displaced total recorded as
+    # host_opt.  Per-element ints through factors.offload_staged_bytes
+    # so staged values match the scalar path byte-for-byte.
+    offs = cols.offs
+    n_off = len(offs)
+    opt_eff = np.zeros((n_mesh, len(opt_res), n_off), I64)
+    for fi, off in enumerate(offs):
+        for oi in range(len(opt_res)):
+            for m in range(n_mesh):
+                o = int(opt_arr[oi, m])
+                opt_eff[m, oi, fi] = \
+                    F.offload_staged_bytes(o) if off else o
+    host_opt = None
+    if train and any(offs):
+        host_opt = np.zeros((n_mesh, len(opt_res), n_off), I64)
+        for fi, off in enumerate(offs):
+            if off:
+                host_opt[:, :, fi] = opt_arr.T
+    static_sum = (param_arr + outcopy_arr)[:, None, None, None] \
+        + opt_eff[:, :, :, None] + grad_arr.T[:, None, None, :]
     frac = rep_ctx.opt_transient_frac
-    opt_trans = np.zeros((n_mesh, len(opt_res)), I64)
+    opt_trans = np.zeros((n_mesh, len(opt_res), n_off), I64)
     if frac:
         for m in range(n_mesh):
             for oi in range(len(opt_res)):
-                opt_trans[m, oi] = int(frac * int(opt_arr[oi, m]))
+                for fi in range(n_off):
+                    opt_trans[m, oi, fi] = \
+                        int(frac * int(opt_eff[m, oi, fi]))
     static_scaled = None
     if profile is not None:
         c_s = profile.coef("static")
         sc = lambda v: int(round(int(v) * c_s))
-        static_scaled = np.zeros((n_mesh, len(opt_res), 2), I64)
+        static_scaled = np.zeros((n_mesh, len(opt_res), n_off, 2), I64)
         for m in range(n_mesh):
             base = sc(param_arr[m]) + sc(outcopy_arr[m])
             for oi in range(len(opt_res)):
-                for ci in range(2):
-                    static_scaled[m, oi, ci] = base \
-                        + sc(grad_arr[ci, m]) + sc(opt_arr[oi, m])
+                for fi in range(n_off):
+                    for ci in range(2):
+                        static_scaled[m, oi, fi, ci] = base \
+                            + sc(grad_arr[ci, m]) \
+                            + sc(opt_eff[m, oi, fi])
 
     # -- activation group (saved-for-backward + worst transient) ---------
     zeros2 = np.zeros(shape2, I64)
@@ -717,7 +758,7 @@ def _stage_tables(cfg, model, rows, rules, rep_ctx,
             np.broadcast_to(saved_stack, (len(remat_eval),) + shape2)),
         transient=full(transient), loss=loss, inputs=inputs, cache=cache,
         boundary=boundary, embed=embed, pool=pool, pool_saved=pool_saved,
-        draft=draft)
+        draft=draft, host_opt=host_opt)
 
 
 def _stage_tables_jobs(cfg, model, rows, rules, rep_ctx, cols, env,
@@ -758,7 +799,8 @@ def _stage_tables_jobs(cfg, model, rows, rules, rep_ctx, cols, env,
         embed=first.embed,
         pool=opt_cat(lambda p: p.pool),
         pool_saved=opt_cat(lambda p: p.pool_saved),
-        draft=opt_cat(lambda p: p.draft))
+        draft=opt_cat(lambda p: p.draft),
+        host_opt=opt_cat(lambda p: p.host_opt))
 
 
 # ---------------------------------------------------------------------------
@@ -781,6 +823,7 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
     # grid.cells() -> make_context -> planner.check_parallel/check_serve
     grid.check_parallel()
     grid.check_serve()
+    grid.check_offload()
     cols = build_columns(grid)
     if cols.n == 0:
         return SW.SweepResults(grid=grid, results=[],
@@ -811,6 +854,10 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
     pool_arr = np.zeros(n, I64)
     draft_arr = np.zeros(n, I64)
     hit_arr = np.zeros(n, I64)
+    # offload provenance is train-only (check_offload rejects it on
+    # serve kinds), so the serve and offload branches never both apply
+    off_grp = cols.kind == "train" and any(cols.offs)
+    off_arr = np.zeros(n, I64)
     block = n // len(cols.arches)
     for ai, arch in enumerate(cols.arches):
         sl = slice(ai * block, (ai + 1) * block)
@@ -828,6 +875,7 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
 
         m_c = cols.mesh_c[sl]
         o_c = cols.opt_c[sl]
+        f_c = cols.off_c[sl]
         t2_full = (cols.mb_c[sl] * n_pairs + cols.pair_c[sl]) * n_seq \
             + cols.seq_c[sl]
         t2_flat = cols.pair_c[sl] * n_seq + cols.seq_c[sl]
@@ -845,6 +893,7 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
         arch_pool = np.zeros(block, I64)
         arch_draft = np.zeros(block, I64)
         arch_hit = np.zeros(block, I64)
+        arch_off = np.zeros(block, I64)
         for pp in sorted(set(pp_of.tolist())):
             mesh_ids = np.flatnonzero(pp_of == pp)
             sel = np.isin(m_c, mesh_ids)
@@ -859,6 +908,7 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
             t2 = (t2_full if env["_expanded"]
                   else t2_srv if serve_grp else t2_flat)[sel]
             osel = o_c[sel]
+            fsel = f_c[sel]
             rsel = r_codes[sel]
             eff_m_cells = env["_eff_m"][t2]
             cls = ((accum_col[sel] > 1) | (eff_m_cells > 1)).astype(I64)
@@ -868,6 +918,8 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
                 b_pool = np.zeros_like(best)
                 b_draft = np.zeros_like(best)
                 b_hit = np.zeros_like(best)
+            if off_grp:
+                b_off = np.zeros_like(best)
             for s, srows in enumerate(plan.stages):
                 tabs = _stage_tables_jobs(
                     cfg, model, list(srows), rules, rep_ctx, cols, env,
@@ -885,8 +937,8 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
                 cache = tabs.cache[lm, t2]
                 bnd = tabs.boundary[lm, t2]
                 if profile is None:
-                    speak = (tabs.static_sum[lm, osel, cls]
-                             + tabs.opt_trans[lm, osel]
+                    speak = (tabs.static_sum[lm, osel, fsel, cls]
+                             + tabs.opt_trans[lm, osel, fsel]
                              + saved + trans + bnd + tabs.embed
                              + loss + inp + cache)
                 else:
@@ -894,11 +946,11 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
                     # the optimizer-update transient into act_transient
                     # BEFORE the profile scales it; loss/input/cache
                     # round separately, exactly like apply()
-                    speak = (tabs.static_scaled[lm, osel, cls]
+                    speak = (tabs.static_scaled[lm, osel, fsel, cls]
                              + profile.scale_batch(saved, "act_saved")
                              + profile.scale_batch(
                                  trans + bnd + tabs.embed
-                                 + tabs.opt_trans[lm, osel],
+                                 + tabs.opt_trans[lm, osel, fsel],
                                  "act_transient")
                              + profile.scale_batch(loss, "overhead")
                              + profile.scale_batch(inp, "overhead")
@@ -923,6 +975,18 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
                     b_pool = np.where(upd, pool, b_pool)
                     b_draft = np.where(upd, drf, b_draft)
                     b_hit = np.where(upd, psv, b_hit)
+                elif off_grp:
+                    # host-tier provenance follows the same
+                    # strictly-greater peak-stage rule: the reported
+                    # offload_bytes are the winning stage's host-resident
+                    # optimizer total (unscaled — host DRAM is outside
+                    # the HBM profile, mirroring CalibrationProfile.apply)
+                    hop = tabs.host_opt[lm, osel, fsel] \
+                        if tabs.host_opt is not None \
+                        else np.zeros_like(best)
+                    upd = speak > best
+                    best = np.where(upd, speak, best)
+                    b_off = np.where(upd, hop, b_off)
                 else:
                     best = np.maximum(best, speak)
             arch_peak[sel] = best
@@ -930,10 +994,13 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
                 arch_pool[sel] = b_pool
                 arch_draft[sel] = b_draft
                 arch_hit[sel] = b_hit
+            if off_grp:
+                arch_off[sel] = b_off
         peak[sl] = arch_peak
         pool_arr[sl] = arch_pool
         draft_arr[sl] = arch_draft
         hit_arr[sl] = arch_hit
+        off_arr[sl] = arch_off
         per_opt = np.array([_intern(opt_tbl, opt_names, o)
                             for o in opt_res], I64)
         res_opt_c[sl] = per_opt[o_c]
@@ -956,6 +1023,7 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
         grad_accum=cols.accum, global_batch=cols.gb, seq_len=cols.seq,
         peak_bytes=peak, budget_bytes=budget, fits=peak <= budget,
         serves=cols.serves, srv_c=cols.srv_c, pool_bytes=pool_arr,
-        draft_bytes=draft_arr, hit_saved_bytes=hit_arr)
+        draft_bytes=draft_arr, hit_saved_bytes=hit_arr,
+        offs=cols.offs, off_c=cols.off_c, offload_bytes=off_arr)
     return SW.SweepResults(grid=grid, columns=columns,
                            elapsed_s=time.perf_counter() - t0)

@@ -108,6 +108,37 @@ def eval_term(spec: TermSpec, env: dict, mesh_shape: dict,
     return math.prod(dims) * spec.nbytes * spec.mult // max(denom, 1)
 
 
+# ---------------------------------------------------------------------------
+# Optimizer-state host offload: the Eq.1 offload tier.
+#
+# With ``PredictContext.offload_opt`` the optimizer states live in host
+# DRAM and stream through a small double-buffered device staging window
+# during the (bucketed) update: the full state is cut into
+# ``OFFLOAD_BUCKETS`` equal buckets and while bucket i updates on device
+# bucket i+1 prefetches, so exactly TWO bucket-sized staging buffers are
+# resident at the peak.  The device-side term therefore shrinks from
+# ``opt_total`` to ``offload_staged_bytes(opt_total)`` and the full
+# ``opt_total`` moves to the host tier, reported as
+# ``PredictedMemory.offload_bytes`` (NOT part of the device peak).
+#
+# This helper is the SINGLE source of truth for the staging arithmetic:
+# the scalar path (predictor.compute_static) and the columnar path
+# (core.batch._stage_tables) both call it, in exact integer arithmetic,
+# so offload cells stay byte-identical between the two paths and
+# offload-off cells are untouched (the transform is only applied when
+# the knob is set).
+# ---------------------------------------------------------------------------
+
+OFFLOAD_BUCKETS = 16
+
+
+def offload_staged_bytes(opt_total: int) -> int:
+    """Device bytes of the double-buffered streaming window over a host
+    optimizer state of ``opt_total`` bytes: 2 ceil-divided buckets.
+    Exact ints; monotone in ``opt_total``; 0 stays 0."""
+    return 2 * (-(-int(opt_total) // OFFLOAD_BUCKETS))
+
+
 def eff_act_nbytes(nbytes: int, ctx: "PredictContext", saved: bool) -> int:
     """Backend-adjusted per-element bytes of an activation tensor: bf16
     tensors feel the cpu-oracle float normalization (see PredictContext)."""
@@ -155,6 +186,12 @@ class PredictContext:
     # planner.make_context normalizes, so serve=None cells are
     # bit-identical to pre-serve predictions.
     serve: Optional[object] = None
+    # Eq.1 offload tier (train-only; planner.make_context rejects it on
+    # serve kinds): optimizer states live in host DRAM and only the
+    # double-buffered ``offload_staged_bytes`` streaming window stays on
+    # device; the host residency is reported as
+    # ``PredictedMemory.offload_bytes`` outside the device peak.
+    offload_opt: bool = False
 
     @property
     def act_saved_bytes_per_bf16(self) -> int:

@@ -184,13 +184,26 @@ def check_serve(cfg, serve, kind: str) -> None:
                 f"{sorted(known)}")
 
 
+def check_offload(kind: str, offload_opt: bool) -> None:
+    """Reject the optimizer-offload knob on step kinds that hold no
+    optimizer state.  The offload twin of :func:`check_parallel` /
+    :func:`check_serve` — ``make_context`` (every per-cell path),
+    ``SweepGrid.check_offload`` (grid-level, both sweep modes) and the
+    sweep CLI all route through it."""
+    if offload_opt and kind != "train":
+        raise ValueError(
+            f"--offload-optimizer is invalid for kind {kind!r}: serve "
+            f"steps hold no optimizer state to offload — drop the knob "
+            f"or sweep kind 'train'")
+
+
 def make_context(cfg, mesh_shape: dict, *, kind: str, global_batch: int,
                  seq_len: int, backend: str = "tpu", grad_accum: int = 1,
                  remat: Optional[str] = None,
                  optimizer: Optional[str] = None,
                  microbatches: int = 1,
                  schedule: str = "1f1b",
-                 serve=None) -> F.PredictContext:
+                 serve=None, offload_opt: bool = False) -> F.PredictContext:
     """The ONE place a planner/sweep cell becomes a PredictContext — the
     sweep engine and ``check`` share it, so their predictions can never
     diverge on context construction.  The pipeline degree comes from the
@@ -209,6 +222,7 @@ def make_context(cfg, mesh_shape: dict, *, kind: str, global_batch: int,
             f"unknown schedule {schedule!r}; known: {SCHEDULES}")
     check_parallel(cfg, mesh_shape, kind, seq_len)
     check_serve(cfg, serve, kind)
+    check_offload(kind, offload_opt)
     if serve is not None and serve.is_neutral:
         serve = None
     opt = optimizer or cfg.optimizer
@@ -221,7 +235,7 @@ def make_context(cfg, mesh_shape: dict, *, kind: str, global_batch: int,
         if cfg.encdec else 0,
         kind=kind, max_len=seq_len, grad_accum=grad_accum,
         pp=M.pp_degree(mesh_shape), microbatches=microbatches,
-        schedule=schedule, serve=serve)
+        schedule=schedule, serve=serve, offload_opt=offload_opt)
 
 
 def _resolve_shape(shape):
@@ -238,7 +252,8 @@ def check(arch: str, shape_name, mesh_shape: dict,
           remat: Optional[str] = None, optimizer: Optional[str] = None,
           chip: str = "v5e", headroom: float = HEADROOM,
           profile=None, microbatches: int = 1,
-          schedule: str = "1f1b", serve=None) -> PlanReport:
+          schedule: str = "1f1b", serve=None,
+          offload_opt: bool = False) -> PlanReport:
     """Reference single-cell evaluation: fresh build, no caches.
 
     ``shape_name`` may be a registered shape name ("train_4k") or a
@@ -259,7 +274,8 @@ def check(arch: str, shape_name, mesh_shape: dict,
                        seq_len=shape.seq_len, backend=backend,
                        grad_accum=grad_accum, remat=remat,
                        optimizer=optimizer, microbatches=microbatches,
-                       schedule=schedule, serve=serve)
+                       schedule=schedule, serve=serve,
+                       offload_opt=offload_opt)
     pred = PR.predict(model, policy, ctx, profile=profile, chip=chip)
     budget = int((hbm_bytes if hbm_bytes is not None
                   else chip_hbm(chip)) * headroom)

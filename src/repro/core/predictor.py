@@ -55,6 +55,10 @@ class PredictedMemory:
     # informational: pool bytes the prefix-cache hit rate saved vs. the
     # same cell at hit-rate 0.  NOT part of peak_bytes.
     hit_saved_bytes: int = 0
+    # Eq.1 offload tier: host-DRAM bytes of the offloaded optimizer
+    # states (ctx.offload_opt).  Host memory, not HBM — NOT part of
+    # peak_bytes, and a CalibrationProfile leaves it unscaled.
+    offload_bytes: int = 0
     # pipeline-parallel provenance: which of n_stages stages this
     # prediction describes (0/1 on the non-pipelined path).  predict()
     # returns the max-peak stage; predict_stages() returns all of them.
@@ -82,6 +86,8 @@ class PredictedMemory:
             rows += [("kv_pool", self.pool_bytes),
                      ("draft", self.draft_bytes),
                      ("hit_saved", self.hit_saved_bytes)]
+        if self.offload_bytes:
+            rows += [("host_opt", self.offload_bytes)]
         rows += [("PEAK", self.peak_bytes)]
         out = "\n".join(f"  {k:<10s} {v / GiB:9.3f} GiB" for k, v in rows)
         if self.n_stages > 1:
@@ -400,6 +406,10 @@ class StaticTerms:
     grad_bytes: int
     opt_bytes: int
     output_copy_bytes: int
+    # host-DRAM residency of the offloaded optimizer states (the Eq.1
+    # offload tier); 0 unless ctx.offload_opt, in which case opt_bytes
+    # above is the staged device window over this total.
+    host_opt_bytes: int = 0
     # ((module_path, param, grad, opt, trainable), ...) in row order
     per_module: tuple = ()
 
@@ -452,9 +462,16 @@ def compute_static(rows: list[ParsedLayer],
         m[0] += p
         m[1] += g
         m[2] += o
+    host = 0
+    if ctx.offload_opt and opt:
+        # Eq.1 offload tier: the (already TP/ZeRO-sharded) state total
+        # moves to host DRAM; the device keeps the double-buffered
+        # streaming window.  per_module keeps reporting the pre-offload
+        # residency — it documents where the bytes COME from.
+        host, opt = opt, F.offload_staged_bytes(opt)
     return StaticTerms(
         param_bytes=param, grad_bytes=grad, opt_bytes=opt,
-        output_copy_bytes=out_copy,
+        output_copy_bytes=out_copy, host_opt_bytes=host,
         per_module=tuple((k, v[0], v[1], v[2], v[3])
                          for k, v in per.items()))
 
@@ -545,6 +562,7 @@ def assemble(static: StaticTerms, acts: ActTermsAgg, over: OverheadTerms,
         output_copy_bytes=static.output_copy_bytes,
         pool_bytes=over.pool_bytes, draft_bytes=over.draft_bytes,
         hit_saved_bytes=over.hit_saved_bytes,
+        offload_bytes=static.host_opt_bytes,
         stage=stage, n_stages=n_stages)
     for path, p, g, o, trainable in static.per_module:
         out.per_module[path] = {"param": p, "grad": g, "opt": o, "act": 0,

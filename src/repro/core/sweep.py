@@ -140,6 +140,14 @@ class SweepGrid:
     prefix_len: int = 0
     mixes: Sequence = (None,)
     draft_archs: Sequence[str] = ("",)
+    # Eq.1 offload-tier knob (train kinds only): False = optimizer states
+    # resident in HBM, True = host-offloaded with only the
+    # factors.offload_staged_bytes streaming window on device.
+    offload_optimizer: Sequence[bool] = (False,)
+
+    def offloads(self) -> tuple:
+        """The offload axis, normalized to a bool tuple."""
+        return tuple(bool(o) for o in _seq(self.offload_optimizer))
 
     def meshes(self) -> list[dict]:
         from repro.launch.mesh import enumerate_meshes
@@ -191,6 +199,7 @@ class SweepGrid:
                     for g in _seq(self.global_batches) if not g % a)
         return (len(_seq(self.arch)) * len(_seq(self.chip))
                 * len(self.meshes()) * len(_seq(self.optimizers))
+                * len(self.offloads())
                 * len(_seq(self.remats)) * len(_seq(self.schedules))
                 * len(_seq(self.microbatches)) * len(self.serve_specs())
                 * pairs * len(_seq(self.seq_lens)))
@@ -241,28 +250,40 @@ class SweepGrid:
             for spec in specs:
                 PL.check_serve(cfg, spec, self.kind)
 
+    def check_offload(self) -> None:
+        """Validate the optimizer-offload axis up front through the SAME
+        ``planner.check_offload`` gate the per-cell path hits in
+        ``make_context`` — both sweep modes and the CLI reject offload
+        on a serve kind with one clean ValueError."""
+        for off in self.offloads():
+            PL.check_offload(self.kind, off)
+
     def cells(self) -> Iterator["SweepCell"]:
         """Deterministic cell enumeration (first-fit order: cheap knobs
         vary fastest)."""
         self.check_schedules()
         self.check_parallel()
         self.check_serve()
+        self.check_offload()
         meshes = self.meshes()
         serves = self.serve_specs()
+        offs = self.offloads()
         for arch in _seq(self.arch):
             arch = normalize_arch(arch)
             for chip in _seq(self.chip):
                 for mesh in meshes:
                     for opt in _seq(self.optimizers):
-                        for remat in _seq(self.remats):
-                            for sched in _seq(self.schedules):
-                                for mb in _seq(self.microbatches):
-                                    for srv in serves:
-                                        yield from self._inner_cells(
-                                            arch, chip, mesh, opt, remat,
-                                            sched, int(mb), srv)
+                        for off in offs:
+                            for remat in _seq(self.remats):
+                                for sched in _seq(self.schedules):
+                                    for mb in _seq(self.microbatches):
+                                        for srv in serves:
+                                            yield from self._inner_cells(
+                                                arch, chip, mesh, opt,
+                                                off, remat, sched,
+                                                int(mb), srv)
 
-    def _inner_cells(self, arch, chip, mesh, opt, remat, sched,
+    def _inner_cells(self, arch, chip, mesh, opt, off, remat, sched,
                      mb, srv=None) -> Iterator["SweepCell"]:
         for accum in _seq(self.grad_accums):
             for gb in _seq(self.global_batches):
@@ -276,7 +297,8 @@ class SweepGrid:
                         schedule=sched, microbatches=mb,
                         grad_accum=int(accum), global_batch=int(gb),
                         seq_len=int(seq), kind=self.kind,
-                        backend=self.backend, serve=srv)
+                        backend=self.backend, serve=srv,
+                        offload=bool(off))
 
 
 @dataclass(frozen=True)
@@ -298,6 +320,8 @@ class SweepCell:
     # Optional repro.serve.pool.ServeSpec (frozen/hashable); None when
     # every serving-fleet knob is neutral
     serve: Optional[object] = None
+    # Eq.1 offload-tier knob: host-offloaded optimizer states
+    offload: bool = False
 
     @property
     def mesh_shape(self) -> dict:
@@ -336,6 +360,10 @@ class SweepResult:
     pool_bytes: int = 0
     draft_bytes: int = 0
     hit_saved_bytes: int = 0
+    # Eq.1 offload tier: knob + the peak stage's host-DRAM residency
+    # (informational, outside the device peak)
+    offload: bool = False
+    offload_bytes: int = 0
     prediction: Optional[PR.PredictedMemory] = None
 
     @property
@@ -384,6 +412,10 @@ _COLUMNS = ("arch", "chip", "mesh", "optimizer", "remat", "sched",
 _SERVE_COLUMNS = ("block", "blocks_per_seq", "hit", "pool_gib",
                   "hit_saved_gib", "draft_gib")
 
+# offload columns appended when the grid sweeps the offload knob: the
+# per-cell knob value + the host-DRAM optimizer residency in GiB.
+_OFFLOAD_COLUMNS = ("offload", "host_opt_gib")
+
 
 def _row_of(r: SweepResult) -> tuple:
     return (r.arch, r.chip, r.mesh_str, r.optimizer, r.remat,
@@ -402,6 +434,11 @@ def _serve_row_of(r: SweepResult) -> tuple:
             f"{r.pool_bytes / GiB:.3f}",
             f"{r.hit_saved_bytes / GiB:.3f}",
             f"{r.draft_bytes / GiB:.3f}")
+
+
+def _offload_row_of(r: SweepResult) -> tuple:
+    return ("yes" if r.offload else "no",
+            f"{r.offload_bytes / GiB:.3f}")
 
 
 class SweepResults:
@@ -571,12 +608,30 @@ class SweepResults:
         except (AttributeError, ValueError):
             return False
 
+    def _offload_active(self) -> bool:
+        """True when the grid swept the optimizer-offload knob — the
+        report then carries the offload columns."""
+        try:
+            return any(self.grid.offloads())
+        except (AttributeError, ValueError):
+            return False
+
     def _report_columns(self):
+        cols, extras = _COLUMNS, []
         if self._serve_active():
-            def row(r):
-                return _row_of(r) + _serve_row_of(r)
-            return _COLUMNS + _SERVE_COLUMNS, row
-        return _COLUMNS, _row_of
+            cols, extras = cols + _SERVE_COLUMNS, extras + [_serve_row_of]
+        if self._offload_active():
+            cols, extras = (cols + _OFFLOAD_COLUMNS,
+                            extras + [_offload_row_of])
+        if not extras:
+            return _COLUMNS, _row_of
+
+        def row(r):
+            out = _row_of(r)
+            for extra in extras:
+                out = out + extra(r)
+            return out
+        return cols, row
 
     def to_markdown(self, limit: Optional[int] = None,
                     title: str = "") -> str:
@@ -660,7 +715,7 @@ class SweepEngine:
             return self._predict_pipelined(model, base, ctx, arch, policy,
                                            profile, chip)
 
-        skey = base + (ctx.optimizer, ctx.eff_grad_bytes)
+        skey = base + (ctx.optimizer, ctx.eff_grad_bytes, ctx.offload_opt)
         static = self._static.get(skey)
         if static is None:
             static = self._static[skey] = PR.compute_static(rows, ctx)
@@ -701,6 +756,7 @@ class SweepEngine:
         pp, m = ctx.pp, ctx.eff_microbatches
         phash = None if profile is None else profile.profile_hash
         pkey = (base, "pipelined", ctx.optimizer, ctx.eff_grad_bytes,
+                ctx.offload_opt,
                 ctx.remat, ctx.pp_micro_batch, ctx.global_batch,
                 ctx.seq_len, ctx.enc_seq, ctx.max_len, m, ctx.schedule,
                 ctx.serve, phash, chip if phash is not None else None)
@@ -711,7 +767,8 @@ class SweepEngine:
         best = None
         for s, srows in enumerate(plan.stages):
             sbase = base + (("stage", s, pp),)
-            skey = sbase + (ctx.optimizer, ctx.eff_grad_bytes)
+            skey = sbase + (ctx.optimizer, ctx.eff_grad_bytes,
+                            ctx.offload_opt)
             static = self._static.get(skey)
             if static is None:
                 static = self._static[skey] = PR.compute_static(
@@ -752,7 +809,8 @@ class SweepEngine:
                               grad_accum=cell.grad_accum, remat=cell.remat,
                               optimizer=cell.optimizer,
                               microbatches=cell.microbatches,
-                              schedule=cell.schedule, serve=cell.serve)
+                              schedule=cell.schedule, serve=cell.serve,
+                              offload_opt=cell.offload)
         pred = self.predict_cell(cell.arch, policy, ctx, profile=profile,
                                  chip=cell.chip)
         budget = int(PL.chip_hbm(cell.chip) * headroom)
@@ -767,6 +825,7 @@ class SweepEngine:
             serve=cell.serve, pool_bytes=pred.pool_bytes,
             draft_bytes=pred.draft_bytes,
             hit_saved_bytes=pred.hit_saved_bytes,
+            offload=cell.offload, offload_bytes=pred.offload_bytes,
             peak_bytes=pred.peak_bytes, budget_bytes=budget,
             fits=pred.peak_bytes <= budget,
             prediction=pred if keep_prediction else None)
@@ -777,7 +836,8 @@ class SweepEngine:
                remat: Optional[str] = None,
                optimizer: Optional[str] = None, chip: str = "v5e",
                profile=None, microbatches: int = 1,
-               schedule: str = "1f1b", serve=None) -> PL.PlanReport:
+               schedule: str = "1f1b", serve=None,
+               offload_opt: bool = False) -> PL.PlanReport:
         """PlanReport-shaped single-cell evaluation (planner.plan's
         memoized backend); byte-identical to ``planner.check``."""
         shape = PL._resolve_shape(shape)
@@ -788,7 +848,8 @@ class SweepEngine:
                               grad_accum=grad_accum, remat=remat,
                               optimizer=optimizer,
                               microbatches=microbatches,
-                              schedule=schedule, serve=serve)
+                              schedule=schedule, serve=serve,
+                              offload_opt=offload_opt)
         pred = self.predict_cell(arch, policy, ctx, profile=profile,
                                  chip=chip)
         return PL.PlanReport(arch=arch, shape=shape.name,
@@ -908,6 +969,10 @@ def _cardinality_table(grid: SweepGrid) -> str:
              f"b{s.block_size}/u{s.util_bp / 10000:g}/h{s.hit_bp / 10000:g}"
              + (f"/d:{s.draft_arch}" if s.draft_arch else "")
              for s in serves])))
+    offs = grid.offloads()
+    if any(offs):
+        rows.insert(-2, ("offload", len(offs),
+                         _preview(["on" if o else "off" for o in offs])))
     out = [f"  {'knob':<14s} {'count':>5s}  values"]
     for name, count, vals in rows:
         out.append(f"  {name:<14s} {count:>5d}  {vals}")
@@ -1005,6 +1070,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("--draft-arch", default="",
                    help="comma list of speculative-decode draft arches "
                         "('' = none); decode kind only")
+    p.add_argument("--offload-optimizer", default="off",
+                   choices=("off", "on", "both"),
+                   help="optimizer-state host offload (Eq.1 offload "
+                        "tier): off (default), on, or both to sweep the "
+                        "knob; train kind only")
     p.add_argument("--policy", default="full", choices=sorted(POLICIES))
     p.add_argument("--backend", default="tpu", choices=("tpu", "cpu"))
     p.add_argument("--headroom", type=float, default=PL.HEADROOM)
@@ -1081,15 +1151,19 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         prefix_hit_rates=args.prefix_hit_rate,
         prefix_len=args.prefix_len, mixes=mixes,
         draft_archs=tuple(args.draft_arch.split(","))
-        if args.draft_arch else ("",))
+        if args.draft_arch else ("",),
+        offload_optimizer={"off": (False,), "on": (True,),
+                           "both": (False, True)}[args.offload_optimizer])
     try:
         # reject ep-on-dense / ep > n_experts / cp-on-decode /
         # non-divisible cp — and serve knobs on train kinds / bad block
-        # alignment / out-of-range rates / unknown draft arches — with a
-        # clean argparse error, before any evaluation (and before
-        # --dry-run estimates a doomed grid)
+        # alignment / out-of-range rates / unknown draft arches /
+        # optimizer offload on serve kinds — with a clean argparse
+        # error, before any evaluation (and before --dry-run estimates
+        # a doomed grid)
         grid.check_parallel()
         grid.check_serve()
+        grid.check_offload()
     except ValueError as e:
         p.error(str(e))
 

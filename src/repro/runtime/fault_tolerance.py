@@ -44,9 +44,18 @@ class ResilientTrainer:
     make_batch: Optional[Callable] = None   # step -> batch (overrides pipeline)
     failure_injector: Optional[Callable] = None  # step -> bool (tests)
     on_straggler: Optional[Callable] = None
+    # memory autopilot hook (repro.autopilot.Autopilot) + its telemetry
+    # source (step -> observed bytes / dryrun record / None).  When both
+    # are set, every step is admission-controlled: the autopilot
+    # observes BEFORE the step runs so a mitigation lands ahead of the
+    # allocation that would have OOMed, and every restart re-validates
+    # the mesh through planner.check_parallel via on_restart.
+    autopilot: Optional[Any] = None
+    memory_source: Optional[Callable] = None
 
     _ewma: Optional[float] = None
-    restarts: int = 0
+    restarts: int = 0                       # lifetime stat (never resets)
+    _consecutive_failures: int = 0          # the abort budget
     straggler_events: list = field(default_factory=list)
 
     def _batch(self, step: int):
@@ -59,6 +68,10 @@ class ResilientTrainer:
         history = []
         step = start_step
         while step < start_step + n_steps:
+            if self.autopilot is not None and self.memory_source is not None:
+                # admission control: classify the upcoming step's memory
+                # before launching it, so a mitigation beats the OOM
+                self.autopilot.observe(step, self.memory_source(step))
             batch = self._batch(step)
             t0 = time.monotonic()
             try:
@@ -66,8 +79,13 @@ class ResilientTrainer:
                     raise RuntimeError(f"injected failure at step {step}")
                 state, metrics = self.train_step(state, batch)
             except Exception:
+                # `restarts` is the lifetime stat; the abort decision
+                # rides the CONSECUTIVE counter (reset on success), so a
+                # long run with occasional recovered failures is never
+                # killed by its uptime.
                 self.restarts += 1
-                if self.restarts > self.fault_cfg.max_restarts:
+                self._consecutive_failures += 1
+                if self._consecutive_failures > self.fault_cfg.max_restarts:
                     raise
                 restored_step, restored = self.checkpointer.restore_latest(
                     like=state)
@@ -75,7 +93,10 @@ class ResilientTrainer:
                     state = restored
                     step = int(restored_step)
                 # else: replay from start_step state (no ckpt yet)
+                if self.autopilot is not None:
+                    self.autopilot.on_restart(step)
                 continue
+            self._consecutive_failures = 0
             dt = time.monotonic() - t0
             self._track_stragglers(step, dt)
             history.append({"step": step, **{k: float(np.asarray(v))
@@ -100,18 +121,23 @@ class ResilientTrainer:
             if self.on_straggler:
                 self.on_straggler(step, dt)
             # Mitigation: deterministic pipeline lets healthy hosts take
-            # over the slow shard's row range next step.
+            # over the slow shard's row range next step — rotate onto
+            # the NEXT shard, which is always a different, valid id.
             if hasattr(self.pipeline, "n_shards") \
                     and self.pipeline.n_shards > 1:
-                self.pipeline.shard_id = (self.pipeline.shard_id
-                                          % max(self.pipeline.n_shards - 1, 1))
+                self.pipeline.shard_id = ((self.pipeline.shard_id + 1)
+                                          % self.pipeline.n_shards)
         a = self.fault_cfg.ewma_alpha
         self._ewma = (1 - a) * self._ewma + a * dt
 
     # -- elastic scaling ----------------------------------------------------
     def rescale(self, new_n_shards: int) -> None:
         """Re-partition the data pipeline for a new host count; state
-        resharding happens at restore time via mesh-agnostic checkpoints."""
+        resharding happens at restore time via mesh-agnostic checkpoints.
+        With an autopilot attached the elastic resize re-validates the
+        mesh (planner.check_parallel) before the run resumes."""
         self.pipeline.n_shards = new_n_shards
         self.pipeline.shard_id = min(self.pipeline.shard_id,
                                      new_n_shards - 1)
+        if self.autopilot is not None:
+            self.autopilot.on_restart(-1)

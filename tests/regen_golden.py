@@ -41,6 +41,12 @@ KINDS = ("train", "prefill", "decode")
 #: contiguous-KV path
 SERVE_KIND = "decode_paged"
 
+#: Eq.1 offload-tier leg: train at the SAME canonical cell with the
+#: optimizer states host-offloaded (factors.offload_staged_bytes keeps
+#: only the double-buffered staging window on device); the plain
+#: "train" leg above keeps freezing the no-offload path byte-for-byte
+OFFLOAD_KIND = "train_offload"
+
 #: PredictedMemory fields frozen per cell, in assertion order
 COMPONENTS = ("param_bytes", "grad_bytes", "opt_bytes", "act_saved_bytes",
               "act_transient_bytes", "loss_bytes", "input_bytes",
@@ -51,6 +57,10 @@ COMPONENTS = ("param_bytes", "grad_bytes", "opt_bytes", "act_saved_bytes",
 #: savings and the (zero, draft-free) draft residency
 SERVE_COMPONENTS = COMPONENTS + ("pool_bytes", "hit_saved_bytes",
                                  "draft_bytes")
+
+#: the offload leg additionally freezes the host-DRAM residency (the
+#: displaced optimizer total, informational — outside the device peak)
+OFFLOAD_COMPONENTS = COMPONENTS + ("offload_bytes",)
 
 
 def canon_serve():
@@ -76,23 +86,27 @@ def snapshot(arch: str, engine=None) -> dict:
     """The golden payload for one arch: kind -> raw/calibrated ->
     components (+ the per-module table on the raw leg).  Kinds are the
     three step kinds plus ``decode_paged`` (decode under the fixed
-    :func:`canon_serve` serving-fleet knobs)."""
+    :func:`canon_serve` serving-fleet knobs) and ``train_offload``
+    (train with host-offloaded optimizer states)."""
     from repro.core import sweep as SW
     engine = engine or SW.SweepEngine()
     budget = int(PL.chip_hbm(CANON_CHIP) * PL.HEADROOM)
     out: dict = {}
-    for kind in KINDS + (SERVE_KIND,):
+    for kind in KINDS + (SERVE_KIND, OFFLOAD_KIND):
         serve = canon_serve() if kind == SERVE_KIND else None
-        comps = SERVE_COMPONENTS if kind == SERVE_KIND else COMPONENTS
+        offload = kind == OFFLOAD_KIND
+        comps = (SERVE_COMPONENTS if kind == SERVE_KIND
+                 else OFFLOAD_COMPONENTS if offload else COMPONENTS)
         shape = ShapeConfig("golden", CANON_SEQ, CANON_BATCH,
-                            "decode" if kind == SERVE_KIND else kind)
+                            "decode" if kind == SERVE_KIND
+                            else "train" if offload else kind)
         per: dict = {}
         for variant, profile in (("raw", None),
                                  ("calibrated", GOLDEN_PROFILE)):
             rep = engine.report(arch, shape, dict(CANON_MESH),
                                 backend=CANON_BACKEND, budget_bytes=budget,
                                 chip=CANON_CHIP, profile=profile,
-                                serve=serve)
+                                serve=serve, offload_opt=offload)
             comp = {c: int(getattr(rep.prediction, c)) for c in comps}
             if variant == "raw":
                 comp["per_module"] = {

@@ -1,0 +1,507 @@
+"""Memory autopilot: telemetry watch, offload tier, mitigation planning,
+the closed-loop guard, and the fault-tolerance fixes that ride this PR.
+
+Covers the ISSUE-7 acceptance properties:
+
+* telemetry defects (missing file, truncated JSON, missing counters,
+  zero/negative peaks) classify UNAVAILABLE — never a crash, never a
+  bogus SAFE;
+* the Eq.1 offload tier is byte-identical between the scalar and
+  columnar sweep paths and inert when off;
+* every applied mitigation's predicted peak re-validates against
+  un-memoized ``planner.check`` for the mutated cell;
+* the guarded trainer finishes every synthetic drift scenario with zero
+  injected OOMs while the unguarded baseline aborts;
+* ``ResilientTrainer`` aborts on CONSECUTIVE failures only (lifetime
+  ``restarts`` keeps counting) and stragglers rotate onto a different,
+  valid shard.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.autopilot import (SCENARIOS, Autopilot, MemoryWatch, Mitigation,
+                             MitigationError, MitigationPlanner, WatchState,
+                             base_cell, load_dryrun, observed_bytes,
+                             run_scenario, scan_dryrun_dir, scenario)
+from repro.autopilot.harness import BASE_FRAC
+from repro.configs import ShapeConfig
+from repro.core import factors as F
+from repro.core import planner as PL
+from repro.core import sweep as SW
+from repro.core.spec import FULL_TRAIN
+
+
+# -- telemetry ingest: observed_bytes / load_dryrun / scan_dryrun_dir --------
+
+GOOD_MEM = {"argument_bytes": 100, "output_bytes": 40, "temp_bytes": 70,
+            "alias_bytes": 10}
+
+
+def test_observed_bytes_total_wins_and_rebuild():
+    assert observed_bytes({"memory": {"total_bytes": 123}}) == 123
+    # full record or bare memory dict both accepted
+    assert observed_bytes({"memory": GOOD_MEM}) == 200
+    assert observed_bytes(GOOD_MEM) == 200
+    # serialized total wins over the counters
+    assert observed_bytes({**GOOD_MEM, "total_bytes": 7}) == 7
+
+
+@pytest.mark.parametrize("record", [
+    None, 17, "nope", [],                         # not a record at all
+    {}, {"memory": None}, {"memory": []},         # no memory dict
+    {"memory": {}},                               # no counters at all
+    {"memory": {"argument_bytes": 1}},            # missing counters
+    {"memory": {**GOOD_MEM, "temp_bytes": None}},
+    {"memory": {**GOOD_MEM, "temp_bytes": "NaNish"}},
+    {"memory": {"total_bytes": 0}},               # zero-byte peak
+    {"memory": {"total_bytes": -5}},
+    {"memory": {"total_bytes": "garbage"}},
+])
+def test_observed_bytes_defects_yield_none(record):
+    assert observed_bytes(record) is None
+
+
+def test_observed_bytes_matches_memory_stats_contract():
+    """The watch rebuilds the SAME total core/xla_metrics computes and
+    launch/dryrun serializes (arg + temp + out - alias)."""
+    from repro.core.xla_metrics import MemoryStats
+    ms = MemoryStats(argument_bytes=100, output_bytes=40, temp_bytes=70,
+                     alias_bytes=10)
+    assert observed_bytes({"memory": GOOD_MEM}) == ms.total_bytes
+    # the full dryrun artifact layout (counters + serialized total)
+    record = {"arch": "x", "memory": {**GOOD_MEM,
+                                      "total_bytes": ms.total_bytes}}
+    assert observed_bytes(record) == ms.total_bytes
+    # an all-aliased program nets to zero -> unusable, not SAFE
+    zero = MemoryStats(argument_bytes=5, output_bytes=5, temp_bytes=0,
+                       alias_bytes=10)
+    assert zero.total_bytes == 0
+    assert observed_bytes({"memory": {
+        "argument_bytes": 5, "output_bytes": 5, "temp_bytes": 0,
+        "alias_bytes": 10}}) is None
+
+
+def test_load_dryrun_defects(tmp_path):
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps({"memory": GOOD_MEM}))
+    assert load_dryrun(str(good)) == 200
+
+    truncated = tmp_path / "truncated.json"
+    truncated.write_text(json.dumps({"memory": GOOD_MEM})[:25])
+    assert load_dryrun(str(truncated)) is None
+
+    empty = tmp_path / "empty.json"
+    empty.write_text("")
+    assert load_dryrun(str(empty)) is None
+    assert load_dryrun(str(tmp_path / "missing.json")) is None
+
+    zero = tmp_path / "zero.json"
+    zero.write_text(json.dumps({"memory": {"total_bytes": 0}}))
+    assert load_dryrun(str(zero)) is None
+
+
+def test_scan_dryrun_dir(tmp_path):
+    assert scan_dryrun_dir(str(tmp_path / "nope")) == []
+    (tmp_path / "a.json").write_text(json.dumps({"memory": GOOD_MEM}))
+    (tmp_path / "b.json").write_text("{ not json")
+    (tmp_path / "c.txt").write_text("ignored")
+    rows = scan_dryrun_dir(str(tmp_path))
+    assert rows == [("a.json", 200), ("b.json", None)]
+
+
+# -- the watch state machine -------------------------------------------------
+
+
+def _watch(**kw):
+    return MemoryWatch(predicted_bytes=1000, budget_bytes=1250, **kw)
+
+
+def test_watch_safe_then_drift_then_critical():
+    w = _watch()
+    assert w.observe(0, 1000).state is WatchState.SAFE
+    # inside the guard band (0.95 * 1250 = 1187.5) but over it -> DRIFT
+    assert w.observe(1, 1200).state is WatchState.DRIFT
+    # at/over budget -> CRITICAL, regardless of the EWMA
+    assert w.observe(2, 1300).state is WatchState.CRITICAL
+
+
+def test_watch_ewma_arm_catches_slow_leak():
+    """Persistent 10% overshoot never enters the guard band raw, but the
+    EWMA ratio crosses drift_tolerance."""
+    w = _watch()
+    states = [w.observe(i, 1100).state for i in range(12)]
+    assert states[0] is WatchState.SAFE        # ewma still ~1.025
+    assert WatchState.DRIFT in states
+    assert w.ewma_ratio > w.drift_tolerance
+    # projection rides the EWMA: still inside the guard band
+    assert all(s is not WatchState.CRITICAL for s in states)
+
+
+@pytest.mark.parametrize("bad", [None, 0, -123,
+                                 {"memory": {"total_bytes": 0}},
+                                 {"memory": {}}])
+def test_watch_unusable_telemetry_is_unavailable_never_safe(bad):
+    w = _watch()
+    before = w.ewma_ratio
+    s = w.observe(0, bad)
+    assert s.state is WatchState.UNAVAILABLE
+    assert s.observed_bytes is None
+    assert w.ewma_ratio == before          # no observation, no EWMA update
+
+
+def test_watch_repredict_and_guards():
+    w = _watch()
+    w.observe(0, 1400)
+    ratio = w.ewma_ratio
+    w.repredict(500, reset_ewma=False)
+    assert (w.predicted_bytes, w.ewma_ratio) == (500, ratio)
+    w.repredict(500)
+    assert w.ewma_ratio == 1.0
+    with pytest.raises(ValueError):
+        w.repredict(0)
+    with pytest.raises(ValueError):
+        MemoryWatch(predicted_bytes=0, budget_bytes=1)
+
+
+# -- the Eq.1 offload tier ---------------------------------------------------
+
+
+def test_offload_staged_bytes_math():
+    assert F.offload_staged_bytes(0) == 0
+    assert F.offload_staged_bytes(16) == 2
+    assert F.offload_staged_bytes(17) == 4          # ceil to a bucket
+    big = 10 ** 9
+    assert F.offload_staged_bytes(big) < big        # always a shrink
+    assert F.offload_staged_bytes(big) == \
+        2 * -(-big // F.OFFLOAD_BUCKETS)
+
+
+def test_offload_scalar_semantics():
+    """Offload swaps the resident optimizer bytes for the staging
+    window and surfaces the displaced total as host residency."""
+    shape = ShapeConfig("cell", 1024, 8, "train")
+    mesh = {"data": 2, "model": 2}
+    base = PL.check("smollm-360m", shape, mesh, backend="tpu")
+    off = PL.check("smollm-360m", shape, mesh, backend="tpu",
+                   offload_opt=True)
+    pb, po = base.prediction, off.prediction
+    assert po.offload_bytes == pb.opt_bytes          # displaced total
+    assert po.opt_bytes == F.offload_staged_bytes(pb.opt_bytes)
+    assert po.opt_bytes < pb.opt_bytes
+    assert off.peak_bytes < base.peak_bytes
+    assert pb.offload_bytes == 0                     # off => inert
+
+
+@pytest.mark.parametrize("kind", ["prefill", "decode"])
+def test_offload_rejected_on_serve_kinds(kind):
+    shape = ShapeConfig("cell", 1024, 8, kind)
+    with pytest.raises(ValueError, match="offload-optimizer is invalid"):
+        PL.check("smollm-360m", shape, {"data": 2}, backend="tpu",
+                 offload_opt=True)
+    grid = SW.SweepGrid(arch="smollm-360m", chips=8, kind=kind,
+                        offload_optimizer=(False, True),
+                        global_batches=(8,), seq_lens=(512,))
+    for mode in ("cell", "columnar"):
+        with pytest.raises(ValueError, match="offload-optimizer"):
+            SW.sweep(grid, mode=mode)
+
+
+def test_sweep_cli_rejects_offload_on_serve(capsys):
+    with pytest.raises(SystemExit) as exc:
+        SW.main(["--arch", "smollm_360m", "--chips", "8", "--kind",
+                 "decode", "--batch", "8", "--seq-len", "512",
+                 "--offload-optimizer", "on"])
+    assert exc.value.code == 2
+    assert "offload-optimizer is invalid" in capsys.readouterr().err
+
+
+def test_offload_columnar_parity(sweep_engine):
+    """Scalar and columnar paths agree byte-for-byte across the offload
+    knob, and the off half is bit-equal to a grid without the axis."""
+    grid = SW.SweepGrid(
+        arch="deepseek-v2-lite-16b", chips=8,
+        offload_optimizer=(False, True),
+        optimizers=(None, "adafactor"), grad_accums=(1, 2),
+        global_batches=(8,), seq_lens=(512,), backend="tpu")
+    col = sweep_engine.sweep(grid, mode="columnar")
+    cell = sweep_engine.sweep(grid, mode="cell")
+
+    def cols(res):
+        return [(r.peak_bytes, r.fits, r.optimizer, r.grad_accum,
+                 tuple(sorted(r.mesh_shape.items())), r.offload,
+                 r.offload_bytes) for r in res.results]
+
+    assert cols(col) == cols(cell)
+    on = [r for r in col.results if r.offload]
+    assert on and all(r.offload_bytes > 0 for r in on)
+    plain = sweep_engine.sweep(
+        SW.SweepGrid(arch="deepseek-v2-lite-16b", chips=8,
+                     optimizers=(None, "adafactor"), grad_accums=(1, 2),
+                     global_batches=(8,), seq_lens=(512,), backend="tpu"),
+        mode="columnar")
+    offless = [c for c in cols(col) if not c[-2]]
+    assert offless == cols(plain)
+    assert all(r.offload_bytes == 0 for r in plain.results)
+
+
+# -- mitigation planning -----------------------------------------------------
+
+
+def _harness_headroom(engine, frac=BASE_FRAC):
+    """The harness's budget normalization: base cell at ``frac`` of the
+    budget (the default v5e budget is far below the harness cell, which
+    would force every plan straight to reshard)."""
+    base_pred = engine.evaluate(base_cell(), policy=FULL_TRAIN).peak_bytes
+    return (base_pred / frac) / PL.chip_hbm("v5e")
+
+
+def test_planner_ranks_cheapest_safe_first(sweep_engine):
+    planner = MitigationPlanner(engine=sweep_engine, policy=FULL_TRAIN,
+                                headroom=_harness_headroom(sweep_engine))
+    plan = planner.plan(base_cell(), ewma_ratio=1.2)
+    assert plan.candidates, "the harness cell must have knob room"
+    base_pred = sweep_engine.evaluate(
+        base_cell(), policy=FULL_TRAIN).peak_bytes
+    for c in plan.candidates:
+        assert c.predicted_bytes < base_pred       # real savings only
+        assert c.projected_bytes == int(1.2 * c.predicted_bytes)
+    ranked = [(not c.safe, c.throughput_cost) for c in plan.candidates]
+    assert ranked == sorted(ranked)
+    # pp=1 cell: no microbatch move, so grad_accum is the cheapest prior
+    assert plan.best.action == "grad_accum"
+
+
+def test_planner_reshard_is_last_resort(sweep_engine):
+    """With an absurd drift ratio nothing on-mesh is safe, so the
+    planner escalates to plan_min_chips."""
+    planner = MitigationPlanner(engine=sweep_engine, policy=FULL_TRAIN,
+                                headroom=_harness_headroom(sweep_engine))
+    plan = planner.plan(base_cell(), ewma_ratio=50.0)
+    assert not any(c.safe for c in plan.candidates
+                   if c.action != "reshard")
+    actions = {c.action for c in plan.candidates}
+    if "reshard" in actions:                 # found a bigger legal mesh
+        rs = next(c for c in plan.candidates if c.action == "reshard")
+        assert rs.cell.n_chips > base_cell().n_chips
+    modest = planner.plan(base_cell(), ewma_ratio=1.1)
+    assert modest.reaches_safety
+    assert "reshard" not in {c.action for c in modest.candidates}
+
+
+def test_applied_mitigation_validates_against_planner_check(sweep_engine):
+    hr = _harness_headroom(sweep_engine)
+    pilot = Autopilot(cell=base_cell(), engine=sweep_engine, headroom=hr)
+    m = pilot.mitigate(step=0, ewma_ratio=1.2)
+    assert m is not None and pilot.cell == m.cell
+    shape = ShapeConfig("t", m.cell.seq_len, m.cell.global_batch, "train")
+    ref = PL.check(m.cell.arch, shape, m.cell.mesh_shape,
+                   backend=m.cell.backend, grad_accum=m.cell.grad_accum,
+                   remat=m.cell.remat, optimizer=m.cell.optimizer,
+                   chip=m.cell.chip, headroom=hr,
+                   offload_opt=m.cell.offload)
+    assert ref.peak_bytes == m.predicted_bytes
+
+
+def test_tampered_mitigation_raises(sweep_engine):
+    pilot = Autopilot(cell=base_cell(), engine=sweep_engine,
+                      headroom=_harness_headroom(sweep_engine))
+    good = pilot.planner.plan(base_cell(), ewma_ratio=1.2).best
+    bogus = Mitigation(action=good.action, cell=good.cell,
+                       predicted_bytes=good.predicted_bytes + 1,
+                       projected_bytes=good.projected_bytes,
+                       budget_bytes=good.budget_bytes,
+                       throughput_cost=good.throughput_cost)
+    with pytest.raises(MitigationError):
+        pilot._apply(0, bogus)
+    assert pilot.cell == base_cell()       # nothing applied
+
+
+def test_on_restart_revalidates_mesh(sweep_engine):
+    # triple the harness budget so the resize itself never re-mitigates
+    pilot = Autopilot(cell=base_cell(), engine=sweep_engine,
+                      headroom=3 * _harness_headroom(sweep_engine))
+    before = pilot.predicted_bytes
+    cell = pilot.on_restart(mesh_shape={"data": 4, "model": 1})
+    assert cell.mesh_shape == {"data": 4, "model": 1}
+    assert pilot.predicted_bytes != before
+    # an illegal resize (expert axis on a dense arch) fails loudly
+    with pytest.raises(ValueError):
+        pilot.on_restart(mesh_shape={"data": 2, "expert": 2})
+
+
+# -- the closed loop: guarded vs unguarded trainer runs ----------------------
+
+
+@pytest.mark.parametrize("name", [s.name for s in SCENARIOS])
+def test_guarded_run_completes_every_scenario(name, sweep_engine):
+    r = run_scenario(scenario(name), guarded=True, engine=sweep_engine)
+    assert r.completed and not r.aborted
+    assert r.oom_free and r.restarts == 0
+    assert r.steps_done == r.n_steps
+    assert r.mitigations, "crossing the budget line must cost a knob"
+    assert r.final_predicted_bytes < r.base_predicted_bytes
+
+
+def test_unguarded_run_aborts(sweep_engine):
+    r = run_scenario(scenario("underestimate"), guarded=False,
+                     engine=sweep_engine)
+    assert r.aborted and not r.completed
+    assert r.oom_steps and r.restarts > 0
+    assert not r.mitigations
+
+
+def test_scenarios_all_cross_budget():
+    for s in SCENARIOS:
+        assert s.crosses_budget(), s.name
+        assert s.n_steps == len(s.ratios)
+    assert abs(1.0 / BASE_FRAC - 1.25) < 1e-9
+    with pytest.raises(KeyError):
+        scenario("nope")
+
+
+# -- ResilientTrainer fixes (satellites a + b) -------------------------------
+
+
+def _trainer(tmp_path, injector, max_restarts=3, pipeline=None):
+    from repro.checkpoint import Checkpointer
+    from repro.runtime.fault_tolerance import FaultConfig, ResilientTrainer
+    return ResilientTrainer(
+        train_step=lambda state, batch: (state + 1, {"loss": 0.0}),
+        pipeline=pipeline,
+        checkpointer=Checkpointer(str(tmp_path)),
+        fault_cfg=FaultConfig(ckpt_every=10 ** 6,
+                              max_restarts=max_restarts),
+        make_batch=lambda step: None,
+        failure_injector=injector)
+
+
+def test_restart_budget_is_consecutive_not_lifetime(tmp_path):
+    """Regression: sporadic recovered failures across a long run must
+    never exhaust the budget — only a consecutive streak aborts."""
+    failed = set()
+
+    def flaky(step):               # fail each even step exactly once
+        if step % 2 == 0 and step not in failed:
+            failed.add(step)
+            return True
+        return False
+
+    trainer = _trainer(tmp_path, flaky, max_restarts=3)
+    state, history = trainer.run(0, 0, 12)
+    assert state == 12
+    assert trainer.restarts == 6             # lifetime stat kept counting
+    assert trainer.restarts > trainer.fault_cfg.max_restarts
+    assert [h["step"] for h in history] == list(range(12))
+
+
+def test_restart_budget_aborts_on_consecutive_streak(tmp_path):
+    trainer = _trainer(tmp_path, lambda step: step == 4, max_restarts=2)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        # no checkpoint exists, so the same step retries and fails
+        trainer.run(0, 0, 10)
+    assert trainer.restarts == 3             # max_restarts + the fatal one
+
+
+def test_consecutive_counter_resets_after_success(tmp_path):
+    fails = {3: 2}                           # two back-to-back, then ok
+
+    def injector(step):
+        if fails.get(step, 0) > 0:
+            fails[step] -= 1
+            return True
+        return False
+
+    trainer = _trainer(tmp_path, injector, max_restarts=2)
+    state, _ = trainer.run(0, 0, 6)
+    assert state == 6
+    assert trainer.restarts == 2
+    assert trainer._consecutive_failures == 0
+
+
+def test_straggler_rotates_to_next_valid_shard(tmp_path):
+    """Regression: the old ``shard_id % max(n_shards - 1, 1)`` rule
+    could reassign a shard to itself; rotation never does."""
+    class Pipe:
+        n_shards = 4
+        shard_id = 2
+    pipe = Pipe()
+    trainer = _trainer(tmp_path, None, pipeline=pipe)
+    trainer._ewma = 0.001
+    for _ in range(pipe.n_shards + 1):       # full cycle and then some
+        old = pipe.shard_id
+        trainer._track_stragglers(0, 1.0)    # way past factor * ewma
+        trainer._ewma = 0.001
+        assert pipe.shard_id != old
+        assert 0 <= pipe.shard_id < pipe.n_shards
+        assert pipe.shard_id == (old + 1) % pipe.n_shards
+    assert len(trainer.straggler_events) == pipe.n_shards + 1
+
+
+def test_trainer_admission_control_calls_autopilot(tmp_path):
+    """The memory hook observes BEFORE each step and on_restart fires on
+    every recovered failure."""
+    calls = {"observe": [], "restart": []}
+
+    class StubPilot:
+        def observe(self, step, obs):
+            calls["observe"].append((step, obs))
+
+        def on_restart(self, step=-1, mesh_shape=None):
+            calls["restart"].append(step)
+
+    failed = []
+
+    def inj(step):                           # fail step 2 exactly once
+        if step == 2 and not failed:
+            failed.append(step)
+            return True
+        return False
+
+    trainer = _trainer(tmp_path, inj, max_restarts=3)
+    trainer.autopilot = StubPilot()
+    trainer.memory_source = lambda step: 1000 + step
+    state, _ = trainer.run(0, 0, 4)
+    assert state == 4
+    assert calls["observe"][0] == (0, 1000)
+    assert len(calls["observe"]) == 5        # 4 steps + the retried one
+    assert calls["restart"] == [2]
+
+
+# -- CLI smokes --------------------------------------------------------------
+
+
+def test_cli_list(capsys):
+    from repro.autopilot.__main__ import main
+    assert main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for s in SCENARIOS:
+        assert s.name in out
+
+
+def test_cli_ingest(tmp_path, capsys):
+    from repro.autopilot.__main__ import main
+    (tmp_path / "ok.json").write_text(json.dumps({"memory": GOOD_MEM}))
+    (tmp_path / "bad.json").write_text("{ nope")
+    assert main(["--ingest", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "telemetry unavailable" in out
+    assert "2 artifacts, 1 unusable" in out
+    assert main(["--ingest", str(tmp_path / "missing")]) == 1
+
+
+def test_cli_scenario_run(capsys):
+    from repro.autopilot.__main__ import main
+    assert main(["--scenario", "underestimate"]) == 0
+    out = capsys.readouterr().out
+    assert "guarded" in out and "ABORTED" in out
+
+
+def test_cli_rejects_unknown_scenario(capsys):
+    from repro.autopilot.__main__ import main
+    with pytest.raises(SystemExit) as exc:
+        main(["--scenario", "nope"])
+    assert exc.value.code == 2
+    assert "unknown scenario" in capsys.readouterr().err

@@ -21,8 +21,9 @@ import os
 import pytest
 
 from repro.configs import registered_archs
-from tests.regen_golden import (GOLDEN_DIR, KINDS, SERVE_KIND,
-                                first_divergence, golden_path, snapshot)
+from tests.regen_golden import (GOLDEN_DIR, KINDS, OFFLOAD_KIND,
+                                SERVE_KIND, first_divergence, golden_path,
+                                snapshot)
 
 REGEN_HINT = ("regenerate with `PYTHONPATH=src python -m "
               "tests.regen_golden` and commit the diff if this byte "
@@ -44,8 +45,8 @@ def test_golden_component_breakdown(arch, sweep_engine):
 
 def test_golden_covers_all_arches_and_kinds():
     """The committed snapshot set is complete: 12 arches x (3 kinds +
-    the paged-serve leg) x raw+calibrated, and no stale files for
-    unregistered arches."""
+    the paged-serve leg + the optimizer-offload leg) x raw+calibrated,
+    and no stale files for unregistered arches."""
     arches = registered_archs()
     files = {f[:-5] for f in os.listdir(GOLDEN_DIR) if f.endswith(".json")}
     assert files == set(arches), \
@@ -54,8 +55,9 @@ def test_golden_covers_all_arches_and_kinds():
     for arch in arches:
         with open(golden_path(arch)) as f:
             payload = json.load(f)
-        assert set(payload) == set(KINDS) | {SERVE_KIND}, arch
-        for kind in (*KINDS, SERVE_KIND):
+        assert set(payload) == set(KINDS) | {SERVE_KIND, OFFLOAD_KIND}, \
+            arch
+        for kind in (*KINDS, SERVE_KIND, OFFLOAD_KIND):
             assert set(payload[kind]) == {"raw", "calibrated"}, (arch, kind)
 
 
