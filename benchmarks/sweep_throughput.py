@@ -2,12 +2,25 @@
 
     PYTHONPATH=src python benchmarks/sweep_throughput.py
         [--scale large|smoke|pr1] [--verify] [--jobs N] [--out DIR]
-        [--min-cells-per-sec N] [--min-speedup X]
+        [--engine numpy|jax] [--search] [--min-cells-per-sec N]
+        [--min-speedup X] [--min-search-reduction X]
 
 Times the SAME grid through both sweep modes:
 
 * ``columnar`` — the structure-of-arrays batch path (core/batch.py),
 * ``cell``    — the per-cell reference path (PR 1's memoized engine),
+
+``--engine jax`` adds a third leg: the jitted columnar engine
+(core/batch_jax.py), byte-compared against the numpy columnar arrays
+and timed cold (first call pays jit compilation + table folding) and
+warm (the steady-state rate the autopilot re-pricing loop sees); the
+perf floors then gate the jax warm rate so the numpy gate stays
+attributable.  ``--search`` runs the Pareto-query leg: pruned
+``plan_min_chips`` / ``plan_frontier`` / ``plan_max_concurrency``
+(core/search.py) against their exhaustive twins, asserting IDENTICAL
+answers and recording cells-evaluated for both; results land in
+``BENCH_search.{json,md}`` and ``--min-search-reduction`` gates the
+aggregate exhaustive/pruned cell ratio (CI pins >= 20x).
 
 asserts their verdicts and per-device peak bytes are byte-identical on
 every cell, and writes ``BENCH_sweep.json``/``.md`` (cells/sec, wall
@@ -297,7 +310,7 @@ def _verify_parity(verbose: bool) -> dict:
 
 
 def run(verbose: bool = True, verify: bool = False, scale: str = "large",
-        jobs: int = 1, out_dir: str = None) -> dict:
+        jobs: int = 1, out_dir: str = None, engine: str = "numpy") -> dict:
     grid = build_grid(scale)
     n = grid.size()
 
@@ -305,6 +318,37 @@ def run(verbose: bool = True, verify: bool = False, scale: str = "large",
     assert col.columns is not None, "columnar mode did not engage"
     cell = SW.SweepEngine().sweep(grid, mode="cell")
     assert len(col) == len(cell) == n
+
+    jax_modes = {}
+    jax_mismatches = 0
+    if engine == "jax":
+        import numpy as _np
+        jeng = SW.SweepEngine()
+        cold = jeng.sweep(grid, engine="jax")        # jit compile + fold
+        # steady-state rate: best of 3 warm replays — at this wall
+        # clock (tens of ms on the large grid) a single run is
+        # scheduler-jitter-dominated
+        warm = min((jeng.sweep(grid, engine="jax") for _ in range(3)),
+                   key=lambda r: r.elapsed_s)
+        for r in (cold, warm):
+            jax_mismatches += int(
+                (r.columns.peak_bytes != col.columns.peak_bytes).sum()
+                + (r.columns.fits != col.columns.fits).sum()
+                + (r.columns.budget_bytes
+                   != col.columns.budget_bytes).sum()
+                + (r.columns.pool_bytes != col.columns.pool_bytes).sum()
+                + (r.columns.draft_bytes
+                   != col.columns.draft_bytes).sum()
+                + (r.columns.hit_saved_bytes
+                   != col.columns.hit_saved_bytes).sum()
+                + (r.columns.offload_bytes
+                   != col.columns.offload_bytes).sum())
+        jax_modes["columnar_jax"] = {
+            "elapsed_s": round(warm.elapsed_s, 4),
+            "cells_per_sec": round(warm.cells_per_sec),
+            "cold_elapsed_s": round(cold.elapsed_s, 4),
+            "cold_cells_per_sec": round(cold.cells_per_sec),
+        }
 
     # full-grid parity (arrays first, then every materialized field)
     import numpy as np
@@ -314,6 +358,7 @@ def run(verbose: bool = True, verify: bool = False, scale: str = "large",
                           + (fits != col.columns.fits).sum())
     if _columns(col) != _columns(cell):
         grid_mismatches = max(grid_mismatches, 1)
+    grid_mismatches += jax_mismatches
     speedup = col.cells_per_sec / max(cell.cells_per_sec, 1e-9)
 
     payload = {
@@ -326,12 +371,17 @@ def run(verbose: bool = True, verify: bool = False, scale: str = "large",
                          "cells_per_sec": round(col.cells_per_sec)},
             "cell": {"elapsed_s": round(cell.elapsed_s, 4),
                      "cells_per_sec": round(cell.cells_per_sec)},
+            **jax_modes,
         },
         "speedup": round(speedup, 1),
         "grid_parity_mismatches": grid_mismatches,
         "cells_fit": col.fit_count,
         "frontier": col.frontier(),
     }
+    if jax_modes:
+        payload["jax_speedup"] = round(
+            jax_modes["columnar_jax"]["cells_per_sec"]
+            / max(cell.cells_per_sec, 1e-9), 1)
     if verify:
         payload["verify"] = _verify_parity(verbose)
 
@@ -341,9 +391,16 @@ def run(verbose: bool = True, verify: bool = False, scale: str = "large",
           f"| columnar | {col.elapsed_s:.3f} "
           f"| {col.cells_per_sec:,.0f} |",
           f"| cell | {cell.elapsed_s:.3f} "
-          f"| {cell.cells_per_sec:,.0f} |", "",
-          f"speedup: **{speedup:.1f}x** — parity mismatches: "
-          f"{grid_mismatches}"]
+          f"| {cell.cells_per_sec:,.0f} |"]
+    if jax_modes:
+        j = jax_modes["columnar_jax"]
+        md.append(f"| columnar (jax, warm) | {j['elapsed_s']:.3f} "
+                  f"| {j['cells_per_sec']:,.0f} |")
+        md.append(f"| columnar (jax, cold) | {j['cold_elapsed_s']:.3f} "
+                  f"| {j['cold_cells_per_sec']:,.0f} |")
+    md += ["",
+           f"speedup: **{speedup:.1f}x** — parity mismatches: "
+           f"{grid_mismatches}"]
     if verify:
         v = payload["verify"]
         md.append(f"\nverify: {v['cells']:,} parity-set cells vs "
@@ -353,6 +410,13 @@ def run(verbose: bool = True, verify: bool = False, scale: str = "large",
                                      out_dir=out_dir)
 
     if verbose:
+        if jax_modes:
+            j = jax_modes["columnar_jax"]
+            print(f"sweep_throughput,jax_warm_cells_per_sec,"
+                  f"{j['cells_per_sec']}")
+            print(f"sweep_throughput,jax_cold_elapsed_s,"
+                  f"{j['cold_elapsed_s']}")
+            print(f"sweep_throughput,jax_mismatches,{jax_mismatches}")
         print(f"sweep_throughput,scale,{scale}")
         print(f"sweep_throughput,cells,{n}")
         print(f"sweep_throughput,columnar_elapsed_s,{col.elapsed_s:.3f}")
@@ -376,6 +440,132 @@ def run(verbose: bool = True, verify: bool = False, scale: str = "large",
     return payload
 
 
+def run_search(verbose: bool = True, out_dir: str = None,
+               engine: str = "numpy") -> dict:
+    """The Pareto-query leg: pruned searches (core/search.py) vs their
+    exhaustive twins — identical answers asserted, cells-evaluated and
+    wall-clock recorded per query, BENCH_search.{json,md} written."""
+    from repro.core import search as SR
+
+    eng = SW.SweepEngine()
+    queries = []
+
+    def leg(name, pruned, exhaustive, same):
+        st = SR.SearchStats()
+        t0 = time.perf_counter()
+        a = pruned(st)
+        t_pruned = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        b = exhaustive(st)
+        t_exh = time.perf_counter() - t0
+        identical = same(a, b)
+        pruned_cells = st.cells_evaluated + st.probes
+        exhaustive_cells = st.total_cells
+        queries.append({
+            "query": name,
+            "identical": identical,
+            "pruned_cells": pruned_cells,
+            "exhaustive_cells": exhaustive_cells,
+            "reduction": round(exhaustive_cells / max(pruned_cells, 1), 1),
+            "pruned_s": round(t_pruned, 4),
+            "exhaustive_s": round(t_exh, 4),
+        })
+
+    def same_cell(a, b):
+        try:
+            from repro.core.search import _assert_same_cell
+            _assert_same_cell(a, b, "bench")
+            return True
+        except AssertionError:
+            return False
+
+    # -- min_chips: train fit search over an 8..1024-chip plan space -----
+    shape = ShapeConfig("bench", 4096, 16, "train")
+    chips = (8, 16, 32, 64, 128, 256, 512, 1024)
+    queries_mc = [("llama3.1-8b", {}),
+                  ("deepseek-v2-lite-16b", {"allow_ep": True, "max_ep": 4})]
+    for arch, kw in queries_mc:
+        leg(f"min_chips[{arch}]",
+            lambda st, a=arch, k=kw: planner.plan_min_chips(
+                a, shape, chips=chips, engine=eng, stats=st,
+                compute_engine=engine, **k),
+            lambda st, a=arch, k=kw: planner.plan_min_chips(
+                a, shape, chips=chips, engine=eng, search="exhaustive",
+                compute_engine=engine, **k),
+            same_cell)
+
+    # -- frontier: chips x global-batch Pareto curve ----------------------
+    fshape = ShapeConfig("bench", 2048, 512, "train")
+    leg("frontier[llava15-7b]",
+        lambda st: planner.plan_frontier(
+            "llava15-7b", fshape, chips=(16, 32, 64, 128),
+            engine=eng, stats=st, compute_engine=engine),
+        lambda st: planner.plan_frontier(
+            "llava15-7b", fshape, chips=(16, 32, 64, 128),
+            engine=eng, search="exhaustive", compute_engine=engine),
+        lambda a, b: a == b)
+
+    # -- max_concurrency: aligned-ladder vs linear scan -------------------
+    def brute_concurrency(arch, seq, mesh, cap, st):
+        budget = int(planner.chip_hbm("v5e") * planner.HEADROOM)
+        best = 0
+        for gb in range(1, cap + 1):
+            st.cells_pruned += 1          # exhaustive domain accounting
+            rep = eng.report(arch, ShapeConfig("c", seq, gb, "decode"),
+                             dict(mesh), budget_bytes=budget, chip="v5e")
+            if rep.peak_bytes <= budget:
+                best = gb
+        return best
+
+    for arch, seq, mesh, cap in (
+            ("llama3.2-3b", 2048, {"data": 2, "model": 2}, 16384),
+            ("smollm-360m", 1024, {"data": 4, "model": 1}, 16384)):
+        leg(f"max_concurrency[{arch}]",
+            lambda st, a=arch, s=seq, m=mesh, c=cap:
+                planner.plan_max_concurrency(
+                    a, s, mesh_shape=m, cap=c, engine=eng,
+                    stats=st).max_concurrency,
+            lambda st, a=arch, s=seq, m=mesh, c=cap:
+                brute_concurrency(a, s, m, c, st),
+            lambda a, b: a == b)
+
+    total_pruned = sum(q["pruned_cells"] for q in queries)
+    total_exh = sum(q["exhaustive_cells"] for q in queries)
+    payload = {
+        "benchmark": "search",
+        "engine": engine,
+        "queries": queries,
+        "answers_identical": all(q["identical"] for q in queries),
+        "pruned_cells": total_pruned,
+        "exhaustive_cells": total_exh,
+        "reduction": round(total_exh / max(total_pruned, 1), 1),
+    }
+    md = ["# Pareto-search pruning (branch-and-bound vs exhaustive)", "",
+          "| query | identical | pruned cells | exhaustive cells | "
+          "reduction | pruned s | exhaustive s |",
+          "|-------|-----------|--------------|------------------|"
+          "-----------|----------|--------------|"]
+    for q in queries:
+        md.append(f"| {q['query']} | {q['identical']} "
+                  f"| {q['pruned_cells']:,} | {q['exhaustive_cells']:,} "
+                  f"| {q['reduction']:.1f}x | {q['pruned_s']:.3f} "
+                  f"| {q['exhaustive_s']:.3f} |")
+    md.append("")
+    md.append(f"aggregate: **{payload['reduction']:.1f}x** fewer cells "
+              f"({total_pruned:,} vs {total_exh:,}), answers identical: "
+              f"**{payload['answers_identical']}**")
+    json_path, md_path = write_bench("search", payload, "\n".join(md),
+                                     out_dir=out_dir)
+    if verbose:
+        for q in queries:
+            print(f"search,{q['query']},identical,{q['identical']},"
+                  f"reduction,{q['reduction']}")
+        print(f"search,aggregate_reduction,{payload['reduction']}")
+        print(f"wrote {json_path}")
+        print(f"wrote {md_path}")
+    return payload
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", choices=("large", "smoke", "serve", "pr1"),
@@ -387,25 +577,50 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default=None,
                     help="output dir for BENCH_sweep.{json,md} "
                          "(default: repo root)")
+    ap.add_argument("--engine", choices=("numpy", "jax"), default="numpy",
+                    help="add the jitted columnar engine leg (cold + "
+                         "warm timing, byte-parity vs numpy); the perf "
+                         "floors then gate the jax warm rate")
+    ap.add_argument("--search", action="store_true",
+                    help="run the Pareto-query leg (pruned vs exhaustive "
+                         "plan_min_chips/frontier/max_concurrency) and "
+                         "write BENCH_search.{json,md}")
     ap.add_argument("--min-cells-per-sec", type=float, default=0,
-                    help="fail unless columnar throughput >= this floor")
+                    help="fail unless columnar throughput >= this floor "
+                         "(the jax warm rate with --engine jax)")
     ap.add_argument("--min-speedup", type=float, default=0,
                     help="fail unless columnar/cell speedup >= this floor")
+    ap.add_argument("--min-search-reduction", type=float, default=0,
+                    help="with --search: fail unless the aggregate "
+                         "exhaustive/pruned cell ratio >= this floor")
     args = ap.parse_args(argv)
     payload = run(verify=args.verify, scale=args.scale, jobs=args.jobs,
-                  out_dir=args.out)
+                  out_dir=args.out, engine=args.engine)
     ok = payload["grid_parity_mismatches"] == 0
     if args.verify:
         ok = ok and payload["verify"]["mismatches"] == 0
-    col_cps = payload["modes"]["columnar"]["cells_per_sec"]
+    gate_mode = "columnar_jax" if args.engine == "jax" else "columnar"
+    col_cps = payload["modes"][gate_mode]["cells_per_sec"]
+    gate_speedup = payload.get("jax_speedup", payload["speedup"]) \
+        if args.engine == "jax" else payload["speedup"]
     if args.min_cells_per_sec and col_cps < args.min_cells_per_sec:
-        print(f"FAIL: columnar {col_cps:,.0f} cells/s below floor "
+        print(f"FAIL: {gate_mode} {col_cps:,.0f} cells/s below floor "
               f"{args.min_cells_per_sec:,.0f}")
         ok = False
-    if args.min_speedup and payload["speedup"] < args.min_speedup:
-        print(f"FAIL: speedup {payload['speedup']:.1f}x below floor "
+    if args.min_speedup and gate_speedup < args.min_speedup:
+        print(f"FAIL: speedup {gate_speedup:.1f}x below floor "
               f"{args.min_speedup:.1f}x")
         ok = False
+    if args.search:
+        sp = run_search(out_dir=args.out, engine=args.engine)
+        if not sp["answers_identical"]:
+            print("FAIL: pruned search answers differ from exhaustive")
+            ok = False
+        if args.min_search_reduction \
+                and sp["reduction"] < args.min_search_reduction:
+            print(f"FAIL: search reduction {sp['reduction']:.1f}x below "
+                  f"floor {args.min_search_reduction:.1f}x")
+            ok = False
     return 0 if ok else 1
 
 

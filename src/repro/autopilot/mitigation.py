@@ -111,6 +111,14 @@ class MitigationPlanner:
     headroom: float = PL.HEADROOM
     profile: object = None
     reshard_chips: tuple = (8, 16, 32, 64)
+    # re-pricing path knobs: the reshard search prunes through
+    # core.search by default ("exhaustive" restores brute-force
+    # enumeration — answers are identical either way), and
+    # compute_engine="jax" runs the surviving sweep slices on the
+    # jitted columnar engine (worth it once reshard_chips spans large
+    # counts; numpy avoids jit warm-up on the small default span)
+    search: str = "pruned"
+    compute_engine: str = "numpy"
 
     def _predict(self, cell: SW.SweepCell) -> int:
         res = self.engine.evaluate(cell, policy=self.policy,
@@ -163,7 +171,8 @@ class MitigationPlanner:
             cell.arch, shape, chips=chips, chip=cell.chip,
             policy=self.policy, backend=cell.backend,
             headroom=self.headroom, profile=self.profile,
-            engine=self.engine)
+            engine=self.engine, search=self.search,
+            compute_engine=self.compute_engine)
         if res is None:
             return None
         new = SW.SweepCell(

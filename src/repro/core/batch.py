@@ -60,6 +60,11 @@ from repro.mesh_ctx import CONTEXT_AXIS, PIPE_AXIS
 
 I64 = np.int64
 
+# Optional accelerated shard-factor twin (jax fori / pallas kernel),
+# installed by ``repro.kernels.shard_factor.use_backend`` — None means
+# the numpy reference below runs.
+_shard_factor_impl = None
+
 
 # ---------------------------------------------------------------------------
 # vectorized shard resolution
@@ -82,6 +87,8 @@ def batch_shard_factor(dims, axes, sizes: dict, rules: dict,
     axis's divisibility, so the result equals the scalar path's
     skip-missing behaviour (property-tested in tests/test_batch.py).
     """
+    if _shard_factor_impl is not None:
+        return _shard_factor_impl(dims, axes, sizes, rules, extra)
     arrs = [np.asarray(d, I64) for d in dims]
     svals = {a: np.asarray(v, I64) for a, v in sizes.items()}
     shape = np.broadcast_shapes(*(a.shape for a in arrs),
@@ -212,11 +219,18 @@ def build_columns(grid: "SW.SweepGrid") -> CellColumns:
                            scheds, mbs, serves, pairs, seqs, grid.kind,
                            grid.backend,
                            z, z, z, z, z, z, z, z, z, z, z, z, z, z, z)
-    idx = np.arange(n, dtype=I64)
+    # code column i cycles 0..s_i-1 with period inner_i (the product of
+    # the axes to its right): repeat+tile is a pair of memcpy-shaped ops
+    # instead of the old idx%s / idx//=s passes over the full column
     codes = []
+    inner = 1
     for s in reversed(sizes):
-        codes.append(idx % s)
-        idx //= s
+        if s == 1:
+            codes.append(np.zeros(n, I64))
+        else:
+            codes.append(np.tile(np.repeat(np.arange(s, dtype=I64), inner),
+                                 n // (s * inner)))
+        inner *= s
     (seq_c, pair_c, srv_c, mb_c, sched_c, remat_c, off_c, opt_c, mesh_c,
      chip_c, arch_c) = codes
     accum = np.array([p[0] for p in pairs], I64)[pair_c]
@@ -524,13 +538,14 @@ def _stage_tables(cfg, model, rows, rules, rep_ctx,
     # so staged values match the scalar path byte-for-byte.
     offs = cols.offs
     n_off = len(offs)
-    opt_eff = np.zeros((n_mesh, len(opt_res), n_off), I64)
-    for fi, off in enumerate(offs):
-        for oi in range(len(opt_res)):
-            for m in range(n_mesh):
-                o = int(opt_arr[oi, m])
-                opt_eff[m, oi, fi] = \
-                    F.offload_staged_bytes(o) if off else o
+    # vectorized offload_staged_bytes: same 2 * ceil(o / OFFLOAD_BUCKETS)
+    # exact-int expression, broadcast over (mesh, opt, off)
+    opt_dev = opt_arr.T[:, :, None]                   # (n_mesh, n_opt, 1)
+    staged = 2 * (-(-opt_dev // F.OFFLOAD_BUCKETS))
+    off_mask = np.array(offs, bool)[None, None, :]
+    opt_eff = np.where(off_mask, staged,
+                       np.broadcast_to(opt_dev,
+                                       (n_mesh, len(opt_res), n_off)))
     host_opt = None
     if train and any(offs):
         host_opt = np.zeros((n_mesh, len(opt_res), n_off), I64)
@@ -540,26 +555,23 @@ def _stage_tables(cfg, model, rows, rules, rep_ctx,
     static_sum = (param_arr + outcopy_arr)[:, None, None, None] \
         + opt_eff[:, :, :, None] + grad_arr.T[:, None, None, :]
     frac = rep_ctx.opt_transient_frac
-    opt_trans = np.zeros((n_mesh, len(opt_res), n_off), I64)
     if frac:
-        for m in range(n_mesh):
-            for oi in range(len(opt_res)):
-                for fi in range(n_off):
-                    opt_trans[m, oi, fi] = \
-                        int(frac * int(opt_eff[m, oi, fi]))
+        # float64 multiply + truncation toward zero, elementwise — the
+        # vector twin of the scalar ``int(frac * int(opt_eff))``
+        opt_trans = (frac * opt_eff.astype(np.float64)).astype(I64)
+    else:
+        opt_trans = np.zeros((n_mesh, len(opt_res), n_off), I64)
     static_scaled = None
     if profile is not None:
         c_s = profile.coef("static")
-        sc = lambda v: int(round(int(v) * c_s))
-        static_scaled = np.zeros((n_mesh, len(opt_res), n_off, 2), I64)
-        for m in range(n_mesh):
-            base = sc(param_arr[m]) + sc(outcopy_arr[m])
-            for oi in range(len(opt_res)):
-                for fi in range(n_off):
-                    for ci in range(2):
-                        static_scaled[m, oi, fi, ci] = base \
-                            + sc(grad_arr[ci, m]) \
-                            + sc(opt_eff[m, oi, fi])
+        # np.rint is round-half-even, matching the scalar path's
+        # ``int(round(v * c_s))`` per static term
+        sc = lambda v: np.rint(np.asarray(v, np.float64)
+                               * c_s).astype(I64)
+        static_scaled = (sc(param_arr) + sc(outcopy_arr)
+                         )[:, None, None, None] \
+            + sc(opt_eff)[:, :, :, None] \
+            + sc(grad_arr.T)[:, None, None, :]
 
     # -- activation group (saved-for-backward + worst transient) ---------
     zeros2 = np.zeros(shape2, I64)
@@ -815,6 +827,50 @@ def _intern(table: dict, names: list, name: str) -> int:
     return table[name]
 
 
+def _draft_states(engine, cols) -> dict:
+    """Speculative-decode draft states: one (cfg, rows, rules) per
+    distinct draft arch on the serve axis, parsed under FULL_TRAIN
+    exactly like the scalar ``predictor._draft_state`` memo."""
+    from repro.launch.mesh import arch_rules
+    drafts: dict = {}
+    for s in cols.serves:
+        if s is not None and s.draft_arch and s.draft_arch not in drafts:
+            dcfg, _, drows = engine._arch_state(
+                SW.normalize_arch(s.draft_arch), FULL_TRAIN)
+            drafts[s.draft_arch] = (dcfg, drows,
+                                    arch_rules(dcfg, cols.kind))
+    return drafts
+
+
+def _finalize_results(grid, cols: CellColumns, t0: float,
+                      peak, pool_arr, draft_arr, hit_arr, off_arr,
+                      opt_names, remat_names,
+                      res_opt_c, res_remat_c) -> "SW.SweepResults":
+    """Assemble the SweepResults store from the per-cell peak/provenance
+    columns — shared by the numpy and jax engines so both produce
+    structurally identical results."""
+    from repro.launch.mesh import mesh_chips
+    budget = np.array([int(PL.chip_hbm(c) * grid.headroom)
+                       for c in cols.chips], I64)[cols.chip_c]
+    n_chips_by_mesh = np.array([mesh_chips(m) for m in cols.meshes], I64)
+    columns = ColumnarResults(
+        n=cols.n, kind=cols.kind, backend=cols.backend,
+        arch_names=cols.arches, chip_names=cols.chips, meshes=cols.meshes,
+        n_chips_by_mesh=n_chips_by_mesh,
+        opt_names=tuple(opt_names), remat_names=tuple(remat_names),
+        sched_names=cols.scheds,
+        arch_c=cols.arch_c, chip_c=cols.chip_c, mesh_c=cols.mesh_c,
+        opt_c=res_opt_c, remat_c=res_remat_c, sched_c=cols.sched_c,
+        microbatches=cols.micro,
+        grad_accum=cols.accum, global_batch=cols.gb, seq_len=cols.seq,
+        peak_bytes=peak, budget_bytes=budget, fits=peak <= budget,
+        serves=cols.serves, srv_c=cols.srv_c, pool_bytes=pool_arr,
+        draft_bytes=draft_arr, hit_saved_bytes=hit_arr,
+        offs=cols.offs, off_c=cols.off_c, offload_bytes=off_arr)
+    return SW.SweepResults(grid=grid, columns=columns,
+                           elapsed_s=time.perf_counter() - t0)
+
+
 def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
     """Evaluate every cell of ``grid`` columnarly; byte-identical to the
     per-cell path (``SweepEngine.evaluate`` per ``grid.cells()`` cell)."""
@@ -841,16 +897,7 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
     pp_of = np.array([int(m.get(PIPE_AXIS, 1)) for m in cols.meshes], I64)
     is_gpipe_sched = np.array([s == "gpipe" for s in cols.scheds], bool)
     from repro.launch.mesh import arch_rules
-    # speculative-decode draft states: one (cfg, rows, rules) per distinct
-    # draft arch on the serve axis, parsed under FULL_TRAIN exactly like
-    # the scalar predictor._draft_state memo
-    drafts: dict = {}
-    for s in cols.serves:
-        if s is not None and s.draft_arch and s.draft_arch not in drafts:
-            dcfg, _, drows = engine._arch_state(
-                SW.normalize_arch(s.draft_arch), FULL_TRAIN)
-            drafts[s.draft_arch] = (dcfg, drows,
-                                    arch_rules(dcfg, cols.kind))
+    drafts = _draft_states(engine, cols)
     pool_arr = np.zeros(n, I64)
     draft_arr = np.zeros(n, I64)
     hit_arr = np.zeros(n, I64)
@@ -1007,23 +1054,6 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
         per_remat = np.array([_intern(remat_tbl, remat_names, r)
                               for r in remat_res], I64)
         res_remat_c[sl] = per_remat[cols.remat_c[sl]]
-    budget = np.array([int(PL.chip_hbm(c) * grid.headroom)
-                       for c in cols.chips], I64)[cols.chip_c]
-    from repro.launch.mesh import mesh_chips
-    n_chips_by_mesh = np.array([mesh_chips(m) for m in cols.meshes], I64)
-    columns = ColumnarResults(
-        n=n, kind=cols.kind, backend=cols.backend,
-        arch_names=cols.arches, chip_names=cols.chips, meshes=cols.meshes,
-        n_chips_by_mesh=n_chips_by_mesh,
-        opt_names=tuple(opt_names), remat_names=tuple(remat_names),
-        sched_names=cols.scheds,
-        arch_c=cols.arch_c, chip_c=cols.chip_c, mesh_c=cols.mesh_c,
-        opt_c=res_opt_c, remat_c=res_remat_c, sched_c=cols.sched_c,
-        microbatches=cols.micro,
-        grad_accum=cols.accum, global_batch=cols.gb, seq_len=cols.seq,
-        peak_bytes=peak, budget_bytes=budget, fits=peak <= budget,
-        serves=cols.serves, srv_c=cols.srv_c, pool_bytes=pool_arr,
-        draft_bytes=draft_arr, hit_saved_bytes=hit_arr,
-        offs=cols.offs, off_c=cols.off_c, offload_bytes=off_arr)
-    return SW.SweepResults(grid=grid, columns=columns,
-                           elapsed_s=time.perf_counter() - t0)
+    return _finalize_results(grid, cols, t0, peak, pool_arr, draft_arr,
+                             hit_arr, off_arr, opt_names, remat_names,
+                             res_opt_c, res_remat_c)

@@ -327,6 +327,53 @@ def plan(arch: str, shape_name, mesh_shape: dict,
     return base
 
 
+def _search_grid(arch: str, shape, chips, chip, policy, backend,
+                 headroom, allow_pp, max_pp, allow_ep, max_ep, allow_cp,
+                 max_cp, microbatches, schedules, profile,
+                 global_batches=None):
+    """The (mesh x knob) grid plan_min_chips / plan_frontier search,
+    with the illegal expert/context factorizations FILTERED out (None
+    when nothing legal remains)."""
+    from repro.core import sweep as SW
+    from repro.configs import get_config
+    axes: tuple = ("data", "model")
+    max_axis: dict = {}
+    if allow_ep:
+        axes += ("expert",)
+        max_axis["expert"] = max_ep
+    if allow_cp:
+        axes += ("context",)
+        max_axis["context"] = max_cp
+    if allow_pp:
+        axes += ("pipe",)
+        max_axis["pipe"] = max_pp
+    grid = SW.SweepGrid(
+        arch=arch, chips=tuple(chips), mesh_axes=axes,
+        max_axis=max_axis or None, chip=chip,
+        microbatches=tuple(microbatches) if allow_pp else (1,),
+        schedules=tuple(schedules) if allow_pp else ("1f1b",),
+        global_batches=tuple(global_batches) if global_batches is not None
+        else (shape.global_batch,),
+        seq_lens=(shape.seq_len,),
+        kind=shape.kind, policy=policy, backend=backend,
+        headroom=headroom, profile=profile)
+    if allow_ep or allow_cp:
+        cfg = get_config(SW.normalize_arch(arch))
+
+        def legal(mesh: dict) -> bool:
+            try:
+                check_parallel(cfg, mesh, shape.kind, shape.seq_len)
+                return True
+            except ValueError:
+                return False
+
+        meshes = [m for m in grid.meshes() if legal(m)]
+        if not meshes:
+            return None
+        grid.mesh_shapes = meshes
+    return grid
+
+
 def plan_min_chips(arch: str, shape_name, chips=(4, 8, 16, 32, 64),
                    chip: str = "v5e", policy: TrainPolicy = FULL_TRAIN,
                    backend: str = "tpu", headroom: float = HEADROOM,
@@ -334,7 +381,8 @@ def plan_min_chips(arch: str, shape_name, chips=(4, 8, 16, 32, 64),
                    allow_ep: bool = False, max_ep: int = 8,
                    allow_cp: bool = False, max_cp: int = 8,
                    microbatches=(1, 4, 8), schedules=("1f1b", "gpipe"),
-                   profile=None, engine=None):
+                   profile=None, engine=None, search: str = "pruned",
+                   stats=None, compute_engine: str = "numpy"):
     """Smallest chip count that fits the shape, pipeline parallelism
     allowed: sweeps every (data, model[, expert][, context][, pipe])
     factorization of each candidate chip count x microbatch count x
@@ -352,45 +400,76 @@ def plan_min_chips(arch: str, shape_name, chips=(4, 8, 16, 32, 64),
     the shape's seq_len or that land on a decode shape) are simply
     FILTERED out of the candidate set rather than aborting the whole
     search; the remaining legal plans are swept and the Pareto-min
-    returned (None when nothing fits or nothing is legal)."""
+    returned (None when nothing fits or nothing is legal).
+
+    ``search="pruned"`` (default) answers through
+    :func:`repro.core.search.min_chips_search` — statics-floor bounds
+    prune hopeless chip counts and the scan stops at the first feasible
+    count, returning an answer IDENTICAL to the exhaustive reduction
+    (``search="exhaustive"``, the pre-pruner behaviour) at a fraction
+    of the cells; pass a :class:`repro.core.search.SearchStats` as
+    ``stats`` to see the work accounting, and ``compute_engine="jax"``
+    to run the surviving slices on the jitted columnar engine."""
+    from repro.core import search as SR
     from repro.core import sweep as SW
-    from repro.configs import get_config
     shape = _resolve_shape(shape_name)
-    axes: tuple = ("data", "model")
-    max_axis: dict = {}
-    if allow_ep:
-        axes += ("expert",)
-        max_axis["expert"] = max_ep
-    if allow_cp:
-        axes += ("context",)
-        max_axis["context"] = max_cp
-    if allow_pp:
-        axes += ("pipe",)
-        max_axis["pipe"] = max_pp
-    grid = SW.SweepGrid(
-        arch=arch, chips=tuple(chips), mesh_axes=axes,
-        max_axis=max_axis or None, chip=chip,
-        microbatches=tuple(microbatches) if allow_pp else (1,),
-        schedules=tuple(schedules) if allow_pp else ("1f1b",),
-        global_batches=(shape.global_batch,), seq_lens=(shape.seq_len,),
-        kind=shape.kind, policy=policy, backend=backend,
-        headroom=headroom, profile=profile)
-    if allow_ep or allow_cp:
-        cfg = get_config(SW.normalize_arch(arch))
+    grid = _search_grid(arch, shape, chips, chip, policy, backend,
+                        headroom, allow_pp, max_pp, allow_ep, max_ep,
+                        allow_cp, max_cp, microbatches, schedules,
+                        profile)
+    if grid is None:
+        return None
+    engine = engine or SW.SweepEngine()
+    if search == "exhaustive":
+        return engine.sweep(grid, engine=compute_engine).min_chips()
+    if search != "pruned":
+        raise ValueError(f"search must be 'pruned' or 'exhaustive', "
+                         f"got {search!r}")
+    return SR.min_chips_search(grid, engine=engine, stats=stats,
+                               compute_engine=compute_engine)
 
-        def legal(mesh: dict) -> bool:
-            try:
-                check_parallel(cfg, mesh, shape.kind, shape.seq_len)
-                return True
-            except ValueError:
-                return False
 
-        meshes = [m for m in grid.meshes() if legal(m)]
-        if not meshes:
-            return None
-        grid.mesh_shapes = meshes
-    res = (engine or SW.SweepEngine()).sweep(grid)
-    return res.min_chips()
+def plan_frontier(arch: str, shape_name, chips=(4, 8, 16, 32, 64),
+                  global_batches=None, chip: str = "v5e",
+                  policy: TrainPolicy = FULL_TRAIN, backend: str = "tpu",
+                  headroom: float = HEADROOM,
+                  allow_pp: bool = True, max_pp: int = 8,
+                  allow_ep: bool = False, max_ep: int = 8,
+                  allow_cp: bool = False, max_cp: int = 8,
+                  microbatches=(1, 4, 8), schedules=("1f1b", "gpipe"),
+                  profile=None, engine=None, search: str = "pruned",
+                  stats=None, compute_engine: str = "numpy") -> list:
+    """(n_chips, max fitting global batch) frontier over the same plan
+    space as :func:`plan_min_chips`, swept across ``global_batches``
+    (default: powers of two down from the shape's batch).  The pruned
+    search scans each chip count's batch axis descending and stops at
+    the first fit — identical answers to the exhaustive
+    ``SweepResults.frontier()`` (cross-checked in tests) without paying
+    for the cells below each frontier point."""
+    from repro.core import search as SR
+    from repro.core import sweep as SW
+    shape = _resolve_shape(shape_name)
+    if global_batches is None:
+        gb, global_batches = shape.global_batch, []
+        while gb >= 1:
+            global_batches.append(gb)
+            if gb == 1:
+                break
+            gb //= 2
+    grid = _search_grid(arch, shape, chips, chip, policy, backend,
+                        headroom, allow_pp, max_pp, allow_ep, max_ep,
+                        allow_cp, max_cp, microbatches, schedules,
+                        profile, global_batches=tuple(global_batches))
+    if grid is None:
+        return []
+    engine = engine or SW.SweepEngine()
+    if search == "exhaustive":
+        return engine.sweep(grid, engine=compute_engine).frontier()
+    if search != "pruned":
+        raise ValueError(f"search must be 'pruned' or 'exhaustive', "
+                         f"got {search!r}")
+    return SR.frontier_search(grid, engine=engine, stats=stats,
+                              compute_engine=compute_engine)
 
 
 @dataclass
@@ -420,13 +499,20 @@ def plan_max_concurrency(arch: str, seq_len: int,
                          serve=None, backend: str = "tpu",
                          policy: TrainPolicy = FULL_TRAIN,
                          headroom: float = HEADROOM, cap: int = 65536,
-                         profile=None, engine=None) -> ConcurrencyReport:
+                         profile=None, engine=None,
+                         stats=None) -> ConcurrencyReport:
     """Max concurrent sequences one replica sustains on ``chip`` —
     ROADMAP question 1.  Peak bytes are monotone nondecreasing in the
-    concurrency (every gb-bearing term has a nonnegative coefficient at
-    a FIXED mesh), so an exponential probe + binary search finds the
-    largest fitting global_batch exactly."""
+    concurrency along batches aligned to the mesh's shard product
+    (every gb-bearing term has a nonnegative coefficient at a FIXED
+    mesh, and at aligned batches the shard denominators are maximal),
+    so :func:`repro.core.search.monotone_max` brackets the answer with
+    a galloping + binary search over the aligned ladder and resolves
+    the final window exactly — unlike a naive binary search over raw
+    integers, this stays exact on batch-sharded meshes (``data > 1``),
+    where peak(gb) is NOT monotone off the ladder."""
     from repro.configs import ShapeConfig
+    from repro.core import search as SR
     from repro.core import sweep as SW
     engine = engine or SW.SweepEngine()
     mesh_shape = dict(mesh_shape or {"data": 1, "model": 1})
@@ -439,25 +525,12 @@ def plan_max_concurrency(arch: str, seq_len: int,
                             chip=chip, profile=profile, serve=serve)
         return rep.peak_bytes
 
-    if peak(1) > budget:
-        return ConcurrencyReport(
-            arch=arch, chip=chip, mesh_shape=mesh_shape, kind=kind,
-            seq_len=seq_len, max_concurrency=0, peak_bytes=peak(1),
-            budget_bytes=budget, serve=serve)
-    lo = 1                                   # known to fit
-    hi = 2
-    while hi <= cap and peak(hi) <= budget:
-        lo, hi = hi, hi * 2
-    hi = min(hi, cap + 1)                    # first known (or assumed) OOM
-    while hi - lo > 1:
-        mid = (lo + hi) // 2
-        if peak(mid) <= budget:
-            lo = mid
-        else:
-            hi = mid
+    best = SR.max_concurrency_search(peak, budget, cap,
+                                     mesh_shape=mesh_shape, stats=stats)
     return ConcurrencyReport(
         arch=arch, chip=chip, mesh_shape=mesh_shape, kind=kind,
-        seq_len=seq_len, max_concurrency=lo, peak_bytes=peak(lo),
+        seq_len=seq_len, max_concurrency=best,
+        peak_bytes=peak(best if best else 1),
         budget_bytes=budget, serve=serve)
 
 

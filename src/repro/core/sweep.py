@@ -860,22 +860,42 @@ class SweepEngine:
                              remat=remat or cfg.remat, prediction=pred)
 
     def sweep(self, grid: SweepGrid, mode: str = "columnar",
-              jobs: int = 1) -> SweepResults:
+              jobs: int = 1, engine: str = "numpy") -> SweepResults:
         """Evaluate every grid cell.
 
         ``mode="columnar"`` (default) lowers the whole grid to the
         structure-of-arrays kernels in :mod:`repro.core.batch` —
         byte-identical verdicts and peak bytes, orders of magnitude
         faster on large grids.  ``mode="cell"`` is the per-cell
-        reference path.  Grids with ``keep_predictions=True`` always
-        take the cell path (columnar mode does not materialize
-        PredictedMemory breakdowns), as does an environment without
-        numpy.  ``jobs`` > 1 splits the columnar component stage over
-        worker threads (mesh-chunked; results are order-identical).
+        reference path.  ``engine`` selects the columnar compute
+        engine: ``"numpy"`` (the reference) or ``"jax"`` — the jitted
+        stage-scan twin in :mod:`repro.core.batch_jax`, byte-identical
+        results, fastest on repeated/large sweeps once its tables and
+        compiled composition are warm (docs/memory_model.md "Engines").
+        Grids with ``keep_predictions=True`` always take the cell path
+        (columnar mode does not materialize PredictedMemory
+        breakdowns), as does an environment without numpy.  ``jobs`` >
+        1 splits the columnar component stage over worker threads
+        (mesh-chunked; results are order-identical).
         """
         if mode not in ("columnar", "cell"):
             raise ValueError(
                 f"unknown sweep mode {mode!r}; use 'columnar' or 'cell'")
+        if engine not in ("numpy", "jax"):
+            raise ValueError(
+                f"unknown sweep engine {engine!r}; use 'numpy' or 'jax'")
+        if engine == "jax":
+            if mode == "cell":
+                raise ValueError(
+                    "engine='jax' lowers the columnar path; it cannot "
+                    "drive mode='cell' (use engine='numpy')")
+            if grid.keep_predictions:
+                raise ValueError(
+                    "engine='jax' does not materialize PredictedMemory "
+                    "breakdowns; use engine='numpy' with "
+                    "keep_predictions=True")
+            from repro.core import batch_jax as BJ
+            return BJ.sweep_columnar_jax(self, grid, jobs=jobs)
         if mode == "columnar" and not grid.keep_predictions:
             try:
                 from repro.core import batch as B
@@ -892,9 +912,16 @@ class SweepEngine:
                             elapsed_s=time.perf_counter() - t0)
 
 
-def sweep(grid: SweepGrid, engine: Optional[SweepEngine] = None,
+def sweep(grid: SweepGrid, engine=None,
           mode: str = "columnar", jobs: int = 1) -> SweepResults:
-    """Run a capacity-planning sweep (fresh engine unless one is passed)."""
+    """Run a capacity-planning sweep (fresh engine unless one is passed).
+
+    ``engine`` accepts either a :class:`SweepEngine` instance or a
+    compute-engine name (``"numpy"`` / ``"jax"``) — the string form is
+    shorthand for a fresh SweepEngine driving that columnar engine."""
+    if isinstance(engine, str):
+        return SweepEngine().sweep(grid, mode=mode, jobs=jobs,
+                                   engine=engine)
     return (engine or SweepEngine()).sweep(grid, mode=mode, jobs=jobs)
 
 
@@ -918,10 +945,40 @@ def _str_list(s: Optional[str]) -> tuple:
                  for x in s.split(",") if x)
 
 
-# order-of-magnitude planning rates for --dry-run's runtime estimate; the
-# real per-machine numbers are tracked in BENCH_sweep.json
-# (benchmarks/sweep_throughput.py)
-EST_CELLS_PER_SEC = {"columnar": 1_000_000, "cell": 15_000}
+# order-of-magnitude planning rates for --dry-run's runtime estimate —
+# the FALLBACK when BENCH_sweep.json (benchmarks/sweep_throughput.py)
+# has no measured rate for the (mode, engine) pair on this machine
+EST_CELLS_PER_SEC = {"columnar": 1_000_000, "columnar_jax": 10_000_000,
+                     "cell": 15_000}
+
+
+def _rate_key(mode: str, engine: str = "numpy") -> str:
+    """BENCH_sweep.json ``modes`` key for a (mode, engine) pair — the
+    numpy engine keeps the bare mode name so historical BENCH files
+    stay readable."""
+    if mode == "cell" or engine in (None, "numpy"):
+        return mode
+    return f"{mode}_{engine}"
+
+
+def _planning_rate(mode: str, engine: str = "numpy") -> tuple[float, str]:
+    """(cells/sec, source) for --dry-run's runtime estimate: the last
+    measured per-engine throughput from BENCH_sweep.json when present,
+    else the order-of-magnitude planning rate."""
+    import json
+    import os
+    key = _rate_key(mode, engine)
+    try:
+        from repro.calibrate.paths import repo_root
+        path = os.path.join(str(repo_root()), "BENCH_sweep.json")
+        with open(path) as f:
+            rate = float(json.load(f)["modes"][key]["cells_per_sec"])
+        if rate > 0:
+            return rate, f"measured, {os.path.basename(path)}"
+    except (ImportError, OSError, KeyError, ValueError, TypeError):
+        pass
+    return float(EST_CELLS_PER_SEC.get(key, EST_CELLS_PER_SEC[mode])), \
+        "planning estimate; run benchmarks/sweep_throughput.py to measure"
 
 
 def _preview(values, limit: int = 6) -> str:
@@ -1086,6 +1143,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                    help="columnar: vectorized batch evaluation (default); "
                         "cell: per-cell reference path (byte-identical, "
                         "much slower on large grids)")
+    p.add_argument("--engine", choices=("numpy", "jax"), default="numpy",
+                   help="columnar compute engine: numpy (reference, "
+                        "default) or jax (jitted contraction, "
+                        "byte-identical; pays a one-off compile, then "
+                        "~10x the numpy rate on large grids)")
     p.add_argument("--jobs", type=int, default=1,
                    help="worker threads for the columnar component stage "
                         "(mesh-chunked; identical results)")
@@ -1167,20 +1229,25 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     except ValueError as e:
         p.error(str(e))
 
+    if args.mode == "cell" and args.engine != "numpy":
+        p.error("--engine jax requires --mode columnar (the cell path "
+                "is the per-cell reference)")
+
     if args.dry_run:
         n = grid.size()
-        est = n / EST_CELLS_PER_SEC[args.mode]
+        rate, source = _planning_rate(args.mode, args.engine)
+        est = n / rate
         print(f"dry run: {n:,} cells")
         print(_cardinality_table(grid))
-        print(f"estimated runtime in --mode {args.mode}: ~{est:.1f}s "
-              f"(planning rate {EST_CELLS_PER_SEC[args.mode]:,} cells/s; "
-              f"see BENCH_sweep.json for this machine's real rates)")
+        print(f"estimated runtime in --mode {args.mode} --engine "
+              f"{args.engine}: ~{est:.1f}s "
+              f"({rate:,.0f} cells/s — {source})")
         if n == 0:
             print(_empty_grid_msg())
             return 2
         return 0
 
-    res = sweep(grid, mode=args.mode, jobs=args.jobs)
+    res = sweep(grid, mode=args.mode, jobs=args.jobs, engine=args.engine)
     if len(res) == 0:
         print(_empty_grid_msg())
         return 2
@@ -1190,8 +1257,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
              + (f" [profile {profile.profile_hash}]" if profile else ""))
     print(f"# {title}")
     print(f"{len(res)} cells in {res.elapsed_s:.3f}s "
-          f"({res.cells_per_sec:,.0f} cells/s, mode={args.mode}); "
-          f"{n_fit} fit")
+          f"({res.cells_per_sec:,.0f} cells/s, mode={args.mode}, "
+          f"engine={args.engine}); {n_fit} fit")
     if res.frontier():
         print("\nPareto frontier (chips -> max fitting global batch):")
         for chips, batch in res.frontier():

@@ -36,9 +36,14 @@ import pytest
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 # Shared hypothesis profile for the property suites (test_batch_property,
-# test_stages_property): fixed seed (derandomize), no deadline flakes on
-# shared CI runners, explicit example budget.  Local runs without
-# hypothesis installed skip those suites via importorskip as before.
+# test_mesh_ctx, test_serve_property, test_stages_property,
+# test_monotone_property): fixed seed (derandomize), no deadline flakes
+# on shared CI runners, explicit example budget.  Local runs without
+# hypothesis installed skip those suites via importorskip — the ONLY
+# self-skips tier-1 carries — but in CI that skip is a silent coverage
+# hole, so with CI=1 a missing hypothesis is a hard session error:
+# requirements-dev.txt installs it, and this assert guarantees the
+# property suites leave zero self-skips on every CI run.
 try:
     from hypothesis import settings as _hyp_settings
 
@@ -48,7 +53,10 @@ try:
     _hyp_settings.load_profile(
         os.environ.get("HYPOTHESIS_PROFILE", "ci"))
 except ImportError:                                   # pragma: no cover
-    pass
+    if os.environ.get("CI"):
+        raise RuntimeError(
+            "CI=1 but hypothesis is not importable: the property suites "
+            "would self-skip. Install requirements-dev.txt.")
 
 
 def run_with_devices(code: str, n_devices: int = 4) -> str:

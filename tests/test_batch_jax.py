@@ -1,0 +1,127 @@
+"""JAX columnar engine (core/batch_jax.py): every result column must be
+byte-identical (exact int64) to the numpy reference engine on the same
+grid — train and serve kinds, pipeline schedules, MoE expert/context
+axes, the optimizer-offload tier, and calibrated profiles — and the
+engine selector must reject the combinations it cannot honor.
+"""
+
+import pytest
+
+np = pytest.importorskip("numpy")
+pytest.importorskip("jax")
+
+from repro.core import sweep as SW  # noqa: E402
+
+#: every ColumnarResults value column the sweep materializes
+COLUMNS = ("peak_bytes", "fits", "budget_bytes", "pool_bytes",
+           "draft_bytes", "hit_saved_bytes", "offload_bytes",
+           "n_chips", "global_batch")
+
+
+@pytest.fixture(scope="module")
+def eng():
+    return SW.SweepEngine()
+
+
+def assert_engine_parity(eng, grid):
+    ref = eng.sweep(grid, engine="numpy")
+    got = eng.sweep(grid, engine="jax")
+    assert len(got) == len(ref) > 0
+    for name in COLUMNS:
+        a = getattr(ref.columns, name)
+        b = getattr(got.columns, name)
+        assert np.array_equal(a, b), f"column {name!r} diverged"
+        if np.asarray(b).dtype.kind in "iu":
+            assert np.asarray(b).dtype == np.int64
+    assert got.fit_count == ref.fit_count
+    # reductions see identical bytes -> identical Pareto answers
+    gm, rm = got.min_chips(), ref.min_chips()
+    assert (gm is None) == (rm is None)
+    if gm is not None:
+        assert (gm.n_chips, gm.peak_bytes) == (rm.n_chips, rm.peak_bytes)
+    assert got.frontier() == ref.frontier()
+
+
+def test_parity_train_pipeline(eng):
+    assert_engine_parity(eng, SW.SweepGrid(
+        arch="llama3.2-3b", chips=(4, 8), chip="v5e",
+        global_batches=(8, 16), seq_lens=(1024, 2048),
+        microbatches=(1, 2, 4), schedules=("1f1b", "gpipe"),
+        grad_accums=(1, 2), kind="train"))
+
+
+def test_parity_moe_expert_context(eng):
+    assert_engine_parity(eng, SW.SweepGrid(
+        arch="deepseek-v2-lite-16b", chips=(8, 16), chip="v5e",
+        global_batches=(8,), seq_lens=(2048,), kind="train",
+        mesh_axes=("data", "model", "expert", "context", "pipe")))
+
+
+def test_parity_multi_arch_optimizers_offload(eng):
+    assert_engine_parity(eng, SW.SweepGrid(
+        arch=("llama3.2-3b", "smollm-360m"), chips=(4,),
+        chip=("v5e", "h100"), optimizers=("adamw", "adafactor"),
+        offload_optimizer=(False, True), global_batches=(16,),
+        seq_lens=(1024,), kind="train"))
+
+
+def test_parity_serve_paged_kv(eng):
+    assert_engine_parity(eng, SW.SweepGrid(
+        arch="llama3.2-3b", chips=(1, 4), chip="v5e",
+        global_batches=(16, 64), seq_lens=(2048,), kind="decode",
+        block_sizes=(0, 16), utilizations=(1.0, 0.9),
+        prefix_hit_rates=(0.0, 0.5), prefix_len=512,
+        draft_archs=("", "smollm-360m")))
+
+
+def test_parity_calibrated_profile(eng):
+    from repro.calibrate.profile import CalibrationProfile
+
+    prof = CalibrationProfile(
+        coefficients={"static": 1.07, "act_saved": 0.93,
+                      "act_transient": 1.21, "overhead": 1.0},
+        chip_constant_bytes={"*": 256 * 1024 ** 2})
+    assert_engine_parity(eng, SW.SweepGrid(
+        arch="llava15-7b", chips=(4, 8), chip="v5e",
+        global_batches=(8, 16), seq_lens=(1024,), kind="train",
+        profile=prof))
+
+
+def test_parity_cpu_backend(eng):
+    assert_engine_parity(eng, SW.SweepGrid(
+        arch="smollm-360m", chips=(2, 4), chip="v5e", backend="cpu",
+        global_batches=(8,), seq_lens=(512, 1024), kind="prefill"))
+
+
+def test_jax_engine_is_deterministic(eng):
+    """Two warm runs of the same grid return identical bytes (the jit
+    cache replays, it does not drift)."""
+    grid = SW.SweepGrid(arch="llama3.2-3b", chips=(4, 8), chip="v5e",
+                        global_batches=(8, 16), seq_lens=(2048,))
+    a = eng.sweep(grid, engine="jax")
+    b = eng.sweep(grid, engine="jax")
+    assert np.array_equal(a.columns.peak_bytes, b.columns.peak_bytes)
+    assert np.array_equal(a.columns.fits, b.columns.fits)
+
+
+def test_engine_selector_validation(eng):
+    grid = SW.SweepGrid(arch="smollm-360m", chips=(2,),
+                        global_batches=(8,), seq_lens=(512,))
+    with pytest.raises(ValueError, match="engine"):
+        eng.sweep(grid, engine="fortran")
+    with pytest.raises(ValueError, match="cell"):
+        eng.sweep(grid, mode="cell", engine="jax")
+    with pytest.raises(ValueError, match="keep_predictions|breakdown"):
+        eng.sweep(SW.SweepGrid(arch="smollm-360m", chips=(2,),
+                               global_batches=(8,), seq_lens=(512,),
+                               keep_predictions=True), engine="jax")
+
+
+def test_module_level_sweep_engine_shorthand():
+    """sweep(grid, engine="jax") string shorthand drives a fresh
+    SweepEngine on the jitted path."""
+    grid = SW.SweepGrid(arch="smollm-360m", chips=(2,),
+                        global_batches=(8,), seq_lens=(512,))
+    a = SW.sweep(grid, engine="jax")
+    b = SW.sweep(grid, engine="numpy")
+    assert np.array_equal(a.columns.peak_bytes, b.columns.peak_bytes)

@@ -1,0 +1,176 @@
+"""Property tests (hypothesis) for the monotone structure core/search.py
+prunes with.  Each invariant is CI-load-bearing: if a new knob or term
+breaks one, the branch-and-bound searches could silently mis-prune, so
+these run under the shared fixed-seed "ci" profile (tests/conftest.py)
+and a violation fails CI before the pruner can return a wrong answer.
+
+Invariants (each also has deterministic anchor cases in
+tests/test_search.py so local runs without hypothesis keep coverage):
+
+* aligned-floor lemma — ``peak(gb) >= peak(L * (gb // L))`` where L is
+  the mesh's non-pipe axis product: rounding gb DOWN to the ladder
+  never increases the peak;
+* ladder monotonicity — along multiples of L the peak is non-decreasing
+  in global batch (the bracket monotone_max binary-searches);
+* seq monotonicity — peak non-decreasing in sequence length at a fixed
+  mesh and aligned batch;
+* data-axis monotonicity — doubling the ``data`` axis at batches
+  aligned to the doubled mesh leaves every batch-bearing
+  PredictedMemory component non-increasing (and the peak, on archs
+  whose params don't reshard with data);
+* statics floor — ``floor // n_chips <= peak`` for every cell of a
+  random grid (the min_chips/frontier pruning bound);
+* pruned == exhaustive — min_chips_search and frontier_search in
+  oracle mode on randomized grids (the oracle raises on divergence).
+
+The helpers below are plain functions so the deterministic twins and
+local debugging can call them directly.
+"""
+
+import pytest
+
+np = pytest.importorskip("numpy")
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis; `pip install hypothesis` "
+           "to run them")
+from hypothesis import assume, given, settings, strategies as st  # noqa: E402
+
+from repro.configs import ShapeConfig, get_config  # noqa: E402
+from repro.core import planner as PL  # noqa: E402
+from repro.core import search as SR  # noqa: E402
+from repro.core import sweep as SW  # noqa: E402
+from repro.core.spec import FULL_TRAIN  # noqa: E402
+
+ENG = SW.SweepEngine()          # memoized across examples on purpose
+BUDGET = int(PL.chip_hbm("v5e") * PL.HEADROOM)
+
+#: small-static archs: scalar report() probes stay cheap, and the span
+#: still crosses dense / MoE-free / ssm / hybrid / multimodal families
+ARCHS = ("smollm-360m", "llama3.2-3b", "mamba2-1.3b", "zamba2-2.7b",
+         "minicpm3-4b")
+KINDS = ("train", "prefill", "decode")
+
+#: batch-bearing PredictedMemory components: the ``data`` axis reaches
+#: them only through gb-derived dims, so at aligned batches doubling it
+#: can only grow their shard denominators
+BATCH_COMPONENTS = ("act_saved_bytes", "act_transient_bytes",
+                    "loss_bytes", "input_bytes", "cache_bytes")
+
+
+def report(arch, seq, gb, kind, mesh):
+    return ENG.report(arch, ShapeConfig("prop", seq, gb, kind),
+                      dict(mesh), budget_bytes=BUDGET, chip="v5e")
+
+
+def peak(arch, seq, gb, kind, mesh):
+    return report(arch, seq, gb, kind, mesh).peak_bytes
+
+
+# ---------------------------------------------------------------------------
+# batch / seq monotonicity (the plan_max_concurrency bound)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(arch=st.sampled_from(ARCHS), kind=st.sampled_from(KINDS),
+       data=st.sampled_from([1, 2, 4]), model=st.sampled_from([1, 2]),
+       gb=st.integers(1, 192), seq=st.sampled_from([512, 1024]))
+def test_aligned_floor_lemma(arch, kind, data, model, gb, seq):
+    mesh = {"data": data, "model": model}
+    L = SR.batch_align(mesh)
+    assume(gb >= L)
+    assert peak(arch, seq, gb, kind, mesh) \
+        >= peak(arch, seq, L * (gb // L), kind, mesh)
+
+
+@settings(max_examples=40, deadline=None)
+@given(arch=st.sampled_from(ARCHS), kind=st.sampled_from(KINDS),
+       data=st.sampled_from([1, 2, 4]), model=st.sampled_from([1, 2]),
+       k1=st.integers(1, 48), k2=st.integers(1, 48),
+       seq=st.sampled_from([512, 1024]))
+def test_ladder_monotone_in_batch(arch, kind, data, model, k1, k2, seq):
+    assume(k1 < k2)
+    mesh = {"data": data, "model": model}
+    L = SR.batch_align(mesh)
+    assert peak(arch, seq, k1 * L, kind, mesh) \
+        <= peak(arch, seq, k2 * L, kind, mesh)
+
+
+@settings(max_examples=30, deadline=None)
+@given(arch=st.sampled_from(ARCHS), kind=st.sampled_from(KINDS),
+       data=st.sampled_from([1, 2]), model=st.sampled_from([1, 2]),
+       k=st.integers(1, 8), seq=st.sampled_from([256, 512, 1024]))
+def test_monotone_in_seq(arch, kind, data, model, k, seq):
+    mesh = {"data": data, "model": model}
+    gb = k * SR.batch_align(mesh)
+    assert peak(arch, seq, gb, kind, mesh) \
+        <= peak(arch, 2 * seq, gb, kind, mesh)
+
+
+@settings(max_examples=30, deadline=None)
+@given(arch=st.sampled_from(ARCHS), kind=st.sampled_from(KINDS),
+       data=st.sampled_from([1, 2, 4]), k=st.integers(1, 16),
+       seq=st.sampled_from([512, 1024]))
+def test_data_axis_components_non_increasing(arch, kind, data, k, seq):
+    """Doubling data at a batch aligned to the DOUBLED mesh: every
+    batch-bearing component is non-increasing, and on archs whose
+    params don't reshard with data (no FSDP) so is the peak."""
+    gb = k * 2 * data
+    a = report(arch, seq, gb, kind, {"data": data, "model": 1}).prediction
+    b = report(arch, seq, gb, kind,
+               {"data": 2 * data, "model": 1}).prediction
+    for comp in BATCH_COMPONENTS:
+        assert getattr(b, comp) <= getattr(a, comp), comp
+    if not get_config(SW.normalize_arch(arch)).fsdp:
+        assert b.peak_bytes <= a.peak_bytes
+
+
+# ---------------------------------------------------------------------------
+# statics floor + pruned-vs-exhaustive on randomized grids
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(arch=st.sampled_from(ARCHS), kind=st.sampled_from(KINDS),
+       chips=st.sampled_from([(4,), (8,), (4, 8)]),
+       opt=st.sampled_from([None, "adamw", "adafactor", "adamw8bit"]),
+       offload=st.booleans(),
+       gbs=st.lists(st.integers(1, 64), min_size=1, max_size=2,
+                    unique=True),
+       seq=st.sampled_from([512, 1024]))
+def test_statics_floor_bounds_every_cell(arch, kind, chips, opt,
+                                         offload, gbs, seq):
+    grid = SW.SweepGrid(arch=arch, chips=chips, chip="v5e",
+                        optimizers=(opt,),
+                        offload_optimizer=(False, True) if offload
+                        and kind == "train" else (False,),
+                        global_batches=tuple(gbs), seq_lens=(seq,),
+                        kind=kind)
+    floor = SR._floor_for(grid)
+    res = ENG.sweep(grid)
+    assume(len(res))
+    bound = floor // res.columns.n_chips
+    assert int((res.columns.peak_bytes < bound).sum()) == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(arch=st.sampled_from(ARCHS),
+       chips=st.sampled_from([(2, 4, 8), (4, 16), (8, 16, 32)]),
+       gb=st.sampled_from([8, 16, 64]),
+       seq=st.sampled_from([512, 2048]),
+       mbs=st.sampled_from([(1,), (1, 2, 4)]),
+       allow_pp=st.booleans())
+def test_pruned_searches_equal_exhaustive(arch, chips, gb, seq, mbs,
+                                          allow_pp):
+    shape = ShapeConfig("prop", seq, gb, "train")
+    grid = PL._search_grid(arch, shape, chips, "v5e", FULL_TRAIN, "tpu",
+                           PL.HEADROOM, allow_pp, 8, False, 8, False, 8,
+                           mbs, ("1f1b",), None)
+    assume(grid is not None)
+    SR.min_chips_search(grid, engine=ENG, oracle=True)  # raises on drift
+    fgrid = PL._search_grid(arch, shape, chips, "v5e", FULL_TRAIN, "tpu",
+                            PL.HEADROOM, allow_pp, 8, False, 8, False, 8,
+                            mbs, ("1f1b",), None,
+                            global_batches=(gb, gb // 2 or 1, 1))
+    SR.frontier_search(fgrid, engine=ENG, oracle=True)
