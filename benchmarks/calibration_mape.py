@@ -7,9 +7,14 @@ set, write BENCH_calibration.json (+ markdown MAPE report).
 The fixture (benchmarks/fixtures/calibration_measurements.json) is the
 deterministic synthetic measurement set — the same generator CI uses, so
 the bench trajectory tracks prediction ACCURACY (per-arch-family MAPE,
-calibrated vs raw), not just throughput.  Exit code is non-zero unless
-calibrated predictions achieve strictly lower MAPE than uncalibrated ones
-for EVERY arch family in the fixture (the ISSUE-2 acceptance gate).
+calibrated vs raw), not just throughput.  Both assembly modes are
+benchmarked: the legacy sum-of-maxima peak and the liveness
+interval-overlap peak, each fit + evaluated end-to-end.  Exit code is
+non-zero unless (a) calibrated predictions achieve strictly lower MAPE
+than uncalibrated ones for EVERY arch family under BOTH assemblies (the
+ISSUE-2 acceptance gate) and (b) the raw liveness MAPE is strictly
+below the raw legacy MAPE (the ISSUE-9 acceptance gate: the overlap
+peak must cut the ~12.2% legacy baseline toward the paper's 8.7%).
 """
 
 from __future__ import annotations
@@ -43,49 +48,76 @@ def run(verbose: bool = True, out_dir: str = None) -> dict:
     engine = SW.SweepEngine()
     store = MeasurementStore.load(FIXTURE)
 
-    t0 = time.perf_counter()
-    profile = fit_profile(store, engine=engine,
-                          source={"fixture": os.path.basename(FIXTURE)})
-    fit_s = time.perf_counter() - t0
-
-    t0 = time.perf_counter()
-    by_family = evaluate(store, profile, by="family", engine=engine)
-    by_arch = evaluate(store, profile, by="arch", engine=engine)
-    eval_s = time.perf_counter() - t0
-
     payload = {
         "benchmark": "calibration_mape",
         "fixture": os.path.basename(FIXTURE),
         "n_measurements": len(store),
-        "profile": profile.to_dict(),
-        "profile_hash": profile.profile_hash,
-        "fit_seconds": round(fit_s, 4),
-        "eval_seconds": round(eval_s, 4),
-        "by_family": by_family.to_json_dict(),
-        "by_arch": by_arch.to_json_dict(),
-        "all_families_improved": by_family.all_groups_improved,
+        "assemblies": {},
     }
-    md = (by_family.to_markdown(
-              title="calibration accuracy by family (bundled synthetic "
-                    "fixtures)") + "\n\n"
-          + by_arch.to_markdown(title="calibration accuracy by arch")
-          + "\n\n" + f"profile: `{profile.summary()}`\n")
-    json_path, md_path = write_bench("calibration", payload, md,
-                                     out_dir=out_dir)
+    md_parts = []
+    raw_by_assembly = {}
+    all_improved = True
+    for assembly in ("legacy", "liveness"):
+        t0 = time.perf_counter()
+        profile = fit_profile(store, engine=engine, assembly=assembly,
+                              source={"fixture": os.path.basename(FIXTURE),
+                                      "assembly": assembly})
+        fit_s = time.perf_counter() - t0
 
+        t0 = time.perf_counter()
+        by_family = evaluate(store, profile, by="family", engine=engine,
+                             assembly=assembly)
+        by_arch = evaluate(store, profile, by="arch", engine=engine,
+                           assembly=assembly)
+        eval_s = time.perf_counter() - t0
+
+        payload["assemblies"][assembly] = {
+            "profile": profile.to_dict(),
+            "profile_hash": profile.profile_hash,
+            "fit_seconds": round(fit_s, 4),
+            "eval_seconds": round(eval_s, 4),
+            "by_family": by_family.to_json_dict(),
+            "by_arch": by_arch.to_json_dict(),
+            "all_families_improved": by_family.all_groups_improved,
+        }
+        raw_by_assembly[assembly] = by_family.mape_raw
+        all_improved = all_improved and by_family.all_groups_improved
+        md_parts.append(
+            by_family.to_markdown(
+                title=f"calibration accuracy by family "
+                      f"({assembly} assembly)") + "\n\n"
+            + by_arch.to_markdown(
+                title=f"calibration accuracy by arch ({assembly} assembly)")
+            + "\n\n" + f"{assembly} profile: `{profile.summary()}`\n")
+
+        if verbose:
+            tag = f"calibration_mape[{assembly}]"
+            print(f"{tag},n_measurements,{len(store)}")
+            print(f"{tag},fit_s,{fit_s:.3f}")
+            print(f"{tag},mape_raw_pct,{by_family.mape_raw:.2f}")
+            print(f"{tag},mape_calibrated_pct,"
+                  f"{by_family.mape_calibrated:.2f}")
+            for row in by_family.rows:
+                print(f"{tag},{row.group}_raw_pct,{row.mape_raw:.2f}")
+                print(f"{tag},{row.group}_calibrated_pct,"
+                      f"{row.mape_calibrated:.2f}")
+            print(f"{tag},all_families_improved,"
+                  f"{by_family.all_groups_improved}")
+
+    liveness_cuts_raw = (raw_by_assembly["liveness"]
+                         < raw_by_assembly["legacy"])
+    payload["all_families_improved"] = all_improved
+    payload["liveness_raw_below_legacy_raw"] = liveness_cuts_raw
+    md_parts.append(
+        f"raw MAPE: legacy {raw_by_assembly['legacy']:.2f}% -> "
+        f"liveness {raw_by_assembly['liveness']:.2f}% "
+        f"({'improved' if liveness_cuts_raw else 'NOT improved'})\n")
+    json_path, md_path = write_bench("calibration", payload,
+                                     "\n\n".join(md_parts),
+                                     out_dir=out_dir)
     if verbose:
-        print(f"calibration_mape,n_measurements,{len(store)}")
-        print(f"calibration_mape,fit_s,{fit_s:.3f}")
-        print(f"calibration_mape,mape_raw_pct,{by_family.mape_raw:.2f}")
-        print(f"calibration_mape,mape_calibrated_pct,"
-              f"{by_family.mape_calibrated:.2f}")
-        for row in by_family.rows:
-            print(f"calibration_mape,{row.group}_raw_pct,"
-                  f"{row.mape_raw:.2f}")
-            print(f"calibration_mape,{row.group}_calibrated_pct,"
-                  f"{row.mape_calibrated:.2f}")
-        print(f"calibration_mape,all_families_improved,"
-              f"{by_family.all_groups_improved}")
+        print(f"calibration_mape,liveness_raw_below_legacy_raw,"
+              f"{liveness_cuts_raw}")
         print(f"wrote {json_path}")
         print(f"wrote {md_path}")
     return payload
@@ -103,4 +135,6 @@ if __name__ == "__main__":
         regen_fixture()
         sys.exit(0)
     result = run(out_dir=args.out)
-    sys.exit(0 if result["all_families_improved"] else 1)
+    ok = (result["all_families_improved"]
+          and result["liveness_raw_below_legacy_raw"])
+    sys.exit(0 if ok else 1)

@@ -2,8 +2,9 @@
 
     PYTHONPATH=src python benchmarks/sweep_throughput.py
         [--scale large|smoke|pr1] [--verify] [--jobs N] [--out DIR]
-        [--engine numpy|jax] [--search] [--min-cells-per-sec N]
-        [--min-speedup X] [--min-search-reduction X]
+        [--engine numpy|jax] [--assembly legacy|liveness] [--search]
+        [--min-cells-per-sec N] [--min-speedup X]
+        [--min-search-reduction X]
 
 Times the SAME grid through both sweep modes:
 
@@ -21,6 +22,14 @@ attributable.  ``--search`` runs the Pareto-query leg: pruned
 answers and recording cells-evaluated for both; results land in
 ``BENCH_search.{json,md}`` and ``--min-search-reduction`` gates the
 aggregate exhaustive/pruned cell ratio (CI pins >= 20x).
+
+``--assembly liveness`` adds the interval-overlap assembly leg on the
+SAME grid: the liveness columnar sweep timed cold (fresh engine folds +
+event-program assembly) and warm (memoized steady state), with EVERY
+result column of both runs compared element-wise against the scalar
+event-program replay (cell mode) and the tightened peak asserted <= the
+legacy peak per cell; the perf floors then gate the liveness warm rate
+(CI pins >= 1M cells/s at 0 mismatches on the 124,416-cell grid).
 
 asserts their verdicts and per-device peak bytes are byte-identical on
 every cell, and writes ``BENCH_sweep.json``/``.md`` (cells/sec, wall
@@ -309,8 +318,54 @@ def _verify_parity(verbose: bool) -> dict:
             "seconds": round(time.perf_counter() - t0, 1)}
 
 
+#: columns the liveness leg compares element-wise between the columnar
+#: sweep and the scalar (cell-mode) replay
+LIVENESS_PARITY_COLUMNS = ("peak_bytes", "fits", "budget_bytes",
+                           "pool_bytes", "draft_bytes", "hit_saved_bytes",
+                           "offload_bytes", "overlap_slack_bytes")
+
+
+def _liveness_leg(grid, legacy_cols, jobs: int) -> tuple:
+    """Time the liveness assembly on the SAME grid (cold = fresh engine
+    folds + assembles; warm = memoized steady state) and compare every
+    result column of BOTH runs against the scalar event-program replay
+    (cell mode), plus the liveness <= legacy bound against the legacy
+    columnar arrays.  Returns (modes_dict, per_column_mismatches)."""
+    import dataclasses
+
+    import numpy as np
+
+    lgrid = dataclasses.replace(grid, assembly="liveness")
+    leng = SW.SweepEngine()
+    cold = leng.sweep(lgrid, mode="columnar", jobs=jobs)
+    warm = min((leng.sweep(lgrid, mode="columnar", jobs=jobs)
+                for _ in range(3)), key=lambda r: r.elapsed_s)
+    cell = SW.SweepEngine().sweep(lgrid, mode="cell")
+    assert len(cold) == len(warm) == len(cell) == grid.size()
+    ref = {c: np.array([getattr(r, c) for r in cell.results])
+           for c in LIVENESS_PARITY_COLUMNS}
+    per_column = {}
+    for c in LIVENESS_PARITY_COLUMNS:
+        per_column[c] = int(sum(
+            (np.asarray(getattr(r.columns, c)) != ref[c]).sum()
+            for r in (cold, warm)))
+    # the tightened peak must stay bounded by the legacy peak per cell
+    per_column["liveness_gt_legacy"] = int(sum(
+        (np.asarray(r.columns.peak_bytes)
+         > np.asarray(legacy_cols.peak_bytes)).sum()
+        for r in (cold, warm)))
+    modes = {"columnar_liveness": {
+        "elapsed_s": round(warm.elapsed_s, 4),
+        "cells_per_sec": round(warm.cells_per_sec),
+        "cold_elapsed_s": round(cold.elapsed_s, 4),
+        "cold_cells_per_sec": round(cold.cells_per_sec),
+    }}
+    return modes, per_column
+
+
 def run(verbose: bool = True, verify: bool = False, scale: str = "large",
-        jobs: int = 1, out_dir: str = None, engine: str = "numpy") -> dict:
+        jobs: int = 1, out_dir: str = None, engine: str = "numpy",
+        assembly: str = "legacy") -> dict:
     grid = build_grid(scale)
     n = grid.size()
 
@@ -350,6 +405,14 @@ def run(verbose: bool = True, verify: bool = False, scale: str = "large",
             "cold_cells_per_sec": round(cold.cells_per_sec),
         }
 
+    live_modes = {}
+    live_per_column = {}
+    live_mismatches = 0
+    if assembly == "liveness":
+        live_modes, live_per_column = _liveness_leg(grid, col.columns,
+                                                    jobs)
+        live_mismatches = sum(live_per_column.values())
+
     # full-grid parity (arrays first, then every materialized field)
     import numpy as np
     peaks = np.array([r.peak_bytes for r in cell.results])
@@ -358,7 +421,7 @@ def run(verbose: bool = True, verify: bool = False, scale: str = "large",
                           + (fits != col.columns.fits).sum())
     if _columns(col) != _columns(cell):
         grid_mismatches = max(grid_mismatches, 1)
-    grid_mismatches += jax_mismatches
+    grid_mismatches += jax_mismatches + live_mismatches
     speedup = col.cells_per_sec / max(cell.cells_per_sec, 1e-9)
 
     payload = {
@@ -372,12 +435,16 @@ def run(verbose: bool = True, verify: bool = False, scale: str = "large",
             "cell": {"elapsed_s": round(cell.elapsed_s, 4),
                      "cells_per_sec": round(cell.cells_per_sec)},
             **jax_modes,
+            **live_modes,
         },
         "speedup": round(speedup, 1),
         "grid_parity_mismatches": grid_mismatches,
         "cells_fit": col.fit_count,
         "frontier": col.frontier(),
     }
+    if live_modes:
+        payload["liveness_parity_per_column"] = live_per_column
+        payload["liveness_mismatches"] = live_mismatches
     if jax_modes:
         payload["jax_speedup"] = round(
             jax_modes["columnar_jax"]["cells_per_sec"]
@@ -398,9 +465,20 @@ def run(verbose: bool = True, verify: bool = False, scale: str = "large",
                   f"| {j['cells_per_sec']:,.0f} |")
         md.append(f"| columnar (jax, cold) | {j['cold_elapsed_s']:.3f} "
                   f"| {j['cold_cells_per_sec']:,.0f} |")
+    if live_modes:
+        lm = live_modes["columnar_liveness"]
+        md.append(f"| columnar (liveness, warm) | {lm['elapsed_s']:.3f} "
+                  f"| {lm['cells_per_sec']:,.0f} |")
+        md.append(f"| columnar (liveness, cold) "
+                  f"| {lm['cold_elapsed_s']:.3f} "
+                  f"| {lm['cold_cells_per_sec']:,.0f} |")
     md += ["",
            f"speedup: **{speedup:.1f}x** — parity mismatches: "
            f"{grid_mismatches}"]
+    if live_modes:
+        md.append(f"\nliveness leg: {live_mismatches} per-column "
+                  f"mismatches vs scalar replay (cold + warm) over "
+                  f"{', '.join(LIVENESS_PARITY_COLUMNS)}")
     if verify:
         v = payload["verify"]
         md.append(f"\nverify: {v['cells']:,} parity-set cells vs "
@@ -417,6 +495,14 @@ def run(verbose: bool = True, verify: bool = False, scale: str = "large",
             print(f"sweep_throughput,jax_cold_elapsed_s,"
                   f"{j['cold_elapsed_s']}")
             print(f"sweep_throughput,jax_mismatches,{jax_mismatches}")
+        if live_modes:
+            lm = live_modes["columnar_liveness"]
+            print(f"sweep_throughput,liveness_warm_cells_per_sec,"
+                  f"{lm['cells_per_sec']}")
+            print(f"sweep_throughput,liveness_cold_cells_per_sec,"
+                  f"{lm['cold_cells_per_sec']}")
+            print(f"sweep_throughput,liveness_mismatches,"
+                  f"{live_mismatches}")
         print(f"sweep_throughput,scale,{scale}")
         print(f"sweep_throughput,cells,{n}")
         print(f"sweep_throughput,columnar_elapsed_s,{col.elapsed_s:.3f}")
@@ -581,6 +667,13 @@ def main(argv=None) -> int:
                     help="add the jitted columnar engine leg (cold + "
                          "warm timing, byte-parity vs numpy); the perf "
                          "floors then gate the jax warm rate")
+    ap.add_argument("--assembly", choices=("legacy", "liveness"),
+                    default="legacy",
+                    help="'liveness' adds the interval-overlap assembly "
+                         "leg on the same grid (cold + warm timing, "
+                         "per-column parity vs the scalar event-program "
+                         "replay); the perf floors then gate the "
+                         "liveness warm rate")
     ap.add_argument("--search", action="store_true",
                     help="run the Pareto-query leg (pruned vs exhaustive "
                          "plan_min_chips/frontier/max_concurrency) and "
@@ -595,11 +688,14 @@ def main(argv=None) -> int:
                          "exhaustive/pruned cell ratio >= this floor")
     args = ap.parse_args(argv)
     payload = run(verify=args.verify, scale=args.scale, jobs=args.jobs,
-                  out_dir=args.out, engine=args.engine)
+                  out_dir=args.out, engine=args.engine,
+                  assembly=args.assembly)
     ok = payload["grid_parity_mismatches"] == 0
     if args.verify:
         ok = ok and payload["verify"]["mismatches"] == 0
-    gate_mode = "columnar_jax" if args.engine == "jax" else "columnar"
+    gate_mode = ("columnar_liveness" if args.assembly == "liveness"
+                 else "columnar_jax" if args.engine == "jax"
+                 else "columnar")
     col_cps = payload["modes"][gate_mode]["cells_per_sec"]
     gate_speedup = payload.get("jax_speedup", payload["speedup"]) \
         if args.engine == "jax" else payload["speedup"]

@@ -101,7 +101,8 @@ def fit_rows(rows: list[TermRow], created: str = "",
 
 
 def fit_profile(store: MeasurementStore, engine=None, created: str = "",
-                source: Optional[dict] = None) -> CalibrationProfile:
+                source: Optional[dict] = None,
+                assembly: str = "legacy") -> CalibrationProfile:
     """Decompose + fit in one call (the ``calibrate fit`` CLI backend)."""
-    return fit_rows(decompose(store, engine), created=created,
-                    source=source)
+    return fit_rows(decompose(store, engine, assembly=assembly),
+                    created=created, source=source)

@@ -98,7 +98,7 @@ def _family_of(arch: str) -> str:
 def evaluate(store: MeasurementStore,
              profile: CalibrationProfile,
              by: str = "family",
-             engine=None) -> AccuracyReport:
+             engine=None, assembly: str = "legacy") -> AccuracyReport:
     """Per-group MAPE of raw vs calibrated predictions over a store."""
     if by not in ("arch", "family"):
         raise ValueError(f"by={by!r}; expected 'arch' or 'family'")
@@ -110,8 +110,9 @@ def evaluate(store: MeasurementStore,
     cal_all: list = []
     for m in store:
         group = m.arch if by == "arch" else _family_of(m.arch)
-        raw = predict_measurement(m, engine)
-        cal = predict_measurement(m, engine, profile=profile)
+        raw = predict_measurement(m, engine, assembly=assembly)
+        cal = predict_measurement(m, engine, profile=profile,
+                                  assembly=assembly)
         label = f"{m.arch}|{m.kind}|b{m.global_batch}|s{m.seq_len}"
         r_rec = RPT.PredictionRecord(label, raw.peak_bytes,
                                      m.measured_bytes)

@@ -49,7 +49,8 @@ def _context_for(m: Measurement, cfg):
                            remat=m.remat, optimizer=m.optimizer)
 
 
-def predict_measurement(m: Measurement, engine=None, profile=None):
+def predict_measurement(m: Measurement, engine=None, profile=None,
+                        assembly: str = "legacy"):
     """The framework's prediction for a measured cell (optionally
     calibrated), through the shared memoized engine."""
     from repro.core import sweep as SW
@@ -58,25 +59,38 @@ def predict_measurement(m: Measurement, engine=None, profile=None):
     cfg, _, _ = engine._arch_state(m.arch, policy)
     ctx = _context_for(m, cfg)
     return engine.predict_cell(m.arch, policy, ctx, profile=profile,
-                               chip=m.chip)
+                               chip=m.chip, assembly=assembly)
 
 
-def decompose(store: MeasurementStore, engine=None) -> list[TermRow]:
-    """Raw term groups for every measurement (shared engine caches)."""
+def decompose(store: MeasurementStore, engine=None,
+              assembly: str = "legacy") -> list[TermRow]:
+    """Raw term groups for every measurement (shared engine caches).
+
+    ``assembly="liveness"`` decomposes the interval-overlap peak
+    instead: the per-term bytes are the components LIVE at the winning
+    event of the alloc/free program (``liveness.Replay.group_at_peak``),
+    so the rows still sum to that assembly's raw peak exactly and the
+    NNLS fit calibrates the composed liveness peak through the same
+    affine transform.
+    """
     from repro.core import sweep as SW
     engine = engine or SW.SweepEngine()
     rows = []
     for m in store:
-        pred = predict_measurement(m, engine)
-        terms = {
-            "static": (pred.param_bytes + pred.grad_bytes + pred.opt_bytes
-                       + pred.output_copy_bytes),
-            "act_saved": pred.act_saved_bytes,
-            "act_transient": pred.act_transient_bytes,
-            "overhead": (pred.loss_bytes + pred.input_bytes
-                         + pred.cache_bytes),
-        }
+        pred = predict_measurement(m, engine, assembly=assembly)
+        if assembly == "liveness":
+            terms = dict(pred.liveness_groups)
+        else:
+            terms = {
+                "static": (pred.param_bytes + pred.grad_bytes
+                           + pred.opt_bytes + pred.output_copy_bytes),
+                "act_saved": pred.act_saved_bytes,
+                "act_transient": pred.act_transient_bytes,
+                "overhead": (pred.loss_bytes + pred.input_bytes
+                             + pred.cache_bytes),
+            }
         assert set(terms) == set(TERMS)
+        assert sum(terms.values()) == pred.peak_bytes
         rows.append(TermRow(measurement=m, terms=terms,
                             raw_peak_bytes=pred.peak_bytes))
     return rows

@@ -90,11 +90,13 @@ def breakdown(arch: str, shape: str = "train_4k",
               mesh: Optional[dict] = None, chip: str = "v5e",
               policy: str = "full", backend: str = "tpu",
               microbatches: int = 1, schedule: str = "1f1b",
-              serve=None) -> str:
+              serve=None, assembly: str = "legacy") -> str:
     """Per-module (and, with a ``pipe`` mesh axis, per-stage) memory
     breakdown of one architecture's prediction on a reference cell.
     ``serve`` (a repro.serve.pool.ServeSpec, serve kinds only) adds the
-    paged-KV pool / prefix-savings / draft-residency summary line."""
+    paged-KV pool / prefix-savings / draft-residency summary line.
+    ``assembly="liveness"`` reports the interval-overlap peak and adds
+    the reporting-only overlap-slack column (legacy minus liveness)."""
     from repro.configs import get_config
     from repro.core import planner as PL
     from repro.core import predictor as PR
@@ -114,18 +116,26 @@ def breakdown(arch: str, shape: str = "train_4k",
                           seq_len=shp.seq_len, backend=backend,
                           microbatches=microbatches, schedule=schedule,
                           serve=serve)
-    preds = PR.predict_stages(model, POLICIES[policy], ctx)
+    preds = PR.predict_stages(model, POLICIES[policy], ctx,
+                              assembly=assembly)
     peak_stage = max(range(len(preds)),
                      key=lambda i: preds[i].peak_bytes)
     pred = preds[peak_stage]
     budget = PL.chip_hbm(chip) * PL.HEADROOM
     mesh_str = ",".join(f"{k}={v}" for k, v in sorted(mesh.items()))
     gib = lambda v: f"{v / GiB:.3f}"
-    out = [f"## {arch} {shp.name} on {mesh_str} ({backend} prediction)",
+    live = assembly == "liveness"
+    out = [f"## {arch} {shp.name} on {mesh_str} ({backend} prediction"
+           + (", liveness assembly)" if live else ")"),
            "",
            f"peak {pred.peak_bytes / GiB:.2f} GiB vs "
            f"{budget / GiB:.2f} GiB budget ({chip}) -> "
            f"{'FITS' if pred.peak_bytes <= budget else 'OOM'}", ""]
+    if live:
+        out += [f"overlap slack {gib(pred.overlap_slack_bytes)} GiB "
+                f"(legacy sum-of-maxima would report "
+                f"{(pred.peak_bytes + pred.overlap_slack_bytes) / GiB:.2f}"
+                f" GiB)", ""]
 
     # serving-fleet summary (decode/prefill cells with active serve
     # knobs): the paged pool replaces the slen-growing cache terms, so
@@ -179,18 +189,23 @@ def breakdown(arch: str, shape: str = "train_4k",
         for i, p in enumerate(preds):
             stash = ST.stash_count(i, ctx.pp, ctx.eff_microbatches,
                                    ctx.schedule)
-            rows.append((i, len(p.per_module), stash,
-                         gib(p.param_bytes),
-                         gib(p.grad_bytes + p.opt_bytes),
-                         gib(p.act_saved_bytes),
-                         gib(p.act_transient_bytes),
-                         gib(p.loss_bytes + p.input_bytes
-                             + p.cache_bytes),
-                         gib(p.peak_bytes),
-                         "<- peak" if i == peak_stage else ""))
+            row = (i, len(p.per_module), stash,
+                   gib(p.param_bytes),
+                   gib(p.grad_bytes + p.opt_bytes),
+                   gib(p.act_saved_bytes),
+                   gib(p.act_transient_bytes),
+                   gib(p.loss_bytes + p.input_bytes
+                       + p.cache_bytes))
+            if live:
+                row += (gib(p.overlap_slack_bytes),)
+            rows.append(row + (gib(p.peak_bytes),
+                               "<- peak" if i == peak_stage else ""))
+        stage_headers = ("stage", "modules", "stash", "param", "grad+opt",
+                         "act_saved", "act_trans", "overheads")
+        if live:
+            stage_headers += ("ovl_slack",)
         out.append(markdown_table(
-            ("stage", "modules", "stash", "param", "grad+opt",
-             "act_saved", "act_trans", "overheads", "peak_gib", ""),
+            stage_headers + ("peak_gib", ""),
             rows,
             title=f"pipeline stages (pp={ctx.pp} x {microbatches} "
                   f"microbatches, {schedule})"))
@@ -239,6 +254,11 @@ def main(argv=None) -> int:
     ap.add_argument("--schedule", default="1f1b",
                     choices=("1f1b", "gpipe"),
                     help="pipeline schedule for --breakdown")
+    ap.add_argument("--assembly", default="legacy",
+                    choices=("legacy", "liveness"),
+                    help="peak assembly for --breakdown: legacy "
+                         "sum-of-maxima or liveness interval-overlap "
+                         "(adds the overlap-slack column)")
     ap.add_argument("--block-size", type=int, default=0,
                     help="paged-KV block size in tokens for --breakdown "
                          "(serve kinds; 0 = contiguous)")
@@ -268,6 +288,8 @@ def main(argv=None) -> int:
         ap.error("--block-size/--utilization/--prefix-hit-rate/"
                  "--prefix-len/--mix/--draft-arch only apply to "
                  "--breakdown")
+    if args.assembly != "legacy" and not args.breakdown:
+        ap.error("--assembly only applies to --breakdown")
     if args.breakdown:
         if args.profile:
             ap.error("--breakdown and --profile are mutually exclusive")
@@ -297,7 +319,8 @@ def main(argv=None) -> int:
                             mesh=mesh, chip=chip, policy=args.policy,
                             backend=args.backend,
                             microbatches=args.microbatches,
-                            schedule=args.schedule, serve=serve))
+                            schedule=args.schedule, serve=serve,
+                            assembly=args.assembly))
         except (KeyError, ValueError) as e:
             ap.error(str(e))
         return 0

@@ -65,6 +65,41 @@ I64 = np.int64
 # the numpy reference below runs.
 _shard_factor_impl = None
 
+# Optional accelerated segmented-cummax twin for the liveness assembly
+# (jax / pallas kernel over the event axis), installed by
+# ``repro.kernels.segmented_cummax.use_backend`` — None means the numpy
+# reference in ``liveness_peak_batch`` runs.
+_liveness_peak_impl = None
+
+
+def liveness_peak_batch(deltas: np.ndarray) -> np.ndarray:
+    """Per-cell interval-overlap peak of an event-delta stack.
+
+    ``deltas`` is ``(n_events, n_cells)`` int64 — each row the contraction
+    of one event's ±1 component coefficients (``core.liveness``) against
+    the component columns.  The peak is the max over running event-axis
+    prefix sums (a segmented cummax: cumsum along events, max-reduce),
+    exactly ``liveness.replay``'s ``max(prefixes)`` per cell."""
+    if _liveness_peak_impl is not None:
+        return np.asarray(_liveness_peak_impl(deltas), I64)
+    return np.cumsum(deltas, axis=0).max(axis=0)
+
+
+def _liveness_deltas(kind: str, comps: dict, m: int) -> np.ndarray:
+    """Event-delta stack for one pipeline stage: program delta matrix
+    (cell-independent) contracted against the stage's component columns
+    (missing / None components contribute 0, mirroring replay())."""
+    from repro.core import liveness as LV
+    prog = LV.compile_program(kind)
+    deltas = np.zeros((prog.n_events, m), I64)
+    for ei, row in enumerate(prog.delta_matrix()):
+        for ci, coef in enumerate(row):
+            if coef:
+                col = comps.get(LV.COMPONENTS[ci])
+                if col is not None:
+                    deltas[ei] += coef * np.asarray(col, I64)
+    return deltas
+
 
 # ---------------------------------------------------------------------------
 # vectorized shard resolution
@@ -289,6 +324,9 @@ class ColumnarResults:
     offs: tuple = (False,)
     off_c: Optional[np.ndarray] = None
     offload_bytes: Optional[np.ndarray] = None
+    # liveness assembly: winning stage's legacy - liveness overestimate
+    # (None on legacy-assembly runs — zero extra work there)
+    overlap_slack_bytes: Optional[np.ndarray] = None
 
     @property
     def n_chips(self) -> np.ndarray:
@@ -320,6 +358,8 @@ class ColumnarResults:
             else bool(self.offs[self.off_c[i]]),
             offload_bytes=0 if self.offload_bytes is None
             else int(self.offload_bytes[i]),
+            overlap_slack_bytes=0 if self.overlap_slack_bytes is None
+            else int(self.overlap_slack_bytes[i]),
             peak_bytes=int(self.peak_bytes[i]),
             budget_bytes=int(self.budget_bytes[i]),
             fits=bool(self.fits[i]), prediction=None)
@@ -459,6 +499,13 @@ class _StageTables:
     cache: np.ndarray               # (n_mesh, T)
     boundary: np.ndarray            # (n_mesh, T)
     embed: int
+    # out-copy split of the static group for the liveness assembly:
+    # static_sum folds param + out_copy + opt + grad together, but the
+    # liveness base component excludes the out_copy (it is live only in
+    # the optimizer-update window) — stored separately so base can be
+    # recovered as static_sum - outcopy byte-exactly
+    outcopy: np.ndarray             # (n_mesh,)
+    outcopy_scaled: Optional[np.ndarray]  # (n_mesh,) profile-scaled
     # serving-fleet tables (None unless the env is serve-expanded, so
     # non-serve grids pay zero extra gathers in the composition)
     pool: Optional[np.ndarray] = None         # (n_mesh, T) paged-KV pool
@@ -562,13 +609,15 @@ def _stage_tables(cfg, model, rows, rules, rep_ctx,
     else:
         opt_trans = np.zeros((n_mesh, len(opt_res), n_off), I64)
     static_scaled = None
+    outcopy_scaled = None
     if profile is not None:
         c_s = profile.coef("static")
         # np.rint is round-half-even, matching the scalar path's
         # ``int(round(v * c_s))`` per static term
         sc = lambda v: np.rint(np.asarray(v, np.float64)
                                * c_s).astype(I64)
-        static_scaled = (sc(param_arr) + sc(outcopy_arr)
+        outcopy_scaled = sc(outcopy_arr)
+        static_scaled = (sc(param_arr) + outcopy_scaled
                          )[:, None, None, None] \
             + sc(opt_eff)[:, :, :, None] \
             + sc(grad_arr.T)[:, None, None, :]
@@ -769,7 +818,8 @@ def _stage_tables(cfg, model, rows, rules, rep_ctx,
         saved=np.ascontiguousarray(
             np.broadcast_to(saved_stack, (len(remat_eval),) + shape2)),
         transient=full(transient), loss=loss, inputs=inputs, cache=cache,
-        boundary=boundary, embed=embed, pool=pool, pool_saved=pool_saved,
+        boundary=boundary, embed=embed, outcopy=outcopy_arr,
+        outcopy_scaled=outcopy_scaled, pool=pool, pool_saved=pool_saved,
         draft=draft, host_opt=host_opt)
 
 
@@ -809,6 +859,8 @@ def _stage_tables_jobs(cfg, model, rows, rules, rep_ctx, cols, env,
         cache=cat(lambda p: p.cache, 0),
         boundary=cat(lambda p: p.boundary, 0),
         embed=first.embed,
+        outcopy=cat(lambda p: p.outcopy, 0),
+        outcopy_scaled=opt_cat(lambda p: p.outcopy_scaled),
         pool=opt_cat(lambda p: p.pool),
         pool_saved=opt_cat(lambda p: p.pool_saved),
         draft=opt_cat(lambda p: p.draft),
@@ -845,7 +897,8 @@ def _draft_states(engine, cols) -> dict:
 def _finalize_results(grid, cols: CellColumns, t0: float,
                       peak, pool_arr, draft_arr, hit_arr, off_arr,
                       opt_names, remat_names,
-                      res_opt_c, res_remat_c) -> "SW.SweepResults":
+                      res_opt_c, res_remat_c,
+                      slack_arr=None) -> "SW.SweepResults":
     """Assemble the SweepResults store from the per-cell peak/provenance
     columns — shared by the numpy and jax engines so both produce
     structurally identical results."""
@@ -866,7 +919,8 @@ def _finalize_results(grid, cols: CellColumns, t0: float,
         peak_bytes=peak, budget_bytes=budget, fits=peak <= budget,
         serves=cols.serves, srv_c=cols.srv_c, pool_bytes=pool_arr,
         draft_bytes=draft_arr, hit_saved_bytes=hit_arr,
-        offs=cols.offs, off_c=cols.off_c, offload_bytes=off_arr)
+        offs=cols.offs, off_c=cols.off_c, offload_bytes=off_arr,
+        overlap_slack_bytes=slack_arr)
     return SW.SweepResults(grid=grid, columns=columns,
                            elapsed_s=time.perf_counter() - t0)
 
@@ -880,6 +934,8 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
     grid.check_parallel()
     grid.check_serve()
     grid.check_offload()
+    grid.check_assembly()
+    live_mode = grid.assembly == "liveness"
     cols = build_columns(grid)
     if cols.n == 0:
         return SW.SweepResults(grid=grid, results=[],
@@ -905,6 +961,7 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
     # serve kinds), so the serve and offload branches never both apply
     off_grp = cols.kind == "train" and any(cols.offs)
     off_arr = np.zeros(n, I64)
+    slack_arr = np.zeros(n, I64) if live_mode else None
     block = n // len(cols.arches)
     for ai, arch in enumerate(cols.arches):
         sl = slice(ai * block, (ai + 1) * block)
@@ -941,6 +998,7 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
         arch_draft = np.zeros(block, I64)
         arch_hit = np.zeros(block, I64)
         arch_off = np.zeros(block, I64)
+        arch_slack = np.zeros(block, I64)
         for pp in sorted(set(pp_of.tolist())):
             mesh_ids = np.flatnonzero(pp_of == pp)
             sel = np.isin(m_c, mesh_ids)
@@ -967,6 +1025,8 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
                 b_hit = np.zeros_like(best)
             if off_grp:
                 b_off = np.zeros_like(best)
+            if live_mode:
+                b_slack = np.zeros_like(best)
             for s, srows in enumerate(plan.stages):
                 tabs = _stage_tables_jobs(
                     cfg, model, list(srows), rules, rep_ctx, cols, env,
@@ -1017,23 +1077,77 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
                         psv = profile.scale_batch(psv, "overhead")
                         drf = profile.scale_batch(drf, "static")
                     speak = speak + pool + drf
-                    upd = speak > best
-                    best = np.where(upd, speak, best)
-                    b_pool = np.where(upd, pool, b_pool)
-                    b_draft = np.where(upd, drf, b_draft)
-                    b_hit = np.where(upd, psv, b_hit)
-                elif off_grp:
-                    # host-tier provenance follows the same
-                    # strictly-greater peak-stage rule: the reported
-                    # offload_bytes are the winning stage's host-resident
-                    # optimizer total (unscaled — host DRAM is outside
-                    # the HBM profile, mirroring CalibrationProfile.apply)
-                    hop = tabs.host_opt[lm, osel, fsel] \
-                        if tabs.host_opt is not None \
-                        else np.zeros_like(best)
-                    upd = speak > best
-                    best = np.where(upd, speak, best)
-                    b_off = np.where(upd, hop, b_off)
+                if live_mode:
+                    # liveness assembly: component columns -> event-delta
+                    # stack -> segmented cummax (twin of
+                    # predictor.liveness_values + liveness.replay)
+                    ecol = np.full_like(trans, tabs.embed)
+                    ot = tabs.opt_trans[lm, osel, fsel]
+                    if profile is None:
+                        comps = {
+                            "base": (tabs.static_sum[lm, osel, fsel, cls]
+                                     - tabs.outcopy[lm]),
+                            "inputs": inp, "cache": cache, "loss": loss,
+                            "saved": saved, "boundary": bnd,
+                            "transient": trans, "embed": ecol,
+                            "opt_transient": ot,
+                            "out_copy": tabs.outcopy[lm]}
+                    else:
+                        # telescoped act_transient deltas (cumulative
+                        # scaled prefixes in liveness.TRANSIENT_ORDER) so
+                        # their sum equals the legacy group byte-exactly
+                        sc_t = lambda v: profile.scale_batch(
+                            v, "act_transient")
+                        p1 = sc_t(ecol)
+                        p2 = sc_t(ecol + bnd)
+                        p3 = sc_t(ecol + bnd + trans)
+                        p4 = sc_t(ecol + bnd + trans + ot)
+                        comps = {
+                            "base": (tabs.static_scaled[lm, osel, fsel,
+                                                        cls]
+                                     - tabs.outcopy_scaled[lm]
+                                     + chip_off[sel]),
+                            "inputs": profile.scale_batch(inp, "overhead"),
+                            "cache": profile.scale_batch(cache,
+                                                         "overhead"),
+                            "loss": profile.scale_batch(loss, "overhead"),
+                            "saved": profile.scale_batch(saved,
+                                                         "act_saved"),
+                            "embed": p1, "boundary": p2 - p1,
+                            "transient": p3 - p2,
+                            "opt_transient": p4 - p3,
+                            "out_copy": tabs.outcopy_scaled[lm]}
+                    if serve_grp:
+                        comps["pool"] = pool
+                        comps["draft"] = drf
+                    lpeak = liveness_peak_batch(_liveness_deltas(
+                        cols.kind, comps, best.shape[0]))
+                    if not (lpeak <= speak).all():
+                        raise AssertionError(
+                            "liveness peak exceeded legacy peak")
+                    cur = lpeak
+                else:
+                    cur = speak
+                if serve_grp or off_grp or live_mode:
+                    upd = cur > best
+                    best = np.where(upd, cur, best)
+                    if live_mode:
+                        b_slack = np.where(upd, speak - lpeak, b_slack)
+                    if serve_grp:
+                        b_pool = np.where(upd, pool, b_pool)
+                        b_draft = np.where(upd, drf, b_draft)
+                        b_hit = np.where(upd, psv, b_hit)
+                    if off_grp:
+                        # host-tier provenance follows the same
+                        # strictly-greater peak-stage rule: the reported
+                        # offload_bytes are the winning stage's
+                        # host-resident optimizer total (unscaled — host
+                        # DRAM is outside the HBM profile, mirroring
+                        # CalibrationProfile.apply)
+                        hop = tabs.host_opt[lm, osel, fsel] \
+                            if tabs.host_opt is not None \
+                            else np.zeros_like(best)
+                        b_off = np.where(upd, hop, b_off)
                 else:
                     best = np.maximum(best, speak)
             arch_peak[sel] = best
@@ -1043,11 +1157,15 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
                 arch_hit[sel] = b_hit
             if off_grp:
                 arch_off[sel] = b_off
+            if live_mode:
+                arch_slack[sel] = b_slack
         peak[sl] = arch_peak
         pool_arr[sl] = arch_pool
         draft_arr[sl] = arch_draft
         hit_arr[sl] = arch_hit
         off_arr[sl] = arch_off
+        if live_mode:
+            slack_arr[sl] = arch_slack
         per_opt = np.array([_intern(opt_tbl, opt_names, o)
                             for o in opt_res], I64)
         res_opt_c[sl] = per_opt[o_c]
@@ -1056,4 +1174,4 @@ def sweep_columnar(engine, grid, jobs: int = 1) -> "SW.SweepResults":
         res_remat_c[sl] = per_remat[cols.remat_c[sl]]
     return _finalize_results(grid, cols, t0, peak, pool_arr, draft_arr,
                              hit_arr, off_arr, opt_names, remat_names,
-                             res_opt_c, res_remat_c)
+                             res_opt_c, res_remat_c, slack_arr)

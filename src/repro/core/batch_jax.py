@@ -68,13 +68,66 @@ def _compose_fn():
     import jax
     import jax.numpy as jnp
     from jax import lax
+    from repro.core import liveness as LV
 
     def compose(carry0, tabs, idx, has_profile: bool, serve: bool,
-                off: bool):
+                off: bool, assembly: str, kind: str):
         c_aff, c_b, c_ctr, c_ho, t2 = idx
 
         def step(carry, xs):
-            best, bp, bd, bh, bo = carry
+            best, bp, bd, bh, bo, bs = carry
+            if assembly == "liveness":
+                # gather the liveness component columns (the folded
+                # tables already hold profile-scaled telescoped deltas
+                # in calibrated mode — see _fold_stage), then unroll the
+                # cell-independent event program at trace time: a
+                # running sum over its delta rows whose max IS the
+                # segmented cummax of core.batch.liveness_peak_batch.
+                # The chip offset rides every prefix uniformly (base is
+                # persistent from event 0), so the driver adding it
+                # after the stage max stays exact.
+                ot = jnp.take(xs["ctr"], c_ctr, axis=1) if has_profile \
+                    else jnp.take(xs["otr"], c_ho, axis=1)
+                comps = {
+                    "base": jnp.take(xs["aff"], c_aff, axis=1),
+                    "inputs": jnp.take(xs["inp"], t2, axis=1),
+                    "cache": jnp.take(xs["cch"], t2, axis=1),
+                    "loss": jnp.take(xs["lss"], t2, axis=1),
+                    "saved": jnp.take(xs["b"], c_b, axis=1),
+                    "boundary": jnp.take(xs["bd"], t2, axis=1),
+                    "transient": jnp.take(xs["tr"], t2, axis=1),
+                    "embed": xs["emb"],
+                    "opt_transient": ot,
+                    "out_copy": xs["ocp"][:, None],
+                }
+                if serve:
+                    comps["pool"] = jnp.take(xs["pool"], t2, axis=1)
+                    comps["draft"] = jnp.take(xs["drf"], t2, axis=1)
+                # legacy peak = plain sum of every component (the event
+                # deltas partition it), needed for the slack provenance
+                speak = functools.reduce(jnp.add, comps.values())
+                run = None
+                peakl = None
+                for row in LV.compile_program(kind).delta_matrix():
+                    for ci, coef in enumerate(row):
+                        name = LV.COMPONENTS[ci]
+                        if coef and name in comps:
+                            term = coef * comps[name]
+                            run = term if run is None else run + term
+                    peakl = run if peakl is None \
+                        else jnp.maximum(peakl, run)
+                upd = peakl > best
+                best = jnp.where(upd, peakl, best)
+                bs = jnp.where(upd, speak - peakl, bs)
+                if serve:
+                    bp = jnp.where(upd, comps["pool"], bp)
+                    bd = jnp.where(upd, comps["draft"], bd)
+                    bh = jnp.where(upd,
+                                   jnp.take(xs["hit"], t2, axis=1), bh)
+                if off:
+                    bo = jnp.where(upd,
+                                   jnp.take(xs["ho"], c_ho, axis=1), bo)
+                return (best, bp, bd, bh, bo, bs), None
             speak = (jnp.take(xs["aff"], c_aff, axis=1)
                      + jnp.take(xs["b"], c_b, axis=1)
                      + jnp.take(xs["base"], t2, axis=1))
@@ -97,12 +150,12 @@ def _compose_fn():
                 bo = jnp.where(upd, hop, bo)
             else:
                 best = jnp.maximum(best, speak)
-            return (best, bp, bd, bh, bo), None
+            return (best, bp, bd, bh, bo, bs), None
 
         return lax.scan(step, carry0, tabs)[0]
 
     return jax.jit(compose, static_argnames=("has_profile", "serve",
-                                             "off"),
+                                             "off", "assembly", "kind"),
                    donate_argnums=(0,))
 
 
@@ -112,7 +165,7 @@ def _compose_fn():
 
 
 def _fold_stage(tabs: "B._StageTables", profile, env, pp: int,
-                stage: int) -> dict:
+                stage: int, liveness: bool = False) -> dict:
     """Fold one stage's component tables into compound gather tables.
 
     Returns 2-D ``(n_lm, K)`` arrays whose flattened trailing codes the
@@ -137,6 +190,61 @@ def _fold_stage(tabs: "B._StageTables", profile, env, pp: int,
     T = tabs.transient.shape[1]
     sv = tabs.saved[None, :, :, :] * stash[:, None, None, :]
     out: dict = {}
+    if liveness:
+        # liveness assembly: keep the event-program components separate
+        # instead of folding them into aff/base sums.  ``aff`` becomes
+        # the persistent base (static group MINUS the out-copy, which is
+        # live only in the optimizer-update window); in calibrated mode
+        # tr/bd/emb/ctr hold the TELESCOPED act_transient deltas
+        # (cumulative scaled prefixes in liveness.TRANSIENT_ORDER), so
+        # their sum telescopes back to the legacy rint group exactly.
+        if profile is None:
+            aff = tabs.static_sum - tabs.outcopy[:, None, None, None]
+            out["b"] = sv
+            out["ocp"] = tabs.outcopy
+            out["emb"] = np.asarray(tabs.embed, I64)
+            out["tr"], out["bd"] = tabs.transient, tabs.boundary
+            out["lss"], out["inp"] = tabs.loss, tabs.inputs
+            out["cch"] = tabs.cache
+            out["otr"] = np.ascontiguousarray(
+                tabs.opt_trans).reshape(n_lm, -1)
+        else:
+            aff = tabs.static_scaled \
+                - tabs.outcopy_scaled[:, None, None, None]
+            out["b"] = profile.scale_batch(sv, "act_saved")
+            out["ocp"] = tabs.outcopy_scaled
+            e = np.asarray(tabs.embed, I64)
+            p1 = profile.scale_batch(e, "act_transient")
+            p2 = profile.scale_batch(e + tabs.boundary, "act_transient")
+            p3 = profile.scale_batch(e + tabs.boundary + tabs.transient,
+                                     "act_transient")
+            ctr = profile.scale_batch(
+                (tabs.transient + tabs.boundary + e)[:, None, None, :]
+                + tabs.opt_trans[:, :, :, None], "act_transient")
+            out["emb"] = p1
+            out["bd"] = p2 - p1
+            out["tr"] = p3 - p2
+            out["ctr"] = np.ascontiguousarray(
+                ctr - p3[:, None, None, :]).reshape(n_lm, -1)
+            out["lss"] = profile.scale_batch(tabs.loss, "overhead")
+            out["inp"] = profile.scale_batch(tabs.inputs, "overhead")
+            out["cch"] = profile.scale_batch(tabs.cache, "overhead")
+        out["aff"] = np.ascontiguousarray(aff).reshape(n_lm, -1)
+        out["b"] = np.ascontiguousarray(
+            out["b"].transpose(2, 0, 1, 3)).reshape(n_lm, 2 * n_r * T)
+        if tabs.pool is not None:
+            pool, hit = tabs.pool, tabs.pool_saved
+            drf = tabs.draft if tabs.draft is not None \
+                else np.zeros_like(pool)
+            if profile is not None:
+                pool = profile.scale_batch(pool, "overhead")
+                hit = profile.scale_batch(hit, "overhead")
+                drf = profile.scale_batch(drf, "static")
+            out["pool"], out["hit"], out["drf"] = pool, hit, drf
+        if tabs.host_opt is not None:
+            out["ho"] = np.ascontiguousarray(
+                tabs.host_opt).reshape(n_lm, -1)
+        return out
     if profile is None:
         aff = tabs.static_sum + tabs.opt_trans[:, :, :, None]
         b = sv
@@ -186,7 +294,8 @@ def _group_tables(engine, grid, cols, cfg, model, rows, rules, rep_ctx,
     key = ("jax_tables", arch, grid.policy, cols.kind, cols.backend, pp,
            tuple(_mesh_key(cols.meshes[i]) for i in mesh_ids),
            opt_res, remat_eval, cols.offs, cols.serves, cols.pairs,
-           cols.seqs, cols.mbs, profile_hash_of(profile))
+           cols.seqs, cols.mbs, profile_hash_of(profile),
+           grid.assembly)
     cache = engine.__dict__.setdefault("_jax_table_cache", {})
     hit = cache.get(key)
     if hit is not None:
@@ -197,7 +306,8 @@ def _group_tables(engine, grid, cols, cfg, model, rows, rules, rep_ctx,
         tabs = B._stage_tables_jobs(
             cfg, model, list(srows), rules, rep_ctx, cols, env, profile,
             opt_res, remat_eval, mesh_ids, s, pp, jobs, drafts)
-        folded.append(_fold_stage(tabs, profile, env, pp, s))
+        folded.append(_fold_stage(tabs, profile, env, pp, s,
+                                  liveness=grid.assembly == "liveness"))
     stacked = {k: np.stack([f[k] for f in folded])
                for k in folded[0]}
     cache[key] = stacked
@@ -218,6 +328,8 @@ def sweep_columnar_jax(engine, grid, jobs: int = 1) -> "SW.SweepResults":
     grid.check_parallel()
     grid.check_serve()
     grid.check_offload()
+    grid.check_assembly()
+    live_mode = grid.assembly == "liveness"
     cols = B.build_columns(grid)
     if cols.n == 0:
         return SW.SweepResults(grid=grid, results=[],
@@ -256,6 +368,7 @@ def sweep_columnar_jax(engine, grid, jobs: int = 1) -> "SW.SweepResults":
     draft_arr = np.zeros(n, I64)
     hit_arr = np.zeros(n, I64)
     off_arr = np.zeros(n, I64)
+    slack_arr = np.zeros(n, I64) if live_mode else None
     opt_names: list = []
     remat_names: list = []
     opt_tbl: dict = {}
@@ -283,6 +396,7 @@ def sweep_columnar_jax(engine, grid, jobs: int = 1) -> "SW.SweepResults":
         peak_v = view(peak)
         pool_v, draft_v, hit_v, off_v = (view(pool_arr), view(draft_arr),
                                          view(hit_arr), view(off_arr))
+        slack_v = view(slack_arr) if live_mode else None
         for pp in sorted(set(pp_of.tolist())):
             mesh_ids = np.flatnonzero(pp_of == pp)
             env = B._knob_env(cfg, cols, pp)
@@ -300,15 +414,17 @@ def sweep_columnar_jax(engine, grid, jobs: int = 1) -> "SW.SweepResults":
             c_b = (gp_i * n_r + r_i) * T + t2
             c_ctr = (o_i * n_off + f_i) * T + t2 if profile is not None \
                 else np.zeros(0, I64)
-            c_ho = o_i * n_off + f_i if off_grp \
+            c_ho = o_i * n_off + f_i \
+                if off_grp or (live_mode and profile is None) \
                 else np.zeros(0, I64)
             carry0 = tuple(np.zeros((n_lm, inner), I64)
-                           for _ in range(5))
+                           for _ in range(6))
             with enable_x64():
-                best, bp, bd, bh, bo = compose(
+                best, bp, bd, bh, bo, bs = compose(
                     carry0, tabs, (c_aff, c_b, c_ctr, c_ho, t2),
                     has_profile=profile is not None,
-                    serve=bool(serve_grp), off=bool(off_grp))
+                    serve=bool(serve_grp), off=bool(off_grp),
+                    assembly=grid.assembly, kind=cols.kind)
                 best = np.asarray(best)
                 peak_v[:, mesh_ids, :] = best
                 if serve_grp:
@@ -317,6 +433,8 @@ def sweep_columnar_jax(engine, grid, jobs: int = 1) -> "SW.SweepResults":
                     hit_v[:, mesh_ids, :] = np.asarray(bh)
                 if off_grp:
                     off_v[:, mesh_ids, :] = np.asarray(bo)
+                if live_mode:
+                    slack_v[:, mesh_ids, :] = np.asarray(bs)
         if profile is not None:
             # per-chip calibration offset: stage-constant, so adding it
             # after the stage max (and outside the strictly-greater
@@ -332,4 +450,4 @@ def sweep_columnar_jax(engine, grid, jobs: int = 1) -> "SW.SweepResults":
         res_remat_c[sl] = per_remat[cols.remat_c[sl]]
     return B._finalize_results(grid, cols, t0, peak, pool_arr, draft_arr,
                                hit_arr, off_arr, opt_names, remat_names,
-                               res_opt_c, res_remat_c)
+                               res_opt_c, res_remat_c, slack_arr)

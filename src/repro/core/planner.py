@@ -253,7 +253,8 @@ def check(arch: str, shape_name, mesh_shape: dict,
           chip: str = "v5e", headroom: float = HEADROOM,
           profile=None, microbatches: int = 1,
           schedule: str = "1f1b", serve=None,
-          offload_opt: bool = False) -> PlanReport:
+          offload_opt: bool = False,
+          assembly: str = "legacy") -> PlanReport:
     """Reference single-cell evaluation: fresh build, no caches.
 
     ``shape_name`` may be a registered shape name ("train_4k") or a
@@ -262,6 +263,8 @@ def check(arch: str, shape_name, mesh_shape: dict,
     prediction with measurement-fitted per-term coefficients + the
     ``chip`` constant.  A mesh with a ``pipe`` axis is evaluated
     per-pipeline-stage (core.stages) and the worst stage reported.
+    ``assembly="liveness"`` checks against the interval-overlap peak
+    (core.liveness) instead of the Eq.1 sum-of-maxima.
     """
     from repro.configs import get_config
     from repro.models import build_model
@@ -276,7 +279,8 @@ def check(arch: str, shape_name, mesh_shape: dict,
                        optimizer=optimizer, microbatches=microbatches,
                        schedule=schedule, serve=serve,
                        offload_opt=offload_opt)
-    pred = PR.predict(model, policy, ctx, profile=profile, chip=chip)
+    pred = PR.predict(model, policy, ctx, profile=profile, chip=chip,
+                      assembly=assembly)
     budget = int((hbm_bytes if hbm_bytes is not None
                   else chip_hbm(chip)) * headroom)
     return PlanReport(arch=arch, shape=shape.name,
@@ -290,13 +294,14 @@ def plan(arch: str, shape_name, mesh_shape: dict,
          hbm_bytes: Optional[int] = None, policy: TrainPolicy = FULL_TRAIN,
          backend: str = "tpu", chip: str = "v5e",
          headroom: float = HEADROOM, engine=None,
-         profile=None) -> PlanReport:
+         profile=None, assembly: str = "legacy") -> PlanReport:
     """First-fit search over (remat, grad_accum); pure arithmetic.
 
     Delegates to the memoized sweep engine so the candidate evaluations
     share the parsed model and the batch-independent factor sums; pass
-    ``engine`` (a SweepEngine) to share those caches across calls and
-    ``profile`` to plan against calibrated predictions.
+    ``engine`` (a SweepEngine) to share those caches across calls,
+    ``profile`` to plan against calibrated predictions, and
+    ``assembly="liveness"`` to plan against the interval-overlap peak.
     """
     from repro.core import sweep as SW
     from repro.configs import get_config
@@ -307,7 +312,7 @@ def plan(arch: str, shape_name, mesh_shape: dict,
     engine = engine or SW.SweepEngine()
     base = engine.report(arch, shape, mesh_shape, policy=policy,
                          backend=backend, budget_bytes=budget,
-                         chip=chip, profile=profile)
+                         chip=chip, profile=profile, assembly=assembly)
     if base.fits or shape.kind != "train":
         return base
     cfg = get_config(arch)
@@ -318,7 +323,8 @@ def plan(arch: str, shape_name, mesh_shape: dict,
             r = engine.report(arch, shape, mesh_shape, policy=policy,
                               backend=backend, budget_bytes=budget,
                               grad_accum=accum, remat=remat,
-                              chip=chip, profile=profile)
+                              chip=chip, profile=profile,
+                              assembly=assembly)
             if r.fits:
                 r.note = f"planner: accum x{accum} fits the budget"
                 return r

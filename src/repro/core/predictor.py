@@ -18,6 +18,7 @@ from __future__ import annotations
 import functools
 import math
 from dataclasses import dataclass, field
+from typing import Optional
 
 from repro.configs import ArchConfig
 from repro.core import factors as F
@@ -55,6 +56,12 @@ class PredictedMemory:
     # informational: pool bytes the prefix-cache hit rate saved vs. the
     # same cell at hit-rate 0.  NOT part of peak_bytes.
     hit_saved_bytes: int = 0
+    # liveness assembly (core.liveness): how much the legacy sum-of-maxima
+    # OVERSTATES the true interval-overlap peak.  0 on the legacy path, so
+    # legacy predictions stay bit-identical; under assembly="liveness"
+    # peak_bytes is the component sum MINUS this slack, while the component
+    # fields keep reporting the legacy breakdown they always did.
+    overlap_slack_bytes: int = 0
     # Eq.1 offload tier: host-DRAM bytes of the offloaded optimizer
     # states (ctx.offload_opt).  Host memory, not HBM — NOT part of
     # peak_bytes, and a CalibrationProfile leaves it unscaled.
@@ -65,6 +72,11 @@ class PredictedMemory:
     stage: int = 0
     n_stages: int = 1
     per_module: dict = field(default_factory=dict)
+    # liveness assembly only: profile-term group -> bytes live at the
+    # peak event (liveness.Replay.group_at_peak); sums to peak_bytes.
+    # None on the legacy path — calibrate.residual uses it to build
+    # liveness design rows without re-walking the event program.
+    liveness_groups: Optional[dict] = None
 
     @property
     def peak_bytes(self) -> int:
@@ -72,7 +84,8 @@ class PredictedMemory:
                 + self.act_saved_bytes + self.act_transient_bytes
                 + self.loss_bytes + self.input_bytes + self.cache_bytes
                 + self.output_copy_bytes + self.calibration_bytes
-                + self.pool_bytes + self.draft_bytes)
+                + self.pool_bytes + self.draft_bytes
+                - self.overlap_slack_bytes)
 
     def summary(self) -> str:
         rows = [("params", self.param_bytes), ("grads", self.grad_bytes),
@@ -88,6 +101,8 @@ class PredictedMemory:
                      ("hit_saved", self.hit_saved_bytes)]
         if self.offload_bytes:
             rows += [("host_opt", self.offload_bytes)]
+        if self.overlap_slack_bytes:
+            rows += [("ovl_slack", -self.overlap_slack_bytes)]
         rows += [("PEAK", self.peak_bytes)]
         out = "\n".join(f"  {k:<10s} {v / GiB:9.3f} GiB" for k, v in rows)
         if self.n_stages > 1:
@@ -538,14 +553,58 @@ def compute_overheads(model, rows: list[ParsedLayer],
         hit_saved_bytes=hit_saved)
 
 
+def liveness_values(static: StaticTerms, acts: ActTermsAgg,
+                    over: OverheadTerms, ctx: F.PredictContext,
+                    pred: PredictedMemory = None, profile=None) -> dict:
+    """Component byte values for the liveness event program
+    (``core.liveness.COMPONENTS``).  With ``pred``+``profile`` given the
+    values are the CALIBRATED ones: per-field scales come straight off the
+    applied prediction and the act_transient group members are telescoped
+    (``liveness.telescoped_transient``) so they sum back to the legacy
+    group scale byte-exactly."""
+    from repro.core import liveness as LV
+    opt_trans = int(ctx.opt_transient_frac * static.opt_bytes)
+    raw_trans = {"embed": over.embed_gather_bytes,
+                 "boundary": over.boundary_bytes,
+                 "transient": acts.transient_bytes,
+                 "opt_transient": opt_trans}
+    if profile is None:
+        return {
+            "base": (static.param_bytes + static.grad_bytes
+                     + static.opt_bytes),
+            "inputs": over.input_bytes, "cache": over.cache_bytes,
+            "pool": over.pool_bytes, "draft": over.draft_bytes,
+            "saved": acts.saved_bytes, "loss": over.loss_bytes,
+            "out_copy": static.output_copy_bytes, **raw_trans,
+        }
+    c_t = profile.coef("act_transient")
+    return {
+        # chip constant: persistent allocator overhead -> rides the base
+        "base": (pred.param_bytes + pred.grad_bytes + pred.opt_bytes
+                 + pred.calibration_bytes),
+        "inputs": pred.input_bytes, "cache": pred.cache_bytes,
+        "pool": pred.pool_bytes, "draft": pred.draft_bytes,
+        "saved": pred.act_saved_bytes, "loss": pred.loss_bytes,
+        "out_copy": pred.output_copy_bytes,
+        **LV.telescoped_transient(raw_trans,
+                                  lambda v: int(round(v * c_t))),
+    }
+
+
 def assemble(static: StaticTerms, acts: ActTermsAgg, over: OverheadTerms,
              ctx: F.PredictContext, profile=None,
              chip: str = None, stage: int = 0,
-             n_stages: int = 1) -> PredictedMemory:
+             n_stages: int = 1, assembly: str = "legacy") -> PredictedMemory:
     """Compose the component groups into a prediction; when a
     CalibrationProfile (repro.calibrate.profile) is given, its per-term
     corrections + the ``chip`` constant are applied to the RAW composition
-    (duck-typed — the profile scales, this module never imports it)."""
+    (duck-typed — the profile scales, this module never imports it).
+
+    ``assembly`` selects the peak model: ``"legacy"`` (default) keeps the
+    Eq.1 sum-of-maxima bit-identical to every golden; ``"liveness"``
+    replays the interval-overlap event program (core.liveness) and records
+    the overestimate as ``overlap_slack_bytes``, so ``peak_bytes`` becomes
+    the true overlap peak while the component breakdown stays legacy."""
     out = PredictedMemory(
         param_bytes=static.param_bytes, grad_bytes=static.grad_bytes,
         opt_bytes=static.opt_bytes,
@@ -571,13 +630,29 @@ def assemble(static: StaticTerms, acts: ActTermsAgg, over: OverheadTerms,
         out.per_module[path]["act"] = a
     if profile is not None:
         out = profile.apply(out, chip)
+    if assembly == "liveness":
+        from repro.core import liveness as LV
+        vals = liveness_values(static, acts, over, ctx, pred=out,
+                               profile=profile)
+        rep = LV.replay(LV.compile_program(ctx.kind), vals)
+        slack = out.peak_bytes - rep.peak
+        # every event prefix is a sub-sum of the non-negative component
+        # values whose total IS the legacy peak -> slack can never go
+        # negative; this is the soundness invariant docs/search.md leans on
+        assert slack >= 0, (slack, vals)
+        out.overlap_slack_bytes = slack
+        out.liveness_groups = dict(rep.group_at_peak)
+    elif assembly != "legacy":
+        raise ValueError(f"unknown assembly {assembly!r}; "
+                         f"expected one of ('legacy', 'liveness')")
     return out
 
 
 def predict_stages(model, policy: TrainPolicy, ctx: F.PredictContext,
                    shape_kind: str = None,
                    rows: list[ParsedLayer] = None, profile=None,
-                   chip: str = None) -> list[PredictedMemory]:
+                   chip: str = None,
+                   assembly: str = "legacy") -> list[PredictedMemory]:
     """One prediction per pipeline stage (a single-element list when
     ``ctx.pp == 1`` — that element is bit-equal to the non-pipelined
     path, because it IS the non-pipelined path)."""
@@ -589,7 +664,7 @@ def predict_stages(model, policy: TrainPolicy, ctx: F.PredictContext,
         return [assemble(compute_static(rows, ctx),
                          compute_acts(rows, ctx, kind),
                          compute_overheads(model, rows, ctx, kind), ctx,
-                         profile=profile, chip=chip)]
+                         profile=profile, chip=chip, assembly=assembly)]
     plan = ST.partition(rows, ctx.pp)
     out = []
     for s, srows in enumerate(plan.stages):
@@ -601,18 +676,22 @@ def predict_stages(model, policy: TrainPolicy, ctx: F.PredictContext,
             compute_acts(srows, ctx, kind, stash=stash),
             compute_overheads(model, srows, ctx, kind, stage=s,
                               n_stages=ctx.pp),
-            ctx, profile=profile, chip=chip, stage=s, n_stages=ctx.pp))
+            ctx, profile=profile, chip=chip, stage=s, n_stages=ctx.pp,
+            assembly=assembly))
     return out
 
 
 def predict(model, policy: TrainPolicy, ctx: F.PredictContext,
             shape_kind: str = None,
             rows: list[ParsedLayer] = None, profile=None,
-            chip: str = None) -> PredictedMemory:
+            chip: str = None, assembly: str = "legacy") -> PredictedMemory:
     """Peak prediction: the worst stage under pipeline parallelism (the
-    whole model when ``ctx.pp == 1``); ties keep the earliest stage."""
+    whole model when ``ctx.pp == 1``); ties keep the earliest stage.
+    Under ``assembly="liveness"`` the comparison key is the liveness peak
+    (``peak_bytes`` already nets out ``overlap_slack_bytes``)."""
     preds = predict_stages(model, policy, ctx, shape_kind=shape_kind,
-                           rows=rows, profile=profile, chip=chip)
+                           rows=rows, profile=profile, chip=chip,
+                           assembly=assembly)
     best = preds[0]
     for p in preds[1:]:
         if p.peak_bytes > best.peak_bytes:

@@ -40,6 +40,21 @@ Pruning is disabled (searches degrade to exhaustive slicing, still
 early-exiting) when a CalibrationProfile is active — fitted
 coefficients and chip offsets void the raw-byte floor — so calibrated
 answers stay unconditionally exact too.
+
+Both bounds survive the liveness assembly (``grid.assembly ==
+"liveness"``) unchanged: its peak is the max running-sum prefix of the
+alloc/free event program, and the FIRST prefix already holds the
+stage's persistent base (params + grads + optimizer states), so
+``liveness peak >= per-stage statics`` and the ``floor // n`` bound
+still under-approximates every cell (out-copy bytes are excluded from
+the floor, so the base alone covers it).  For the ladder, every prefix
+is a sub-sum of gb-aligned-monotone terms and a max of monotone
+functions is monotone, so ``monotone_max`` stays exact.  The engines
+assert the ordering per cell (``liveness <= legacy``, the
+``overlap_slack_bytes >= 0`` invariant in ``predictor.assemble`` /
+``batch.sweep_columnar``) and tests/test_search.py re-runs the oracle
+searches under the liveness assembly (docs/search.md, "Adding a
+monotone knob safely").
 """
 
 from __future__ import annotations

@@ -144,6 +144,11 @@ class SweepGrid:
     # resident in HBM, True = host-offloaded with only the
     # factors.offload_staged_bytes streaming window on device.
     offload_optimizer: Sequence[bool] = (False,)
+    # peak assembly mode (core.liveness): "legacy" = Eq.1 sum-of-maxima
+    # (default, bit-identical to every golden); "liveness" = the
+    # interval-overlap peak from the alloc/free event program.  Not a
+    # grid axis — one mode per sweep, and it joins the engine memo keys.
+    assembly: str = "legacy"
 
     def offloads(self) -> tuple:
         """The offload axis, normalized to a bool tuple."""
@@ -258,6 +263,14 @@ class SweepGrid:
         for off in self.offloads():
             PL.check_offload(self.kind, off)
 
+    def check_assembly(self) -> None:
+        """Validate the assembly mode up front (the columnar path would
+        otherwise fall back to legacy composition silently)."""
+        from repro.core.liveness import ASSEMBLIES
+        if self.assembly not in ASSEMBLIES:
+            raise ValueError(f"unknown assembly {self.assembly!r}; "
+                             f"known: {ASSEMBLIES}")
+
     def cells(self) -> Iterator["SweepCell"]:
         """Deterministic cell enumeration (first-fit order: cheap knobs
         vary fastest)."""
@@ -265,6 +278,7 @@ class SweepGrid:
         self.check_parallel()
         self.check_serve()
         self.check_offload()
+        self.check_assembly()
         meshes = self.meshes()
         serves = self.serve_specs()
         offs = self.offloads()
@@ -364,6 +378,10 @@ class SweepResult:
     # (informational, outside the device peak)
     offload: bool = False
     offload_bytes: int = 0
+    # liveness assembly: how much the legacy sum-of-maxima overstated the
+    # winning stage's peak (0 on the legacy path; peak_bytes above is
+    # already net of it)
+    overlap_slack_bytes: int = 0
     prediction: Optional[PR.PredictedMemory] = None
 
     @property
@@ -416,6 +434,10 @@ _SERVE_COLUMNS = ("block", "blocks_per_seq", "hit", "pool_gib",
 # per-cell knob value + the host-DRAM optimizer residency in GiB.
 _OFFLOAD_COLUMNS = ("offload", "host_opt_gib")
 
+# liveness column appended when the grid's assembly is "liveness": the
+# legacy-minus-liveness overestimate of the winning stage, in GiB.
+_LIVENESS_COLUMNS = ("ovl_slack_gib",)
+
 
 def _row_of(r: SweepResult) -> tuple:
     return (r.arch, r.chip, r.mesh_str, r.optimizer, r.remat,
@@ -439,6 +461,10 @@ def _serve_row_of(r: SweepResult) -> tuple:
 def _offload_row_of(r: SweepResult) -> tuple:
     return ("yes" if r.offload else "no",
             f"{r.offload_bytes / GiB:.3f}")
+
+
+def _liveness_row_of(r: SweepResult) -> tuple:
+    return (f"{r.overlap_slack_bytes / GiB:.3f}",)
 
 
 class SweepResults:
@@ -616,6 +642,11 @@ class SweepResults:
         except (AttributeError, ValueError):
             return False
 
+    def _liveness_active(self) -> bool:
+        """True when the sweep ran under the liveness assembly — the
+        report then carries the overlap-slack column."""
+        return getattr(self.grid, "assembly", "legacy") == "liveness"
+
     def _report_columns(self):
         cols, extras = _COLUMNS, []
         if self._serve_active():
@@ -623,6 +654,9 @@ class SweepResults:
         if self._offload_active():
             cols, extras = (cols + _OFFLOAD_COLUMNS,
                             extras + [_offload_row_of])
+        if self._liveness_active():
+            cols, extras = (cols + _LIVENESS_COLUMNS,
+                            extras + [_liveness_row_of])
         if not extras:
             return _COLUMNS, _row_of
 
@@ -696,7 +730,8 @@ class SweepEngine:
 
     def predict_cell(self, arch: str, policy: TrainPolicy,
                      ctx, profile=None,
-                     chip: Optional[str] = None) -> PR.PredictedMemory:
+                     chip: Optional[str] = None,
+                     assembly: str = "legacy") -> PR.PredictedMemory:
         """Memoized twin of ``PR.predict(model, policy, ctx)``.
 
         The component caches are keyed WITHOUT the profile — the cached
@@ -705,15 +740,18 @@ class SweepEngine:
         them.  The profile (repro.calibrate CalibrationProfile) is
         applied at assemble time, and its hash keys the assembled-cell
         cache: a cell assembled under one profile can never be served
-        under another (or under the uncalibrated path).  Cached
-        predictions are shared objects — treat them as read-only, as all
-        callers do."""
+        under another (or under the uncalibrated path).  The assembly
+        mode likewise joins only the assembled-cell keys — the raw
+        component groups are shared between legacy and liveness, which
+        is exactly the single-source-of-truth property the liveness
+        event program relies on.  Cached predictions are shared objects
+        — treat them as read-only, as all callers do."""
         cfg, model, rows = self._arch_state(arch, policy)
         mkey = tuple(sorted(ctx.mesh_shape.items()))
         base = (arch, policy, ctx.kind, mkey, ctx.backend)
         if ctx.pp > 1:
             return self._predict_pipelined(model, base, ctx, arch, policy,
-                                           profile, chip)
+                                           profile, chip, assembly)
 
         skey = base + (ctx.optimizer, ctx.eff_grad_bytes, ctx.offload_opt)
         static = self._static.get(skey)
@@ -739,15 +777,16 @@ class SweepEngine:
         # profile can add a chip constant
         phash = None if profile is None else profile.profile_hash
         pkey = (skey, akey, okey, phash,
-                chip if phash is not None else None)
+                chip if phash is not None else None, assembly)
         pred = self._pred.get(pkey)
         if pred is None:
             pred = self._pred[pkey] = PR.assemble(
-                static, acts, over, ctx, profile=profile, chip=chip)
+                static, acts, over, ctx, profile=profile, chip=chip,
+                assembly=assembly)
         return pred
 
     def _predict_pipelined(self, model, base, ctx, arch, policy,
-                           profile, chip):
+                           profile, chip, assembly="legacy"):
         """Memoized per-stage twin of ``PR.predict`` for ``ctx.pp > 1``:
         each stage's component groups cache independently (the stage
         identity joins the exact fields each group reads), and the
@@ -759,7 +798,8 @@ class SweepEngine:
                 ctx.offload_opt,
                 ctx.remat, ctx.pp_micro_batch, ctx.global_batch,
                 ctx.seq_len, ctx.enc_seq, ctx.max_len, m, ctx.schedule,
-                ctx.serve, phash, chip if phash is not None else None)
+                ctx.serve, phash, chip if phash is not None else None,
+                assembly)
         pred = self._pred.get(pkey)
         if pred is not None:
             return pred
@@ -791,7 +831,8 @@ class SweepEngine:
                     model, list(srows), ctx, ctx.kind, stage=s,
                     n_stages=pp)
             sp = PR.assemble(static, acts, over, ctx, profile=profile,
-                             chip=chip, stage=s, n_stages=pp)
+                             chip=chip, stage=s, n_stages=pp,
+                             assembly=assembly)
             if best is None or sp.peak_bytes > best.peak_bytes:
                 best = sp
         self._pred[pkey] = best
@@ -801,7 +842,7 @@ class SweepEngine:
     def evaluate(self, cell: SweepCell, policy: TrainPolicy = FULL_TRAIN,
                  headroom: float = PL.HEADROOM,
                  keep_prediction: bool = False,
-                 profile=None) -> SweepResult:
+                 profile=None, assembly: str = "legacy") -> SweepResult:
         cfg, _, _ = self._arch_state(cell.arch, policy)
         ctx = PL.make_context(cfg, cell.mesh_shape, kind=cell.kind,
                               global_batch=cell.global_batch,
@@ -812,7 +853,7 @@ class SweepEngine:
                               schedule=cell.schedule, serve=cell.serve,
                               offload_opt=cell.offload)
         pred = self.predict_cell(cell.arch, policy, ctx, profile=profile,
-                                 chip=cell.chip)
+                                 chip=cell.chip, assembly=assembly)
         budget = int(PL.chip_hbm(cell.chip) * headroom)
         return SweepResult(
             arch=cell.arch, chip=cell.chip, mesh_shape=cell.mesh_shape,
@@ -826,6 +867,7 @@ class SweepEngine:
             draft_bytes=pred.draft_bytes,
             hit_saved_bytes=pred.hit_saved_bytes,
             offload=cell.offload, offload_bytes=pred.offload_bytes,
+            overlap_slack_bytes=pred.overlap_slack_bytes,
             peak_bytes=pred.peak_bytes, budget_bytes=budget,
             fits=pred.peak_bytes <= budget,
             prediction=pred if keep_prediction else None)
@@ -837,7 +879,8 @@ class SweepEngine:
                optimizer: Optional[str] = None, chip: str = "v5e",
                profile=None, microbatches: int = 1,
                schedule: str = "1f1b", serve=None,
-               offload_opt: bool = False) -> PL.PlanReport:
+               offload_opt: bool = False,
+               assembly: str = "legacy") -> PL.PlanReport:
         """PlanReport-shaped single-cell evaluation (planner.plan's
         memoized backend); byte-identical to ``planner.check``."""
         shape = PL._resolve_shape(shape)
@@ -851,7 +894,7 @@ class SweepEngine:
                               schedule=schedule, serve=serve,
                               offload_opt=offload_opt)
         pred = self.predict_cell(arch, policy, ctx, profile=profile,
-                                 chip=chip)
+                                 chip=chip, assembly=assembly)
         return PL.PlanReport(arch=arch, shape=shape.name,
                              fits=pred.peak_bytes <= budget_bytes,
                              peak_bytes=pred.peak_bytes,
@@ -906,7 +949,8 @@ class SweepEngine:
         t0 = time.perf_counter()
         results = [self.evaluate(cell, grid.policy, grid.headroom,
                                  grid.keep_predictions,
-                                 profile=grid.profile)
+                                 profile=grid.profile,
+                                 assembly=grid.assembly)
                    for cell in grid.cells()]
         return SweepResults(grid=grid, results=results,
                             elapsed_s=time.perf_counter() - t0)
@@ -947,27 +991,38 @@ def _str_list(s: Optional[str]) -> tuple:
 
 # order-of-magnitude planning rates for --dry-run's runtime estimate —
 # the FALLBACK when BENCH_sweep.json (benchmarks/sweep_throughput.py)
-# has no measured rate for the (mode, engine) pair on this machine
+# has no measured rate for the (mode, engine, assembly) triple on this
+# machine.  The liveness assembly pays the event-program contraction on
+# top of the legacy composition, hence the lower planning rates.
 EST_CELLS_PER_SEC = {"columnar": 1_000_000, "columnar_jax": 10_000_000,
-                     "cell": 15_000}
+                     "cell": 15_000,
+                     "columnar_liveness": 1_000_000,
+                     "columnar_jax_liveness": 5_000_000,
+                     "cell_liveness": 10_000}
 
 
-def _rate_key(mode: str, engine: str = "numpy") -> str:
-    """BENCH_sweep.json ``modes`` key for a (mode, engine) pair — the
-    numpy engine keeps the bare mode name so historical BENCH files
-    stay readable."""
-    if mode == "cell" or engine in (None, "numpy"):
-        return mode
-    return f"{mode}_{engine}"
+def _rate_key(mode: str, engine: str = "numpy",
+              assembly: str = "legacy") -> str:
+    """BENCH_sweep.json ``modes`` key for a (mode, engine, assembly)
+    triple — the numpy engine keeps the bare mode name and the legacy
+    assembly adds no suffix, so historical BENCH files stay readable."""
+    key = mode if (mode == "cell" or engine in (None, "numpy")) \
+        else f"{mode}_{engine}"
+    if assembly not in (None, "legacy"):
+        key = f"{key}_{assembly}"
+    return key
 
 
-def _planning_rate(mode: str, engine: str = "numpy") -> tuple[float, str]:
+def _planning_rate(mode: str, engine: str = "numpy",
+                   assembly: str = "legacy") -> tuple[float, str]:
     """(cells/sec, source) for --dry-run's runtime estimate: the last
-    measured per-engine throughput from BENCH_sweep.json when present,
-    else the order-of-magnitude planning rate."""
+    measured throughput for this exact (mode, engine, assembly) triple
+    from BENCH_sweep.json when present, else the order-of-magnitude
+    planning rate.  A measured rate for a DIFFERENT assembly never
+    substitutes — the liveness contraction has its own cost profile."""
     import json
     import os
-    key = _rate_key(mode, engine)
+    key = _rate_key(mode, engine, assembly)
     try:
         from repro.calibrate.paths import repo_root
         path = os.path.join(str(repo_root()), "BENCH_sweep.json")
@@ -1148,6 +1203,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                         "default) or jax (jitted contraction, "
                         "byte-identical; pays a one-off compile, then "
                         "~10x the numpy rate on large grids)")
+    p.add_argument("--assembly", choices=("legacy", "liveness"),
+                   default="legacy",
+                   help="peak assembly: legacy Eq.1 sum-of-maxima "
+                        "(default) or liveness interval-overlap peak "
+                        "from the alloc/free event program "
+                        "(docs/memory_model.md)")
     p.add_argument("--jobs", type=int, default=1,
                    help="worker threads for the columnar component stage "
                         "(mesh-chunked; identical results)")
@@ -1215,7 +1276,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         draft_archs=tuple(args.draft_arch.split(","))
         if args.draft_arch else ("",),
         offload_optimizer={"off": (False,), "on": (True,),
-                           "both": (False, True)}[args.offload_optimizer])
+                           "both": (False, True)}[args.offload_optimizer],
+        assembly=args.assembly)
     try:
         # reject ep-on-dense / ep > n_experts / cp-on-decode /
         # non-divisible cp — and serve knobs on train kinds / bad block
@@ -1235,12 +1297,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     if args.dry_run:
         n = grid.size()
-        rate, source = _planning_rate(args.mode, args.engine)
+        rate, source = _planning_rate(args.mode, args.engine,
+                                      args.assembly)
         est = n / rate
         print(f"dry run: {n:,} cells")
         print(_cardinality_table(grid))
         print(f"estimated runtime in --mode {args.mode} --engine "
-              f"{args.engine}: ~{est:.1f}s "
+              f"{args.engine} --assembly {args.assembly}: ~{est:.1f}s "
               f"({rate:,.0f} cells/s — {source})")
         if n == 0:
             print(_empty_grid_msg())
@@ -1254,7 +1317,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     n_fit = res.fit_count
     title = (f"capacity sweep: {arch} {args.kind} on {args.chip} "
              f"({args.backend} prediction)"
-             + (f" [profile {profile.profile_hash}]" if profile else ""))
+             + (f" [profile {profile.profile_hash}]" if profile else "")
+             + (" [liveness]" if args.assembly == "liveness" else ""))
     print(f"# {title}")
     print(f"{len(res)} cells in {res.elapsed_s:.3f}s "
           f"({res.cells_per_sec:,.0f} cells/s, mode={args.mode}, "

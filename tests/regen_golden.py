@@ -47,6 +47,11 @@ SERVE_KIND = "decode_paged"
 #: "train" leg above keeps freezing the no-offload path byte-for-byte
 OFFLOAD_KIND = "train_offload"
 
+#: liveness-assembly leg: train at the SAME canonical cell with the
+#: interval-overlap peak (``assembly="liveness"``); the plain "train"
+#: leg above keeps freezing the legacy sum-of-maxima path byte-for-byte
+LIVENESS_KIND = "train_liveness"
+
 #: PredictedMemory fields frozen per cell, in assertion order
 COMPONENTS = ("param_bytes", "grad_bytes", "opt_bytes", "act_saved_bytes",
               "act_transient_bytes", "loss_bytes", "input_bytes",
@@ -61,6 +66,10 @@ SERVE_COMPONENTS = COMPONENTS + ("pool_bytes", "hit_saved_bytes",
 #: the offload leg additionally freezes the host-DRAM residency (the
 #: displaced optimizer total, informational — outside the device peak)
 OFFLOAD_COMPONENTS = COMPONENTS + ("offload_bytes",)
+
+#: the liveness leg additionally freezes the overlap slack (the legacy
+#: sum-of-maxima minus the interval-overlap peak)
+LIVENESS_COMPONENTS = COMPONENTS + ("overlap_slack_bytes",)
 
 
 def canon_serve():
@@ -86,27 +95,32 @@ def snapshot(arch: str, engine=None) -> dict:
     """The golden payload for one arch: kind -> raw/calibrated ->
     components (+ the per-module table on the raw leg).  Kinds are the
     three step kinds plus ``decode_paged`` (decode under the fixed
-    :func:`canon_serve` serving-fleet knobs) and ``train_offload``
-    (train with host-offloaded optimizer states)."""
+    :func:`canon_serve` serving-fleet knobs), ``train_offload`` (train
+    with host-offloaded optimizer states) and ``train_liveness`` (train
+    under the interval-overlap liveness assembly)."""
     from repro.core import sweep as SW
     engine = engine or SW.SweepEngine()
     budget = int(PL.chip_hbm(CANON_CHIP) * PL.HEADROOM)
     out: dict = {}
-    for kind in KINDS + (SERVE_KIND, OFFLOAD_KIND):
+    for kind in KINDS + (SERVE_KIND, OFFLOAD_KIND, LIVENESS_KIND):
         serve = canon_serve() if kind == SERVE_KIND else None
         offload = kind == OFFLOAD_KIND
+        liveness = kind == LIVENESS_KIND
         comps = (SERVE_COMPONENTS if kind == SERVE_KIND
-                 else OFFLOAD_COMPONENTS if offload else COMPONENTS)
+                 else OFFLOAD_COMPONENTS if offload
+                 else LIVENESS_COMPONENTS if liveness else COMPONENTS)
         shape = ShapeConfig("golden", CANON_SEQ, CANON_BATCH,
                             "decode" if kind == SERVE_KIND
-                            else "train" if offload else kind)
+                            else "train" if offload or liveness else kind)
         per: dict = {}
         for variant, profile in (("raw", None),
                                  ("calibrated", GOLDEN_PROFILE)):
             rep = engine.report(arch, shape, dict(CANON_MESH),
                                 backend=CANON_BACKEND, budget_bytes=budget,
                                 chip=CANON_CHIP, profile=profile,
-                                serve=serve, offload_opt=offload)
+                                serve=serve, offload_opt=offload,
+                                assembly="liveness" if liveness
+                                else "legacy")
             comp = {c: int(getattr(rep.prediction, c)) for c in comps}
             if variant == "raw":
                 comp["per_module"] = {

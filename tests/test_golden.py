@@ -21,9 +21,9 @@ import os
 import pytest
 
 from repro.configs import registered_archs
-from tests.regen_golden import (GOLDEN_DIR, KINDS, OFFLOAD_KIND,
-                                SERVE_KIND, first_divergence, golden_path,
-                                snapshot)
+from tests.regen_golden import (GOLDEN_DIR, KINDS, LIVENESS_KIND,
+                                OFFLOAD_KIND, SERVE_KIND, first_divergence,
+                                golden_path, snapshot)
 
 REGEN_HINT = ("regenerate with `PYTHONPATH=src python -m "
               "tests.regen_golden` and commit the diff if this byte "
@@ -45,20 +45,36 @@ def test_golden_component_breakdown(arch, sweep_engine):
 
 def test_golden_covers_all_arches_and_kinds():
     """The committed snapshot set is complete: 12 arches x (3 kinds +
-    the paged-serve leg + the optimizer-offload leg) x raw+calibrated,
-    and no stale files for unregistered arches."""
+    the paged-serve, optimizer-offload and liveness-assembly legs) x
+    raw+calibrated, and no stale files for unregistered arches."""
     arches = registered_archs()
     files = {f[:-5] for f in os.listdir(GOLDEN_DIR) if f.endswith(".json")}
     assert files == set(arches), \
         f"golden dir out of sync: extra {files - set(arches)}, " \
         f"missing {set(arches) - files}; {REGEN_HINT}"
+    extra_kinds = {SERVE_KIND, OFFLOAD_KIND, LIVENESS_KIND}
     for arch in arches:
         with open(golden_path(arch)) as f:
             payload = json.load(f)
-        assert set(payload) == set(KINDS) | {SERVE_KIND, OFFLOAD_KIND}, \
-            arch
-        for kind in (*KINDS, SERVE_KIND, OFFLOAD_KIND):
+        assert set(payload) == set(KINDS) | extra_kinds, arch
+        for kind in (*KINDS, *extra_kinds):
             assert set(payload[kind]) == {"raw", "calibrated"}, (arch, kind)
+
+
+def test_golden_liveness_leg_bounded_by_legacy_train():
+    """The frozen liveness peak nets exactly the frozen overlap slack
+    off the frozen legacy train peak, raw and calibrated."""
+    for arch in registered_archs():
+        with open(golden_path(arch)) as f:
+            payload = json.load(f)
+        for variant in ("raw", "calibrated"):
+            legacy = payload["train"][variant]
+            live = payload[LIVENESS_KIND][variant]
+            assert live["overlap_slack_bytes"] >= 0, (arch, variant)
+            assert live["peak_bytes"] <= legacy["peak_bytes"], \
+                (arch, variant)
+            assert live["peak_bytes"] + live["overlap_slack_bytes"] == \
+                legacy["peak_bytes"], (arch, variant)
 
 
 def test_first_divergence_names_component():

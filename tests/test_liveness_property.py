@@ -1,0 +1,101 @@
+"""Property tests (hypothesis) for the liveness event-program assembly.
+
+Three invariant families the interval-overlap peak must satisfy for ANY
+component byte values and ANY real sweep grid:
+
+* bounds — the liveness peak is at least the largest single component
+  (everything live at some event dominates each member) and at most the
+  legacy sum-of-maxima peak (overlap can only discard slack, never add);
+* ledger conservation — every within-step alloc has a matching free:
+  persistent components net +1, every other component nets 0, no running
+  prefix ever goes negative, and the program ends holding exactly the
+  persistent set;
+* grid parity — on randomized SweepGrids the columnar liveness peak is
+  bounded by the columnar legacy peak cell-for-cell, and the reported
+  overlap slack never pushes the liveness peak above it.
+
+Same importorskip convention as tests/test_batch_property.py; CI runs
+under the shared "ci" settings profile registered in tests/conftest.py.
+"""
+
+import pytest
+
+np = pytest.importorskip("numpy")
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis; `pip install hypothesis` "
+           "to run them")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.configs import registered_archs  # noqa: E402
+from repro.core import liveness as LV  # noqa: E402
+from repro.core import sweep as SW  # noqa: E402
+
+_GIB = 1024 ** 3
+
+# component byte values spanning zero, byte-scale and multi-GiB scale
+_values = st.fixed_dictionaries(
+    {c: st.integers(0, 64 * _GIB) for c in LV.COMPONENTS})
+
+
+@settings(max_examples=200, deadline=None)
+@given(kind=st.sampled_from(["train", "decode"]), values=_values)
+def test_property_peak_bounds(kind, values):
+    """liveness peak in [max single component, legacy sum-of-maxima]."""
+    program = LV.compile_program(kind)
+    rep = LV.replay(program, values)
+    live = {c for ev in program.events for c, _ in ev.deltas}
+    assert rep.peak >= max(values[c] for c in live)
+    assert rep.peak <= sum(values[c] for c in live)
+    assert rep.peak == max(rep.prefixes)
+    # ties keep the earliest event
+    assert rep.prefixes.index(rep.peak) == rep.event_index
+    # the at-peak group decomposition reassembles the peak exactly
+    assert sum(rep.group_at_peak.values()) == rep.peak
+
+
+@settings(max_examples=200, deadline=None)
+@given(kind=st.sampled_from(["train", "decode"]), values=_values)
+def test_property_ledger_conservation(kind, values):
+    """Every alloc has a matching free; the step ends holding exactly
+    the persistent components and no prefix ever dips below them."""
+    program = LV.compile_program(kind)
+    net = program.net_deltas()
+    for comp, n in net.items():
+        assert n == (1 if comp in LV._PERSISTENT else 0), comp
+    rep = LV.replay(program, values)
+    persistent = sum(values[c] for c in LV._PERSISTENT)
+    assert rep.final == persistent
+    assert rep.prefixes[-1] == persistent
+    assert all(p >= 0 for p in rep.prefixes)
+    # delta_matrix is the same ledger in contraction form
+    cols = np.array(program.delta_matrix()).sum(axis=0)
+    for i, comp in enumerate(LV.COMPONENTS):
+        assert cols[i] == net[comp], comp
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    arch=st.sampled_from(registered_archs()),
+    kind=st.sampled_from(["train", "prefill", "decode"]),
+    chips=st.sampled_from([4, 8]),
+    batches=st.lists(st.sampled_from([4, 8, 16]), min_size=1, max_size=2,
+                     unique=True),
+    seq=st.sampled_from([256, 512, 1024]),
+    backend=st.sampled_from(["tpu", "cpu"]))
+def test_property_grid_liveness_le_legacy(arch, kind, chips, batches, seq,
+                                          backend):
+    mk = lambda asm: SW.SweepGrid(arch=arch, chips=chips, kind=kind,
+                                  global_batches=tuple(batches),
+                                  seq_lens=(seq,), backend=backend,
+                                  assembly=asm)
+    legacy = SW.SweepEngine().sweep(mk("legacy"))
+    live = SW.SweepEngine().sweep(mk("liveness"))
+    assert len(legacy) == len(live) > 0
+    for lg, lv in zip(legacy.results, live.results):
+        assert lv.peak_bytes <= lg.peak_bytes
+        assert lv.overlap_slack_bytes >= 0
+        # slack is taken against the liveness-winning stage's legacy
+        # peak, which is itself bounded by the overall legacy peak
+        assert lv.peak_bytes + lv.overlap_slack_bytes <= lg.peak_bytes
+        assert lg.overlap_slack_bytes == 0

@@ -291,3 +291,78 @@ def test_search_stats_merge():
     assert a.total_cells == 20
     assert a.reduction == 20 / 6
     assert SR.SearchStats().reduction == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# liveness assembly soundness
+# ---------------------------------------------------------------------------
+
+
+def test_liveness_peak_le_legacy_and_floor_sound(eng):
+    """The two invariants that let the branch-and-bound search run
+    unchanged under assembly="liveness": every liveness peak is bounded
+    above by the legacy peak (sub-sum argument) and below by the
+    statics floor (the first event prefix already holds the persistent
+    base)."""
+    import dataclasses
+
+    live = SW.SweepGrid(arch="llava15-7b", chips=(8, 16), chip="v5e",
+                        global_batches=(8, 16), seq_lens=(2048,),
+                        microbatches=(1, 2), kind="train",
+                        assembly="liveness")
+    legacy = dataclasses.replace(live, assembly="legacy")
+    r_live = eng.sweep(live)
+    r_leg = eng.sweep(legacy)
+    assert len(r_live) == len(r_leg) > 0
+    lp = r_live.columns.peak_bytes
+    gp = r_leg.columns.peak_bytes
+    assert (lp <= gp).all()
+    assert (lp < gp).any()          # the tighter peak actually bites
+    slack = r_live.columns.overlap_slack_bytes
+    assert (slack >= 0).all()
+    # winning stage's legacy total (live + slack) never exceeds the
+    # legacy grid peak (the legacy max is over the same stages)
+    assert (lp + slack <= gp).all()
+    floor = SR._floor_for(live)
+    assert floor > 0
+    assert int((lp < floor // r_live.columns.n_chips).sum()) == 0
+
+
+def test_min_chips_and_frontier_liveness_oracle(eng):
+    """Pruned searches vs inline exhaustive oracle, liveness assembly."""
+    import dataclasses
+
+    shape = ShapeConfig("q", 2048, 16, "train")
+    grid = PL._search_grid("llama3.2-3b", shape, (4, 8, 16), "v5e",
+                           FULL_TRAIN, "tpu", PL.HEADROOM, True, 8,
+                           False, 8, False, 8, (1, 4, 8),
+                           ("1f1b", "gpipe"), None)
+    grid = dataclasses.replace(grid, assembly="liveness")
+    got = SR.min_chips_search(grid, engine=eng, oracle=True)
+    assert got is not None and got.fits
+    assert SR.frontier_search(grid, engine=eng, oracle=True)
+
+
+def test_max_concurrency_liveness_ladder(eng):
+    """The aligned batch ladder stays exact under the liveness peak
+    (max of gb-aligned-monotone prefixes is monotone): galloping search
+    vs a full linear scan on a batch-sharded mesh."""
+    budget = int(PL.chip_hbm("v5e") * PL.HEADROOM)
+    mesh = {"data": 2, "model": 2}
+
+    def peak(gb):
+        return eng.report("llama3.2-3b", ShapeConfig("c", 2048, gb,
+                                                     "decode"),
+                          dict(mesh), budget_bytes=budget, chip="v5e",
+                          assembly="liveness").peak_bytes
+
+    cap = 256
+    brute = 0
+    for gb in range(1, cap + 1):
+        if peak(gb) <= budget:
+            brute = gb
+    st = SR.SearchStats()
+    got = SR.max_concurrency_search(peak, budget, cap, mesh_shape=mesh,
+                                    stats=st)
+    assert got == brute
+    assert st.probes < cap // 4

@@ -359,6 +359,27 @@ def test_breakdown_cli_requires_arch():
         cfg_main(["--breakdown"])
 
 
+def test_breakdown_cli_liveness_slack(capsys):
+    from repro.configs.__main__ import main as cfg_main
+    argv = ["--breakdown", "--arch", "smollm_360m",
+            "--mesh", "data=2,model=1,pipe=2", "--microbatches", "4"]
+    rc = cfg_main(argv + ["--assembly", "liveness"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "liveness assembly" in out
+    assert "overlap slack" in out and "ovl_slack" in out
+    rc = cfg_main(argv)
+    assert rc == 0
+    legacy = capsys.readouterr().out
+    assert "ovl_slack" not in legacy and "overlap slack" not in legacy
+
+
+def test_breakdown_cli_assembly_needs_breakdown():
+    from repro.configs.__main__ import main as cfg_main
+    with pytest.raises(SystemExit):
+        cfg_main(["--assembly", "liveness"])
+
+
 def test_sweep_cli_pp_knobs(capsys):
     rc = SW.main(["--arch", "smollm_360m", "--chips", "8",
                   "--mesh-axes", "data,model,pipe", "--max-pipe", "2",

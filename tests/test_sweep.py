@@ -417,3 +417,24 @@ def test_report_writers_render_serve_columns():
                                     seq_lens=(512,)))
     assert "pool_gib" not in neutral.to_markdown(limit=2)
     assert "pool_gib" not in neutral.to_csv().splitlines()[0]
+
+
+def test_report_writers_render_liveness_slack_column():
+    """Regression (ISSUE-9): liveness-assembly sweeps carry the
+    reporting-only overlap-slack column in BOTH writers; legacy sweeps
+    keep the old column set exactly."""
+    mk = lambda asm: SW.SweepGrid(arch="smollm-360m",
+                                  mesh_shapes=({"data": 2, "model": 2},),
+                                  global_batches=(8,), seq_lens=(512,),
+                                  assembly=asm)
+    live = SW.sweep(mk("liveness"))
+    md, csv = live.to_markdown(limit=2), live.to_csv()
+    assert "ovl_slack_gib" in md
+    assert "ovl_slack_gib" in csv.splitlines()[0]
+    assert len(csv.splitlines()) == len(live) + 1
+    slack = [r.overlap_slack_bytes for r in live]
+    assert all(s >= 0 for s in slack) and any(s > 0 for s in slack)
+    legacy = SW.sweep(mk("legacy"))
+    assert "ovl_slack_gib" not in legacy.to_markdown(limit=2)
+    assert "ovl_slack_gib" not in legacy.to_csv().splitlines()[0]
+    assert all(r.overlap_slack_bytes == 0 for r in legacy)
