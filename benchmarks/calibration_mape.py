@@ -9,12 +9,22 @@ deterministic synthetic measurement set — the same generator CI uses, so
 the bench trajectory tracks prediction ACCURACY (per-arch-family MAPE,
 calibrated vs raw), not just throughput.  Both assembly modes are
 benchmarked: the legacy sum-of-maxima peak and the liveness
-interval-overlap peak, each fit + evaluated end-to-end.  Exit code is
-non-zero unless (a) calibrated predictions achieve strictly lower MAPE
-than uncalibrated ones for EVERY arch family under BOTH assemblies (the
-ISSUE-2 acceptance gate) and (b) the raw liveness MAPE is strictly
-below the raw legacy MAPE (the ISSUE-9 acceptance gate: the overlap
-peak must cut the ~12.2% legacy baseline toward the paper's 8.7%).
+interval-overlap peak, each fit + evaluated end-to-end.  On top of the
+affine profile the learned per-family residual model
+(repro.calibrate.learned) is fitted and scored two ways: in-sample
+(full-store fit) and leave-one-family-out (one fold per arch family;
+the held-out family sees only the model's global fallback — the
+transfer setting a NEW architecture family lands in).
+
+Exit code is non-zero unless (a) calibrated predictions achieve
+strictly lower MAPE than uncalibrated ones for EVERY arch family under
+BOTH assemblies (the ISSUE-2 acceptance gate), (b) the raw liveness
+MAPE is strictly below the raw legacy MAPE (the ISSUE-9 acceptance
+gate: the overlap peak must cut the ~12.2% legacy baseline toward the
+paper's 8.7%), and (c) the leave-one-family-out holdout MAPE with the
+learned residual is strictly below the affine-only holdout MAPE (the
+ISSUE-10 acceptance gate: the learned correction must generalize, not
+memorize).
 """
 
 from __future__ import annotations
@@ -42,7 +52,8 @@ def run(verbose: bool = True, out_dir: str = None) -> dict:
 
     from common import write_bench
 
-    from repro.calibrate import MeasurementStore, evaluate, fit_profile
+    from repro.calibrate import (MeasurementStore, evaluate, fit_profile,
+                                 fit_residual, leave_one_family_out)
     from repro.core import sweep as SW
 
     engine = SW.SweepEngine()
@@ -65,16 +76,24 @@ def run(verbose: bool = True, out_dir: str = None) -> dict:
         fit_s = time.perf_counter() - t0
 
         t0 = time.perf_counter()
+        residual = fit_residual(store, profile=profile, engine=engine,
+                                assembly=assembly)
+        residual_fit_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
         by_family = evaluate(store, profile, by="family", engine=engine,
-                             assembly=assembly)
+                             assembly=assembly, residual=residual)
         by_arch = evaluate(store, profile, by="arch", engine=engine,
-                           assembly=assembly)
+                           assembly=assembly, residual=residual)
         eval_s = time.perf_counter() - t0
 
         payload["assemblies"][assembly] = {
             "profile": profile.to_dict(),
             "profile_hash": profile.profile_hash,
+            "residual_hash": residual.model_hash,
+            "residual_fit": residual.fit_info,
             "fit_seconds": round(fit_s, 4),
+            "residual_fit_seconds": round(residual_fit_s, 4),
             "eval_seconds": round(eval_s, 4),
             "by_family": by_family.to_json_dict(),
             "by_arch": by_arch.to_json_dict(),
@@ -97,6 +116,8 @@ def run(verbose: bool = True, out_dir: str = None) -> dict:
             print(f"{tag},mape_raw_pct,{by_family.mape_raw:.2f}")
             print(f"{tag},mape_calibrated_pct,"
                   f"{by_family.mape_calibrated:.2f}")
+            print(f"{tag},mape_learned_pct,"
+                  f"{by_family.mape_learned:.2f}")
             for row in by_family.rows:
                 print(f"{tag},{row.group}_raw_pct,{row.mape_raw:.2f}")
                 print(f"{tag},{row.group}_calibrated_pct,"
@@ -104,20 +125,72 @@ def run(verbose: bool = True, out_dir: str = None) -> dict:
             print(f"{tag},all_families_improved,"
                   f"{by_family.all_groups_improved}")
 
+    # leave-one-family-out holdout: per fold, fit profile + residual on
+    # the OTHER five families and score the held-out one — the held-out
+    # family only ever sees the residual model's global fallback, so
+    # this leg measures transfer, not memorization.
+    t0 = time.perf_counter()
+    folds = {}
+    aff_sum = lrn_sum = n_sum = 0.0
+    for fam, train, test in leave_one_family_out(store):
+        fold_profile = fit_profile(train, engine=engine)
+        fold_residual = fit_residual(train, profile=fold_profile,
+                                     engine=engine)
+        rep = evaluate(test, fold_profile, engine=engine,
+                       residual=fold_residual)
+        folds[fam] = {
+            "n": rep.n,
+            "mape_affine_pct": round(rep.mape_calibrated, 4),
+            "mape_learned_pct": round(rep.mape_learned, 4),
+        }
+        aff_sum += rep.mape_calibrated * rep.n
+        lrn_sum += rep.mape_learned * rep.n
+        n_sum += rep.n
+    holdout_affine = aff_sum / max(n_sum, 1)
+    holdout_learned = lrn_sum / max(n_sum, 1)
+    holdout_ok = holdout_learned < holdout_affine
+    payload["holdout"] = {
+        "folds": folds,
+        "mape_affine_pct": round(holdout_affine, 4),
+        "mape_learned_pct": round(holdout_learned, 4),
+        "seconds": round(time.perf_counter() - t0, 4),
+    }
+
     liveness_cuts_raw = (raw_by_assembly["liveness"]
                          < raw_by_assembly["legacy"])
     payload["all_families_improved"] = all_improved
     payload["liveness_raw_below_legacy_raw"] = liveness_cuts_raw
+    payload["holdout_learned_below_affine"] = holdout_ok
+    fold_rows = [(fam, f["n"], f"{f['mape_affine_pct']:.2f}",
+                  f"{f['mape_learned_pct']:.2f}")
+                 for fam, f in sorted(folds.items())]
+    fold_rows.append(("ALL", int(n_sum), f"{holdout_affine:.2f}",
+                      f"{holdout_learned:.2f}"))
+    from repro.core.report import markdown_table
+    md_parts.append(markdown_table(
+        ("held-out family", "cells", "affine MAPE %", "learned MAPE %"),
+        fold_rows,
+        title="leave-one-family-out holdout (learned residual "
+              "transfer)"))
     md_parts.append(
         f"raw MAPE: legacy {raw_by_assembly['legacy']:.2f}% -> "
         f"liveness {raw_by_assembly['liveness']:.2f}% "
-        f"({'improved' if liveness_cuts_raw else 'NOT improved'})\n")
+        f"({'improved' if liveness_cuts_raw else 'NOT improved'})\n\n"
+        f"holdout MAPE: affine {holdout_affine:.2f}% -> learned "
+        f"{holdout_learned:.2f}% "
+        f"({'improved' if holdout_ok else 'NOT improved'})\n")
     json_path, md_path = write_bench("calibration", payload,
                                      "\n\n".join(md_parts),
                                      out_dir=out_dir)
     if verbose:
         print(f"calibration_mape,liveness_raw_below_legacy_raw,"
               f"{liveness_cuts_raw}")
+        print(f"calibration_mape,holdout_affine_pct,"
+              f"{holdout_affine:.2f}")
+        print(f"calibration_mape,holdout_learned_pct,"
+              f"{holdout_learned:.2f}")
+        print(f"calibration_mape,holdout_learned_below_affine,"
+              f"{holdout_ok}")
         print(f"wrote {json_path}")
         print(f"wrote {md_path}")
     return payload
@@ -136,5 +209,6 @@ if __name__ == "__main__":
         sys.exit(0)
     result = run(out_dir=args.out)
     ok = (result["all_families_improved"]
-          and result["liveness_raw_below_legacy_raw"])
+          and result["liveness_raw_below_legacy_raw"]
+          and result["holdout_learned_below_affine"])
     sys.exit(0 if ok else 1)

@@ -44,26 +44,54 @@ class Autopilot:
     policy: object = FULL_TRAIN
     headroom: float = PL.HEADROOM
     profile: object = None
+    # learned ResidualModel applied on top of the profile (and replaced
+    # in place by a continual refit)
+    residual: object = None
     engine: SW.SweepEngine = field(default_factory=SW.SweepEngine)
     drift_tolerance: float = 1.05
     guard_frac: float = 0.95
     max_mitigations: int = 8
     allow_reshard: bool = True
+    # continual refit (repro.calibrate.learned): when enabled, every
+    # usable observation accumulates into ``store`` and a persistent
+    # DRIFT verdict spends a residual-model refit BEFORE a mitigation —
+    # prediction bias (fragmentation, model error) is absorbed into the
+    # model instead of burning a knob move on it.  A refit only fires
+    # once ``refit_min_samples`` new samples arrived since the last one,
+    # and at most ``max_refits`` times per run.
+    refit: bool = False
+    refit_min_samples: int = 8
+    max_refits: int = 2
+    store: object = None           # MeasurementStore (created if refit)
 
     watch: MemoryWatch = field(init=False)
     planner: MitigationPlanner = field(init=False)
     applied: list = field(default_factory=list)    # Mitigation log
     events: list = field(default_factory=list)     # (step, kind, detail)
+    refits: int = field(default=0, init=False)
+    _fitted_n: int = field(default=0, init=False)
 
     def __post_init__(self):
         self.planner = MitigationPlanner(
             engine=self.engine, policy=self.policy,
-            headroom=self.headroom, profile=self.profile)
+            headroom=self.headroom, profile=self.profile,
+            residual=self.residual)
         self.watch = MemoryWatch(
             predicted_bytes=self._predict(self.cell),
             budget_bytes=self.budget_bytes,
             drift_tolerance=self.drift_tolerance,
             guard_frac=self.guard_frac)
+        if self.refit:
+            if getattr(self.cell, "serve", None) is not None:
+                raise ValueError(
+                    "continual refit supports train cells only (a serve "
+                    "spec is not representable as a calibrate "
+                    "Measurement)")
+            if self.store is None:
+                from repro.calibrate.measurements import MeasurementStore
+                self.store = MeasurementStore()
+            self.watch.store = self.store
+            self.watch.measurement_of = self._measurement_of
 
     # -- predictions ---------------------------------------------------------
     @property
@@ -77,17 +105,42 @@ class Autopilot:
     def _predict(self, cell: SW.SweepCell) -> int:
         return self.engine.evaluate(cell, policy=self.policy,
                                     headroom=self.headroom,
-                                    profile=self.profile).peak_bytes
+                                    profile=self.profile,
+                                    residual=self.residual).peak_bytes
+
+    def _measurement_of(self, step: int, observed: int):
+        """One watch observation as a calibrate Measurement of the
+        CURRENT cell — the continual-refit sample the store accumulates.
+        """
+        from repro.calibrate.measurements import Measurement
+        c = self.cell
+        pname = next((k for k, v in SW.POLICIES.items()
+                      if v == self.policy), "full")
+        return Measurement(
+            arch=c.arch, kind=c.kind, seq_len=c.seq_len,
+            global_batch=c.global_batch, mesh_shape=c.mesh_shape,
+            measured_bytes=int(observed), backend=c.backend, chip=c.chip,
+            optimizer=c.optimizer, remat=c.remat,
+            grad_accum=c.grad_accum, policy=pname,
+            microbatches=c.microbatches, schedule=c.schedule,
+            offload_optimizer=c.offload,
+            source=f"autopilot:step{int(step)}")
 
     # -- the loop ------------------------------------------------------------
     def observe(self, step: int, observed) -> WatchSample:
-        """Ingest one telemetry sample; mitigate when the budget is
-        threatened.  ``observed`` is bytes, a dryrun record dict, or
-        None.  An ewma-only DRIFT (ratio past tolerance but projection
-        still clear of the guard band) is logged, not acted on — a
-        consistently-hot-but-fitting job should keep its knobs; knobs
-        move once the projection enters the guard band or crosses the
-        budget (CRITICAL)."""
+        """Ingest one telemetry sample; refit, then mitigate, when the
+        budget is threatened.  ``observed`` is bytes, a dryrun record
+        dict, or None.
+
+        Any DRIFT verdict (ewma-only or guard-band) first tries a
+        residual-model refit when the continual-refit gate passes —
+        persistent drift is prediction bias first, and a refit that
+        absorbs it both fixes the forecast and often clears the guard
+        band without spending a knob move.  The threat is re-projected
+        under the refreshed prediction; a mitigation fires only if the
+        projection STILL violates the guard band.  CRITICAL skips
+        straight to mitigation — there is no time to refit when the
+        next allocation spike is an OOM abort."""
         sample = self.watch.observe(step, observed)
         if sample.state in (WatchState.DRIFT, WatchState.CRITICAL):
             self.events.append((int(step), sample.state.value,
@@ -95,9 +148,42 @@ class Autopilot:
             threatened = (sample.state is WatchState.CRITICAL
                           or sample.projected_bytes
                           > self.guard_frac * self.budget_bytes)
+            if sample.state is WatchState.DRIFT \
+                    and self._maybe_refit(step):
+                projected = int(self.watch.ewma_ratio
+                                * self.watch.predicted_bytes)
+                threatened = (projected
+                              > self.guard_frac * self.budget_bytes)
             if threatened:
-                self.mitigate(step, sample.ewma_ratio)
+                self.mitigate(step, self.watch.ewma_ratio)
         return sample
+
+    def _maybe_refit(self, step: int) -> bool:
+        """Refit the residual model from the accumulated store when the
+        gate passes (refit enabled, refit budget left, enough NEW
+        samples since the last fit); True when a refit was applied."""
+        if not self.refit or self.store is None:
+            return False
+        if self.refits >= self.max_refits:
+            return False
+        if len(self.store) - self._fitted_n < self.refit_min_samples:
+            return False
+        from repro.calibrate.learned import fit_residual
+        try:
+            model = fit_residual(self.store, profile=self.profile,
+                                 engine=self.engine)
+        except ValueError:
+            return False
+        self._fitted_n = len(self.store)
+        self.refits += 1
+        self.residual = model
+        self.planner.residual = model
+        # the EWMA resets: the old ratio measured the bias the refit
+        # just absorbed into the model
+        self.watch.repredict(self._predict(self.cell), reset_ewma=True)
+        self.events.append((int(step), "refit",
+                            self.watch.predicted_bytes))
+        return True
 
     def mitigate(self, step: int,
                  ewma_ratio: Optional[float] = None) -> Optional[Mitigation]:
@@ -129,7 +215,8 @@ class Autopilot:
                        remat=c.remat, optimizer=c.optimizer, chip=c.chip,
                        headroom=self.headroom, profile=self.profile,
                        microbatches=c.microbatches, schedule=c.schedule,
-                       serve=c.serve, offload_opt=c.offload)
+                       serve=c.serve, offload_opt=c.offload,
+                       residual=self.residual)
         if ref.peak_bytes != m.predicted_bytes:
             raise MitigationError(
                 f"mitigation {m.action!r} failed validation: planner."

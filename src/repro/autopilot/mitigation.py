@@ -110,6 +110,10 @@ class MitigationPlanner:
     policy: object = FULL_TRAIN
     headroom: float = PL.HEADROOM
     profile: object = None
+    # learned ResidualModel applied on top of the profile; the guard
+    # updates this in place after a continual refit so candidate ranking
+    # and the _apply byte-equality validation see the same corrections
+    residual: object = None
     reshard_chips: tuple = (8, 16, 32, 64)
     # re-pricing path knobs: the reshard search prunes through
     # core.search by default ("exhaustive" restores brute-force
@@ -123,7 +127,8 @@ class MitigationPlanner:
     def _predict(self, cell: SW.SweepCell) -> int:
         res = self.engine.evaluate(cell, policy=self.policy,
                                    headroom=self.headroom,
-                                   profile=self.profile)
+                                   profile=self.profile,
+                                   residual=self.residual)
         return res.peak_bytes
 
     # -- candidate enumeration ----------------------------------------------

@@ -79,6 +79,36 @@ def observed_bytes(record) -> Optional[int]:
     return total if total > 0 else None
 
 
+def telemetry_defect(record) -> Optional[str]:
+    """Human-readable reason ``observed_bytes(record)`` returned None —
+    the defect matrix, named.  None when the record is usable.  Ingest
+    paths (calibrate.measurements.from_dryrun_record) use this to raise
+    errors that say WHICH defect poisoned the sample."""
+    if not isinstance(record, dict):
+        return f"record is {type(record).__name__}, not a dict"
+    mem = record.get("memory", record)
+    if not isinstance(mem, dict):
+        return "memory block is not a dict"
+    total = mem.get("total_bytes")
+    if total is None:
+        missing = [c for c in _COUNTERS if c not in mem]
+        if missing:
+            return (f"no total_bytes and allocator counters "
+                    f"{missing} missing")
+        try:
+            total = (int(mem["argument_bytes"]) + int(mem["temp_bytes"])
+                     + int(mem["output_bytes"]) - int(mem["alias_bytes"]))
+        except (TypeError, ValueError):
+            return "no total_bytes and non-numeric allocator counters"
+    try:
+        total = int(total)
+    except (TypeError, ValueError):
+        return f"non-numeric total_bytes {total!r}"
+    if total <= 0:
+        return f"non-positive total ({total} bytes)"
+    return None
+
+
 def load_dryrun(path: str) -> Optional[int]:
     """Observed bytes from a dryrun artifact file; None on any defect
     (missing file, truncated JSON, missing counters, zero peak)."""
@@ -130,6 +160,14 @@ class MemoryWatch:
     drift_tolerance: float = 1.05   # EWMA ratio past this => DRIFT
     guard_frac: float = 0.95        # projection past this * budget => DRIFT
     ewma_alpha: float = 0.25
+    # continual-refit hook (repro.calibrate.learned): every USABLE
+    # observation is also appended to ``store`` (a
+    # calibrate.measurements.MeasurementStore) as the Measurement built
+    # by ``measurement_of(step, observed_bytes)`` — the guard's refit
+    # trigger fits the learned residual model from exactly these
+    # samples.  Both default to None (no accumulation).
+    store: Optional[object] = None
+    measurement_of: Optional[object] = None
 
     ewma_ratio: float = 1.0
     samples: list = field(default_factory=list)
@@ -179,6 +217,8 @@ class MemoryWatch:
             a = self.ewma_alpha
             self.ewma_ratio = (1 - a) * self.ewma_ratio + a * ratio
             projected = self.project(obs)
+            if self.store is not None and self.measurement_of is not None:
+                self.store.add(self.measurement_of(int(step), int(obs)))
         else:
             obs = None
             projected = int(self.ewma_ratio * self.predicted_bytes)

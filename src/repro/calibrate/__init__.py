@@ -29,6 +29,15 @@ _EXPORTS = {
     "fit_profile": "repro.calibrate.fit",
     "fit_rows": "repro.calibrate.fit",
     "nnls": "repro.calibrate.fit",
+    "ridge": "repro.calibrate.fit",
+    "FEATURE_NAMES": "repro.calibrate.learned",
+    "ResidualModel": "repro.calibrate.learned",
+    "apply_residual": "repro.calibrate.learned",
+    "features_from": "repro.calibrate.learned",
+    "fit_residual": "repro.calibrate.learned",
+    "leave_one_family_out": "repro.calibrate.learned",
+    "residual_hash_of": "repro.calibrate.learned",
+    "parse_mesh_string": "repro.calibrate.measurements",
     "Measurement": "repro.calibrate.measurements",
     "MeasurementStore": "repro.calibrate.measurements",
     "dryrun_dir": "repro.calibrate.paths",

@@ -1,4 +1,4 @@
-"""Calibration CLI: fit | apply | report.
+"""Calibration CLI: fit | fit-residual | apply | report.
 
     # fit a profile from measurements (dry-run artifacts, a saved store,
     # or the deterministic synthetic set) and save it
@@ -6,6 +6,10 @@
     python -m repro.calibrate fit --dryrun-dir experiments/dryrun \
         --out profile.json
     python -m repro.calibrate fit --measurements store.json --out p.json
+
+    # fit the learned per-family residual model on top of that profile
+    python -m repro.calibrate fit-residual --synthetic \
+        --profile profile.json --out residual.json
 
     # calibrated vs raw prediction for one cell
     python -m repro.calibrate apply --profile profile.json \
@@ -72,18 +76,61 @@ def cmd_fit(args) -> int:
     return 0
 
 
+def cmd_fit_residual(args) -> int:
+    from repro.calibrate.learned import fit_residual
+    from repro.calibrate.profile import CalibrationProfile
+    profile = CalibrationProfile.load(args.profile) if args.profile \
+        else None
+    store = _load_store(args)
+    created = datetime.datetime.now(datetime.timezone.utc) \
+        .strftime("%Y-%m-%dT%H:%M:%SZ")
+    model = fit_residual(
+        store, profile=profile, lam=args.lam, created=created,
+        source={"cli": "fit-residual",
+                "input": ("synthetic" if args.synthetic
+                          else args.measurements or "dryrun")})
+    path = model.save(args.out)
+    print(model.summary())
+    info = model.fit_info
+    print(f"in-sample MAPE: affine {info['mape_affine_pct']:.2f}% -> "
+          f"learned {info['mape_learned_pct']:.2f}% "
+          f"({len(store)} measurements)")
+    print(f"wrote {path}")
+    return 0
+
+
+def _load_residual(args, profile):
+    """--residual-model loader shared by apply/report; validates the
+    base-profile binding before any prediction runs."""
+    if not getattr(args, "residual_model", None):
+        return None
+    from repro.calibrate.learned import ResidualModel
+    model = ResidualModel.load(args.residual_model)
+    phash = profile.profile_hash if profile is not None else None
+    if model.base_profile_hash != phash:
+        raise SystemExit(
+            f"--residual-model was fitted over profile "
+            f"{model.base_profile_hash or 'raw'}, not "
+            f"{phash or 'raw'}; pass the matching --profile")
+    return model
+
+
 def cmd_apply(args) -> int:
     from repro.calibrate.profile import CalibrationProfile
     from repro.core import planner
     from repro.core.sweep import _parse_mesh, normalize_arch
     profile = CalibrationProfile.load(args.profile)
+    residual = _load_residual(args, profile)
     arch = normalize_arch(args.arch)
     mesh = _parse_mesh(args.mesh)
     raw = planner.check(arch, args.shape, mesh, backend=args.backend,
                         chip=args.chip)
     cal = planner.check(arch, args.shape, mesh, backend=args.backend,
-                        chip=args.chip, profile=profile)
+                        chip=args.chip, profile=profile,
+                        residual=residual)
     print(profile.summary())
+    if residual is not None:
+        print(residual.summary())
     print(f"raw : {raw}")
     print(f"cal : {cal}")
     delta = cal.peak_bytes - raw.peak_bytes
@@ -96,8 +143,9 @@ def cmd_report(args) -> int:
     from repro.calibrate.profile import CalibrationProfile
     from repro.calibrate.report import evaluate
     profile = CalibrationProfile.load(args.profile)
+    residual = _load_residual(args, profile)
     store = _load_store(args)
-    rep = evaluate(store, profile, by=args.by)
+    rep = evaluate(store, profile, by=args.by, residual=residual)
     md = rep.to_markdown()
     print(md)
     if args.md:
@@ -123,9 +171,27 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                    help="profile JSON output path")
     f.set_defaults(fn=cmd_fit)
 
+    fr = sub.add_parser(
+        "fit-residual",
+        help="fit a learned per-family ResidualModel (ridge) on top of "
+             "a profile")
+    _add_source_args(fr)
+    fr.add_argument("--profile", default=None, metavar="PATH",
+                    help="CalibrationProfile the residual is fitted on "
+                         "top of (omit to fit the raw-prediction "
+                         "residual)")
+    fr.add_argument("--lam", type=float, default=1e-3,
+                    help="ridge regularization strength")
+    fr.add_argument("--out", required=True, metavar="PATH",
+                    help="residual model JSON output path")
+    fr.set_defaults(fn=cmd_fit_residual)
+
     a = sub.add_parser("apply",
                        help="calibrated vs raw prediction for one cell")
     a.add_argument("--profile", required=True)
+    a.add_argument("--residual-model", default=None, metavar="PATH",
+                   help="learned ResidualModel JSON applied on top of "
+                        "--profile")
     a.add_argument("--arch", required=True)
     a.add_argument("--shape", default="train_4k")
     a.add_argument("--mesh", default="data=16,model=16",
@@ -137,6 +203,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     r = sub.add_parser("report",
                        help="per-group MAPE table, calibrated vs raw")
     r.add_argument("--profile", required=True)
+    r.add_argument("--residual-model", default=None, metavar="PATH",
+                   help="learned ResidualModel JSON; adds a third "
+                        "(learned) MAPE series")
     _add_source_args(r)
     r.add_argument("--by", default="family", choices=("family", "arch"))
     r.add_argument("--md", metavar="PATH", help="write markdown report")

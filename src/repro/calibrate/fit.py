@@ -63,6 +63,22 @@ def _pg_nnls(A: np.ndarray, b: np.ndarray,
     return x, float(np.linalg.norm(A @ x - b))
 
 
+def ridge(A: np.ndarray, b: np.ndarray,
+          lam: float = 1e-3) -> np.ndarray:
+    """Closed-form ridge regression: argmin ||Ax - b||^2 + lam ||x||^2.
+
+    The solver behind the learned residual model
+    (repro.calibrate.learned): unlike the NNLS profile fit the residual
+    weights are signed (a learned correction may subtract bytes), and
+    the L2 penalty keeps small per-family sample sets from overfitting
+    their noise.  ``lam > 0`` also makes the normal equations
+    non-singular for constant/collinear feature columns."""
+    A = np.asarray(A, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    n = A.shape[1]
+    return np.linalg.solve(A.T @ A + float(lam) * np.eye(n), A.T @ b)
+
+
 def fit_rows(rows: list[TermRow], created: str = "",
              source: Optional[dict] = None) -> CalibrationProfile:
     """NNLS over pre-decomposed rows (see :func:`fit_profile`)."""

@@ -25,11 +25,32 @@ from repro.calibrate.paths import dryrun_dir
 SCHEMA_VERSION = 1
 STORE_KIND = "measurement_store"
 
-# dryrun artifacts name meshes by shape string; map them back to axes
-DRYRUN_MESHES = {
-    "16x16": {"data": 16, "model": 16},
-    "2x16x16": {"pod": 2, "data": 16, "model": 16},
-}
+# dryrun artifacts name meshes by shape string ("16x16", "2x16x16"); the
+# launch-mesh naming convention maps the factors back to named axes:
+# make_production_mesh builds (data, model) meshes and prefixes a "pod"
+# axis for multi-pod 3-d shapes (repro.launch.mesh).
+_MESH_AXES_BY_RANK = {2: ("data", "model"), 3: ("pod", "data", "model")}
+
+
+def parse_mesh_string(mesh: str) -> dict:
+    """``"AxB"``/``"AxBxC"`` -> named mesh-shape dict under the
+    launch-mesh axis convention.  Raises ValueError on anything else —
+    a mesh the convention cannot name must not be guessed at."""
+    parts = str(mesh).split("x")
+    axes = _MESH_AXES_BY_RANK.get(len(parts))
+    if axes is None:
+        raise ValueError(
+            f"mesh string {mesh!r} has {len(parts)} factor(s); the "
+            f"launch-mesh convention names only AxB (data x model) and "
+            f"AxBxC (pod x data x model) shapes — write the artifact "
+            f"with an explicit mesh_shape dict instead")
+    try:
+        sizes = [int(p) for p in parts]
+    except ValueError:
+        raise ValueError(f"mesh string {mesh!r} has non-integer factors")
+    if any(s <= 0 for s in sizes):
+        raise ValueError(f"mesh string {mesh!r} has non-positive factors")
+    return dict(zip(axes, sizes))
 
 
 @dataclass
@@ -49,16 +70,26 @@ class Measurement:
     remat: Optional[str] = None
     grad_accum: int = 1
     policy: str = "full"           # key into repro.core.sweep.POLICIES
+    # pipeline/offload knobs (schema-v1 stores lack them; the defaults
+    # reproduce the pre-knob decomposition: one microbatch, 1F1B, no
+    # offload).  A pipelined or offloaded cell measured without these
+    # fields would decompose against the WRONG cell — see _context_for.
+    microbatches: int = 1
+    schedule: str = "1f1b"
+    offload_optimizer: bool = False
     source: str = ""               # provenance: dryrun path / "synthetic"
     meta: dict = field(default_factory=dict)
 
     @property
     def key(self) -> tuple:
-        """Stable identity of the measured cell (not the measured value)."""
+        """Stable identity of the measured cell (not the measured value).
+        Includes every knob make_context reads — two cells differing only
+        in microbatches/schedule/offload must never collide."""
         return (self.arch, self.kind, self.seq_len, self.global_batch,
                 tuple(sorted(self.mesh_shape.items())), self.backend,
                 self.chip, self.optimizer, self.remat, self.grad_accum,
-                self.policy)
+                self.policy, self.microbatches, self.schedule,
+                self.offload_optimizer)
 
     def to_dict(self) -> dict:
         return asdict(self)
@@ -72,21 +103,35 @@ class Measurement:
                            source: str = "") -> "Measurement":
         """Ingest one launch/dryrun.py artifact.  The XLA compiled-memory
         total is the ground truth whose overflow aborts a job; the
-        prediction block in the artifact is ignored (we recompute it)."""
+        prediction block in the artifact is ignored (we recompute it).
+
+        The total goes through the same telemetry defect matrix the
+        autopilot watch applies (``autopilot.watch.observed_bytes``): a
+        missing ``total_bytes`` is rebuilt from the four allocator
+        counters, and an unusable record (missing counters, non-numeric
+        values, non-positive total) raises a ValueError naming the defect
+        — a zero/negative peak must never enter a fit as ground truth."""
+        from repro.autopilot.watch import observed_bytes, telemetry_defect
         from repro.configs import SHAPES
         mesh = record.get("mesh_shape")
         if mesh is None:
-            mesh = DRYRUN_MESHES.get(record.get("mesh", ""))
-        if mesh is None:
+            mesh = parse_mesh_string(record.get("mesh", ""))
+        measured = observed_bytes(record)
+        if measured is None:
             raise ValueError(
-                f"dryrun record has unknown mesh {record.get('mesh')!r}")
+                f"dryrun record {source or '<record>'} has unusable "
+                f"memory telemetry: {telemetry_defect(record)}")
         shape = SHAPES[record["shape"]]
         return cls(
             arch=record["arch"], kind=record.get("kind", shape.kind),
             seq_len=shape.seq_len, global_batch=shape.global_batch,
             mesh_shape=dict(mesh),
-            measured_bytes=int(record["memory"]["total_bytes"]),
+            measured_bytes=measured,
             backend="cpu",             # dryrun compiles on the cpu oracle
+            microbatches=int(record.get("microbatches", 1)),
+            schedule=str(record.get("schedule", "1f1b")),
+            offload_optimizer=bool(record.get("offload_optimizer",
+                                              False)),
             source=source or "dryrun",
             meta={"shape": record["shape"],
                   "compile_seconds": record.get("compile_seconds")})

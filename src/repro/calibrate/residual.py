@@ -42,24 +42,34 @@ class TermRow:
 
 
 def _context_for(m: Measurement, cfg):
+    """Rebuild the EXACT cell the measurement was taken on.  Every knob
+    the Measurement carries must reach make_context — dropping
+    microbatches/schedule/offload here would decompose a pipelined or
+    offloaded measurement against the wrong cell (m=1, no offload) and
+    poison every profile fitted from it."""
     from repro.core import planner as PL
     return PL.make_context(cfg, m.mesh_shape, kind=m.kind,
                            global_batch=m.global_batch, seq_len=m.seq_len,
                            backend=m.backend, grad_accum=m.grad_accum,
-                           remat=m.remat, optimizer=m.optimizer)
+                           remat=m.remat, optimizer=m.optimizer,
+                           microbatches=m.microbatches,
+                           schedule=m.schedule,
+                           offload_opt=m.offload_optimizer)
 
 
 def predict_measurement(m: Measurement, engine=None, profile=None,
-                        assembly: str = "legacy"):
+                        assembly: str = "legacy", residual=None):
     """The framework's prediction for a measured cell (optionally
-    calibrated), through the shared memoized engine."""
+    calibrated and residual-corrected), through the shared memoized
+    engine."""
     from repro.core import sweep as SW
     engine = engine or SW.SweepEngine()
     policy = SW.POLICIES[m.policy]
     cfg, _, _ = engine._arch_state(m.arch, policy)
     ctx = _context_for(m, cfg)
     return engine.predict_cell(m.arch, policy, ctx, profile=profile,
-                               chip=m.chip, assembly=assembly)
+                               chip=m.chip, assembly=assembly,
+                               residual=residual)
 
 
 def decompose(store: MeasurementStore, engine=None,

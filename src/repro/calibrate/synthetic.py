@@ -50,6 +50,24 @@ TRUE_PROFILE = CalibrationProfile(
     chip_constant_bytes={"v5e": int(0.14 * GiB), "h100": int(0.77 * GiB)},
     source={"note": "synthetic ground truth (repro.calibrate.synthetic)"})
 
+# Structure the affine profile CANNOT express — the signal the learned
+# residual model (repro.calibrate.learned) exists to recover:
+#
+# * FAMILY_ACT_SKEW — per-family multiplicative skew on the saved-
+#   activation term (mean ~1.0 so the global NNLS coefficient stays
+#   honest).  A single global ``act_saved`` coefficient averages over
+#   these; only a per-family corrector can close them.
+# * KNOB_EFFECTS — a family-INDEPENDENT additive reservation that grows
+#   with log2(seq_len/1024) GiB (think allocator metadata / collective
+#   buffers scaling with sequence).  No affine per-term coefficient or
+#   per-chip constant can express a seq-dependent constant, but the
+#   residual model's seq feature can — and because it is family-
+#   independent it TRANSFERS to a family held out of the fit, which is
+#   exactly what the leave-one-family-out benchmark gate scores.
+FAMILY_ACT_SKEW: dict = {"dense": 1.06, "moe": 0.95, "ssm": 1.03,
+                         "hybrid": 0.97, "vlm": 1.05, "encdec": 0.94}
+KNOB_EFFECTS: dict = {"seq_gib_per_log2": 0.25}
+
 DEFAULT_MESHES: tuple[dict, ...] = ({"data": 8, "model": 2},
                                     {"data": 4, "model": 4},
                                     {"data": 2, "model": 8})
@@ -74,7 +92,10 @@ def generate(archs: Sequence[str] = SYNTHETIC_ARCHS,
              backend: str = "tpu",
              noise: float = 0.01,
              true_profile: CalibrationProfile = TRUE_PROFILE,
-             engine=None, assembly: str = "liveness") -> MeasurementStore:
+             engine=None, assembly: str = "liveness",
+             family_skew: Optional[dict] = FAMILY_ACT_SKEW,
+             knob_effects: Optional[dict] = KNOB_EFFECTS
+             ) -> MeasurementStore:
     """Synthesize measured_bytes for the (arch x mesh x batch x seq x chip)
     grid under ``true_profile`` with +-``noise`` relative deterministic
     jitter.
@@ -86,8 +107,17 @@ def generate(archs: Sequence[str] = SYNTHETIC_ARCHS,
     oracle the raw legacy prediction carries a systematic overshoot (the
     overlap slack) on top of the skews — exactly the gap the liveness
     assembly closes.  Pass ``assembly="legacy"`` for the historical
-    sum-of-maxima oracle."""
+    sum-of-maxima oracle.
+
+    ``family_skew`` / ``knob_effects`` (defaults: the module constants)
+    layer non-affine structure on top of the profile — the learned
+    residual model's ground truth.  Pass ``None`` for either to get a
+    PURE affine oracle (the profile-recovery tests do: an exact NNLS
+    inversion is only defined against an exactly-affine truth)."""
+    import math
+
     from repro.core import sweep as SW
+    from repro.configs import get_config
     engine = engine or SW.SweepEngine()
     cells = MeasurementStore()
     for arch in archs:
@@ -103,10 +133,18 @@ def generate(archs: Sequence[str] = SYNTHETIC_ARCHS,
                             source="synthetic"))
     for row in decompose(cells, engine, assembly=assembly):
         m = row.measurement
-        true_bytes = sum(true_profile.coef(t) * row.terms[t] for t in TERMS)
+        skew = (family_skew or {}).get(get_config(m.arch).family, 1.0)
+        true_bytes = sum(true_profile.coef(t) * row.terms[t]
+                         * (skew if t == "act_saved" else 1.0)
+                         for t in TERMS)
         true_bytes += true_profile.chip_offset(m.chip)
+        if knob_effects:
+            true_bytes += (knob_effects.get("seq_gib_per_log2", 0.0)
+                           * math.log2(max(m.seq_len, 1) / 1024) * GiB)
         jitter = 1.0 + noise * _unit_noise("|".join(map(str, m.key)))
         m.measured_bytes = int(round(true_bytes * jitter))
         m.meta = {"noise": noise,
-                  "true_profile": true_profile.profile_hash}
+                  "true_profile": true_profile.profile_hash,
+                  "family_skew": bool(family_skew),
+                  "knob_effects": bool(knob_effects)}
     return cells

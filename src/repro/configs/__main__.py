@@ -55,9 +55,11 @@ def _params(cfg) -> str:
 
 
 def table(profile=None, chip: str = "v5e",
-          mesh: Optional[dict] = None, shape: str = "train_4k") -> str:
+          mesh: Optional[dict] = None, shape: str = "train_4k",
+          residual=None) -> str:
     """The arch table; with a CalibrationProfile, adds raw + calibrated
-    predicted-peak columns for the reference (shape, mesh, chip) cell."""
+    predicted-peak columns for the reference (shape, mesh, chip) cell
+    (plus a learned column when a ResidualModel is given)."""
     from repro.core.report import markdown_table
     headers = ["arch", "family", "params", "modality", "attention",
                "optimizer", "remat", "fsdp"]
@@ -67,6 +69,8 @@ def table(profile=None, chip: str = "v5e",
         engine = SW.SweepEngine()
         mesh = mesh or {"data": 16, "model": 16}
         headers += [f"peak GiB ({shape})", "calibrated GiB"]
+        if residual is not None:
+            headers += ["learned GiB"]
     rows = []
     for name in registered_archs():
         cfg = get_config(name)
@@ -82,6 +86,11 @@ def table(profile=None, chip: str = "v5e",
                                 chip=chip, profile=profile)
             row += [f"{raw.peak_bytes / GiB:.2f}",
                     f"{cal.peak_bytes / GiB:.2f}"]
+            if residual is not None:
+                lrn = engine.report(name, shape, mesh,
+                                    budget_bytes=budget, chip=chip,
+                                    profile=profile, residual=residual)
+                row += [f"{lrn.peak_bytes / GiB:.2f}"]
         rows.append(tuple(row))
     return markdown_table(headers, rows)
 
@@ -238,6 +247,10 @@ def main(argv=None) -> int:
     ap.add_argument("--profile", metavar="PATH", default=None,
                     help="CalibrationProfile JSON: adds raw + calibrated "
                          "predicted-peak columns")
+    ap.add_argument("--residual-model", metavar="PATH", default=None,
+                    help="learned ResidualModel JSON (needs --profile it "
+                         "was fitted over): adds a learned predicted-"
+                         "peak column")
     ap.add_argument("--breakdown", action="store_true",
                     help="print one arch's per-module / per-stage memory "
                          "table for the reference cell (needs --arch)")
@@ -325,6 +338,9 @@ def main(argv=None) -> int:
             ap.error(str(e))
         return 0
     if args.profile is None:
+        if args.residual_model:
+            ap.error("--residual-model needs the --profile it was "
+                     "fitted over")
         given = [f for f in ("chip", "mesh", "shape")
                  if getattr(args, f) is not None]
         if given:
@@ -339,8 +355,18 @@ def main(argv=None) -> int:
     chip = args.chip or "v5e"
     shape = args.shape or "train_4k"
     mesh_str = args.mesh or "data=16,model=16"
+    residual = None
     try:
         profile = CalibrationProfile.load(args.profile)
+        if args.residual_model:
+            from repro.calibrate.learned import ResidualModel
+            residual = ResidualModel.load(args.residual_model)
+            if residual.base_profile_hash != profile.profile_hash:
+                raise ValueError(
+                    f"--residual-model was fitted over profile "
+                    f"{residual.base_profile_hash or 'raw'}, not "
+                    f"{profile.profile_hash}; pass the matching "
+                    f"--profile")
         mesh = _parse_mesh(mesh_str)
         PL.chip_hbm(chip)
         if shape not in SHAPES:
@@ -348,9 +374,11 @@ def main(argv=None) -> int:
                              f"known: {sorted(SHAPES)}")
     except (OSError, KeyError, ValueError) as e:
         ap.error(str(e))
-    print(f"_profile {profile.profile_hash}: reference cell "
-          f"{shape} on {mesh_str} ({chip})_\n")
-    print(table(profile=profile, chip=chip, mesh=mesh, shape=shape))
+    print(f"_profile {profile.profile_hash}"
+          + (f" + residual {residual.model_hash}" if residual else "")
+          + f": reference cell {shape} on {mesh_str} ({chip})_\n")
+    print(table(profile=profile, chip=chip, mesh=mesh, shape=shape,
+                residual=residual))
     return 0
 
 

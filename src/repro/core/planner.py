@@ -254,15 +254,17 @@ def check(arch: str, shape_name, mesh_shape: dict,
           profile=None, microbatches: int = 1,
           schedule: str = "1f1b", serve=None,
           offload_opt: bool = False,
-          assembly: str = "legacy") -> PlanReport:
+          assembly: str = "legacy", residual=None) -> PlanReport:
     """Reference single-cell evaluation: fresh build, no caches.
 
     ``shape_name`` may be a registered shape name ("train_4k") or a
     ShapeConfig; ``hbm_bytes`` overrides the ``chip`` lookup when given;
     ``profile`` (a repro.calibrate CalibrationProfile) corrects the
     prediction with measurement-fitted per-term coefficients + the
-    ``chip`` constant.  A mesh with a ``pipe`` axis is evaluated
-    per-pipeline-stage (core.stages) and the worst stage reported.
+    ``chip`` constant, and ``residual`` (a repro.calibrate.learned
+    ResidualModel) adds the learned per-family correction on top.  A
+    mesh with a ``pipe`` axis is evaluated per-pipeline-stage
+    (core.stages) and the worst stage reported.
     ``assembly="liveness"`` checks against the interval-overlap peak
     (core.liveness) instead of the Eq.1 sum-of-maxima.
     """
@@ -281,6 +283,10 @@ def check(arch: str, shape_name, mesh_shape: dict,
                        offload_opt=offload_opt)
     pred = PR.predict(model, policy, ctx, profile=profile, chip=chip,
                       assembly=assembly)
+    if residual is not None:
+        from repro.calibrate.learned import apply_residual
+        pred = apply_residual(pred, residual, cfg.family, ctx,
+                              profile=profile)
     budget = int((hbm_bytes if hbm_bytes is not None
                   else chip_hbm(chip)) * headroom)
     return PlanReport(arch=arch, shape=shape.name,
@@ -294,13 +300,15 @@ def plan(arch: str, shape_name, mesh_shape: dict,
          hbm_bytes: Optional[int] = None, policy: TrainPolicy = FULL_TRAIN,
          backend: str = "tpu", chip: str = "v5e",
          headroom: float = HEADROOM, engine=None,
-         profile=None, assembly: str = "legacy") -> PlanReport:
+         profile=None, assembly: str = "legacy",
+         residual=None) -> PlanReport:
     """First-fit search over (remat, grad_accum); pure arithmetic.
 
     Delegates to the memoized sweep engine so the candidate evaluations
     share the parsed model and the batch-independent factor sums; pass
     ``engine`` (a SweepEngine) to share those caches across calls,
-    ``profile`` to plan against calibrated predictions, and
+    ``profile`` to plan against calibrated predictions (plus
+    ``residual`` for the learned per-family correction), and
     ``assembly="liveness"`` to plan against the interval-overlap peak.
     """
     from repro.core import sweep as SW
@@ -312,7 +320,8 @@ def plan(arch: str, shape_name, mesh_shape: dict,
     engine = engine or SW.SweepEngine()
     base = engine.report(arch, shape, mesh_shape, policy=policy,
                          backend=backend, budget_bytes=budget,
-                         chip=chip, profile=profile, assembly=assembly)
+                         chip=chip, profile=profile, assembly=assembly,
+                         residual=residual)
     if base.fits or shape.kind != "train":
         return base
     cfg = get_config(arch)
@@ -324,7 +333,7 @@ def plan(arch: str, shape_name, mesh_shape: dict,
                               backend=backend, budget_bytes=budget,
                               grad_accum=accum, remat=remat,
                               chip=chip, profile=profile,
-                              assembly=assembly)
+                              assembly=assembly, residual=residual)
             if r.fits:
                 r.note = f"planner: accum x{accum} fits the budget"
                 return r

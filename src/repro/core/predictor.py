@@ -46,6 +46,10 @@ class PredictedMemory:
     # per-chip constant overhead added by an applied CalibrationProfile
     # (repro.calibrate); 0 on the uncalibrated path.
     calibration_bytes: int = 0
+    # learned per-family correction added by an applied ResidualModel
+    # (repro.calibrate.learned), the structure left over AFTER the affine
+    # profile; 0 (bit-inert) when no model is active.  May be negative.
+    residual_bytes: int = 0
     # serving-fleet terms (0 unless ctx.serve is active): the paged
     # KV-pool allocation (replaces the slen-bearing cache terms, which
     # then report only their fixed non-paged remainder in cache_bytes)
@@ -84,6 +88,7 @@ class PredictedMemory:
                 + self.act_saved_bytes + self.act_transient_bytes
                 + self.loss_bytes + self.input_bytes + self.cache_bytes
                 + self.output_copy_bytes + self.calibration_bytes
+                + self.residual_bytes
                 + self.pool_bytes + self.draft_bytes
                 - self.overlap_slack_bytes)
 
@@ -95,6 +100,8 @@ class PredictedMemory:
                 ("cache", self.cache_bytes),
                 ("out_copy", self.output_copy_bytes),
                 ("calib", self.calibration_bytes)]
+        if self.residual_bytes:
+            rows += [("learned", self.residual_bytes)]
         if self.pool_bytes or self.draft_bytes or self.hit_saved_bytes:
             rows += [("kv_pool", self.pool_bytes),
                      ("draft", self.draft_bytes),

@@ -17,24 +17,44 @@ class PredictionRecord:
 
     @property
     def ape(self) -> float:
-        """Absolute percentage error."""
-        if self.actual_bytes == 0:
-            return 0.0
+        """Absolute percentage error.  A record with no usable ground
+        truth (``actual_bytes <= 0``) has no defined error — it returns
+        NaN, never the 0.0 that once let a defective zero-measured record
+        read as a PERFECT prediction and deflate every MAPE built on it.
+        """
+        if self.actual_bytes <= 0:
+            return float("nan")
         return abs(self.predicted_bytes - self.actual_bytes) \
             / self.actual_bytes * 100.0
 
 
+def split_valid(records: list[PredictionRecord]
+                ) -> tuple[list[PredictionRecord], int]:
+    """(records with usable ground truth, count excluded).  Zero/negative
+    actuals are measurement defects: they are EXCLUDED from aggregate
+    error arithmetic and reported as a count, never averaged in."""
+    valid = [r for r in records if r.actual_bytes > 0]
+    return valid, len(records) - len(valid)
+
+
 def mape(records: list[PredictionRecord]) -> float:
-    if not records:
+    valid, _ = split_valid(records)
+    if not valid:
         return 0.0
-    return float(np.mean([r.ape for r in records]))
+    return float(np.mean([r.ape for r in valid]))
 
 
 def grouped_mape(groups: dict[str, list[PredictionRecord]]
                  ) -> list[tuple[str, int, float]]:
-    """(group, n, MAPE%) rows, sorted by group — the per-arch/per-family
-    accuracy table the calibration reporter emits (paper section 4)."""
-    return [(k, len(v), mape(v)) for k, v in sorted(groups.items())]
+    """(group, n_valid, MAPE%) rows, sorted by group — the per-arch/
+    per-family accuracy table the calibration reporter emits (paper
+    section 4).  ``n_valid`` counts only records with usable ground
+    truth (see :func:`split_valid`)."""
+    out = []
+    for k, v in sorted(groups.items()):
+        valid, _ = split_valid(v)
+        out.append((k, len(valid), mape(valid)))
+    return out
 
 
 def table(records: list[PredictionRecord], title: str = "") -> str:

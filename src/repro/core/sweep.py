@@ -128,6 +128,10 @@ class SweepGrid:
     # measurement-fitted CalibrationProfile (repro.calibrate) applied to
     # every cell; its hash participates in the engine's memo keys
     profile: object = None
+    # learned per-family ResidualModel (repro.calibrate.learned) applied
+    # on top of the profile; its model_hash joins the memo keys the same
+    # way.  None keeps every cell bit-identical to the profile-only path.
+    residual_model: object = None
     # serving-fleet knobs (serve kinds only; the all-neutral combo is
     # normalized to serve=None so it stays bit-identical to a pre-serve
     # cell): paged-KV block sizes (0 = contiguous), pool utilizations,
@@ -731,7 +735,8 @@ class SweepEngine:
     def predict_cell(self, arch: str, policy: TrainPolicy,
                      ctx, profile=None,
                      chip: Optional[str] = None,
-                     assembly: str = "legacy") -> PR.PredictedMemory:
+                     assembly: str = "legacy",
+                     residual=None) -> PR.PredictedMemory:
         """Memoized twin of ``PR.predict(model, policy, ctx)``.
 
         The component caches are keyed WITHOUT the profile — the cached
@@ -744,8 +749,31 @@ class SweepEngine:
         mode likewise joins only the assembled-cell keys — the raw
         component groups are shared between legacy and liveness, which
         is exactly the single-source-of-truth property the liveness
-        event program relies on.  Cached predictions are shared objects
-        — treat them as read-only, as all callers do."""
+        event program relies on.  A learned ``residual`` model
+        (repro.calibrate.learned.ResidualModel) corrects the assembled
+        prediction; the corrected cell caches under the base key plus
+        ``model_hash``, so two model versions can never serve each
+        other's cells and ``residual=None`` shares the exact base
+        objects.  Cached predictions are shared objects — treat them as
+        read-only, as all callers do."""
+        pred, pkey = self._predict_base(arch, policy, ctx, profile, chip,
+                                        assembly)
+        if residual is None:
+            return pred
+        rkey = (pkey, "residual", residual.model_hash)
+        hit = self._pred.get(rkey)
+        if hit is None:
+            from repro.calibrate.learned import apply_residual
+            cfg, _, _ = self._arch_state(arch, policy)
+            hit = self._pred[rkey] = apply_residual(
+                pred, residual, cfg.family, ctx, profile=profile)
+        return hit
+
+    def _predict_base(self, arch: str, policy: TrainPolicy, ctx,
+                      profile=None, chip: Optional[str] = None,
+                      assembly: str = "legacy"):
+        """(prediction, assembled-cell memo key) — predict_cell's body,
+        before any residual correction."""
         cfg, model, rows = self._arch_state(arch, policy)
         mkey = tuple(sorted(ctx.mesh_shape.items()))
         base = (arch, policy, ctx.kind, mkey, ctx.backend)
@@ -783,7 +811,7 @@ class SweepEngine:
             pred = self._pred[pkey] = PR.assemble(
                 static, acts, over, ctx, profile=profile, chip=chip,
                 assembly=assembly)
-        return pred
+        return pred, pkey
 
     def _predict_pipelined(self, model, base, ctx, arch, policy,
                            profile, chip, assembly="legacy"):
@@ -802,7 +830,7 @@ class SweepEngine:
                 assembly)
         pred = self._pred.get(pkey)
         if pred is not None:
-            return pred
+            return pred, pkey
         plan = self._stage_plan(arch, policy, pp)
         best = None
         for s, srows in enumerate(plan.stages):
@@ -836,13 +864,14 @@ class SweepEngine:
             if best is None or sp.peak_bytes > best.peak_bytes:
                 best = sp
         self._pred[pkey] = best
-        return best
+        return best, pkey
 
     # -- cell evaluation -----------------------------------------------------
     def evaluate(self, cell: SweepCell, policy: TrainPolicy = FULL_TRAIN,
                  headroom: float = PL.HEADROOM,
                  keep_prediction: bool = False,
-                 profile=None, assembly: str = "legacy") -> SweepResult:
+                 profile=None, assembly: str = "legacy",
+                 residual=None) -> SweepResult:
         cfg, _, _ = self._arch_state(cell.arch, policy)
         ctx = PL.make_context(cfg, cell.mesh_shape, kind=cell.kind,
                               global_batch=cell.global_batch,
@@ -853,7 +882,8 @@ class SweepEngine:
                               schedule=cell.schedule, serve=cell.serve,
                               offload_opt=cell.offload)
         pred = self.predict_cell(cell.arch, policy, ctx, profile=profile,
-                                 chip=cell.chip, assembly=assembly)
+                                 chip=cell.chip, assembly=assembly,
+                                 residual=residual)
         budget = int(PL.chip_hbm(cell.chip) * headroom)
         return SweepResult(
             arch=cell.arch, chip=cell.chip, mesh_shape=cell.mesh_shape,
@@ -880,7 +910,8 @@ class SweepEngine:
                profile=None, microbatches: int = 1,
                schedule: str = "1f1b", serve=None,
                offload_opt: bool = False,
-               assembly: str = "legacy") -> PL.PlanReport:
+               assembly: str = "legacy",
+               residual=None) -> PL.PlanReport:
         """PlanReport-shaped single-cell evaluation (planner.plan's
         memoized backend); byte-identical to ``planner.check``."""
         shape = PL._resolve_shape(shape)
@@ -894,7 +925,8 @@ class SweepEngine:
                               schedule=schedule, serve=serve,
                               offload_opt=offload_opt)
         pred = self.predict_cell(arch, policy, ctx, profile=profile,
-                                 chip=chip, assembly=assembly)
+                                 chip=chip, assembly=assembly,
+                                 residual=residual)
         return PL.PlanReport(arch=arch, shape=shape.name,
                              fits=pred.peak_bytes <= budget_bytes,
                              peak_bytes=pred.peak_bytes,
@@ -917,7 +949,9 @@ class SweepEngine:
         compiled composition are warm (docs/memory_model.md "Engines").
         Grids with ``keep_predictions=True`` always take the cell path
         (columnar mode does not materialize PredictedMemory
-        breakdowns), as does an environment without numpy.  ``jobs`` >
+        breakdowns), as do grids with a learned ``residual_model`` (the
+        per-cell correction is applied at predict_cell, not in the
+        columnar kernels) and an environment without numpy.  ``jobs`` >
         1 splits the columnar component stage over worker threads
         (mesh-chunked; results are order-identical).
         """
@@ -937,9 +971,15 @@ class SweepEngine:
                     "engine='jax' does not materialize PredictedMemory "
                     "breakdowns; use engine='numpy' with "
                     "keep_predictions=True")
+            if grid.residual_model is not None:
+                raise ValueError(
+                    "engine='jax' does not apply learned residual "
+                    "models; use engine='numpy' (the residual grid "
+                    "routes through the cell path)")
             from repro.core import batch_jax as BJ
             return BJ.sweep_columnar_jax(self, grid, jobs=jobs)
-        if mode == "columnar" and not grid.keep_predictions:
+        if mode == "columnar" and not grid.keep_predictions \
+                and grid.residual_model is None:
             try:
                 from repro.core import batch as B
             except ImportError:          # no numpy -> reference path
@@ -950,7 +990,8 @@ class SweepEngine:
         results = [self.evaluate(cell, grid.policy, grid.headroom,
                                  grid.keep_predictions,
                                  profile=grid.profile,
-                                 assembly=grid.assembly)
+                                 assembly=grid.assembly,
+                                 residual=grid.residual_model)
                    for cell in grid.cells()]
         return SweepResults(grid=grid, results=results,
                             elapsed_s=time.perf_counter() - t0)
@@ -1193,6 +1234,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("--profile", metavar="PATH", default=None,
                    help="CalibrationProfile JSON (python -m repro.calibrate"
                         " fit) applied to every cell's prediction")
+    p.add_argument("--residual-model", metavar="PATH", default=None,
+                   help="learned ResidualModel JSON (python -m "
+                        "repro.calibrate fit-residual) applied on top of "
+                        "--profile; forces the cell path")
     p.add_argument("--mode", choices=("columnar", "cell"),
                    default="columnar",
                    help="columnar: vectorized batch evaluation (default); "
@@ -1246,6 +1291,21 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             profile = CalibrationProfile.load(args.profile)
         except (OSError, ValueError) as e:
             p.error(f"--profile: {e}")
+    residual = None
+    if args.residual_model:
+        from repro.calibrate.learned import ResidualModel
+        try:
+            residual = ResidualModel.load(args.residual_model)
+        except (OSError, ValueError) as e:
+            p.error(f"--residual-model: {e}")
+        if residual.base_profile_hash != (profile.profile_hash
+                                          if profile else None):
+            p.error(f"--residual-model was fitted over profile "
+                    f"{residual.base_profile_hash or 'raw'}; pass the "
+                    f"matching --profile")
+        if args.engine == "jax":
+            p.error("--residual-model routes through the cell path; "
+                    "use --engine numpy")
     max_axis = {}
     if args.max_model:
         max_axis["model"] = args.max_model
@@ -1270,6 +1330,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         seq_lens=args.seq_len, kind=args.kind,
         policy=POLICIES[args.policy], backend=args.backend,
         headroom=args.headroom, profile=profile,
+        residual_model=residual,
         block_sizes=args.block_size, utilizations=args.utilization,
         prefix_hit_rates=args.prefix_hit_rate,
         prefix_len=args.prefix_len, mixes=mixes,
@@ -1318,6 +1379,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     title = (f"capacity sweep: {arch} {args.kind} on {args.chip} "
              f"({args.backend} prediction)"
              + (f" [profile {profile.profile_hash}]" if profile else "")
+             + (f" [residual {residual.model_hash}]" if residual else "")
              + (" [liveness]" if args.assembly == "liveness" else ""))
     print(f"# {title}")
     print(f"{len(res)} cells in {res.elapsed_s:.3f}s "

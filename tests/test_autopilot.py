@@ -505,3 +505,61 @@ def test_cli_rejects_unknown_scenario(capsys):
         main(["--scenario", "nope"])
     assert exc.value.code == 2
     assert "unknown scenario" in capsys.readouterr().err
+
+
+# -- continual refit: DRIFT spends a refit before a mitigation ---------------
+
+
+def test_drift_refit_absorbs_bias_before_mitigation(sweep_engine):
+    """A steady 8% under-prediction (pure bias, far from the budget)
+    drifts the EWMA past tolerance; once enough samples accumulated the
+    autopilot refits the residual model instead of burning a knob move,
+    the forecast absorbs the bias, and the run settles back to SAFE
+    with ZERO mitigations."""
+    pilot = Autopilot(cell=base_cell(), engine=sweep_engine,
+                      headroom=3 * _harness_headroom(sweep_engine),
+                      refit=True, refit_min_samples=8)
+    base_pred = pilot.predicted_bytes
+    obs = int(1.08 * base_pred)
+    states = [pilot.observe(step, obs).state for step in range(20)]
+    assert WatchState.DRIFT in states
+    assert pilot.refits == 1
+    assert any(kind == "refit" for _, kind, _ in pilot.events)
+    assert not pilot.applied               # bias absorbed, no knob spent
+    assert pilot.predicted_bytes > base_pred
+    assert states[-1] is WatchState.SAFE
+    # the refreshed model threads the planner (future plans see it too)
+    assert pilot.residual is not None
+    assert pilot.planner.residual is pilot.residual
+    # every usable observation accumulated as a refit sample ...
+    assert len(pilot.store) == 20
+    m = pilot.store.measurements[0]
+    assert m.arch == pilot.cell.arch
+    assert m.source == "autopilot:step0"
+    assert (m.microbatches, m.schedule, m.offload_optimizer) == \
+        (pilot.cell.microbatches, pilot.cell.schedule, pilot.cell.offload)
+    # ... and unusable telemetry never does
+    pilot.observe(20, None)
+    assert len(pilot.store) == 20
+
+
+def test_refit_budget_and_sample_gate(sweep_engine):
+    pilot = Autopilot(cell=base_cell(), engine=sweep_engine,
+                      headroom=3 * _harness_headroom(sweep_engine),
+                      refit=True, refit_min_samples=5, max_refits=0)
+    obs = int(1.1 * pilot.predicted_bytes)
+    for step in range(12):
+        pilot.observe(step, obs)
+    assert pilot.refits == 0               # max_refits=0: gate never opens
+    assert len(pilot.store) == 12          # samples still accumulate
+
+
+def test_refit_rejects_serve_cell(sweep_engine):
+    from dataclasses import replace
+
+    from repro.serve.pool import ServeSpec
+    cell = replace(base_cell(), kind="decode",
+                   serve=ServeSpec.make(block_size=16))
+    with pytest.raises(ValueError, match="serve"):
+        Autopilot(cell=cell, engine=sweep_engine,
+                  headroom=_harness_headroom(sweep_engine), refit=True)

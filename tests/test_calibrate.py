@@ -12,9 +12,11 @@ import json
 import numpy as np
 import pytest
 
-from repro.calibrate import (TERMS, CalibrationProfile, Measurement,
-                             MeasurementStore, decompose, evaluate,
-                             fit_profile, generate, nnls,
+from repro.calibrate import (FEATURE_NAMES, TERMS, CalibrationProfile,
+                             Measurement, MeasurementStore, ResidualModel,
+                             apply_residual, decompose, evaluate,
+                             fit_profile, fit_residual, generate,
+                             leave_one_family_out, nnls, parse_mesh_string,
                              predict_measurement)
 from repro.calibrate import synthetic as SYN
 from repro.calibrate.paths import dryrun_dir, repo_root
@@ -203,8 +205,11 @@ def test_nnls_nonnegative_exact_recovery():
 def test_fit_recovers_true_profile_noiseless():
     # the oracle composes from the liveness decomposition, so the
     # closed loop recovers the hidden skews only when the fit uses the
-    # same assembly
-    store = generate(engine=ENGINE, noise=0.0)
+    # same assembly; the non-affine oracle layers (family skew, seq
+    # reservation) are disabled — an exact NNLS inversion is only
+    # defined against an exactly-affine truth
+    store = generate(engine=ENGINE, noise=0.0, family_skew=None,
+                     knob_effects=None)
     prof = fit_profile(store, engine=ENGINE, assembly="liveness")
     for t in TERMS:
         assert prof.coefficients[t] == \
@@ -213,8 +218,12 @@ def test_fit_recovers_true_profile_noiseless():
         assert prof.chip_constant_bytes[chip] == pytest.approx(k, rel=0.05)
 
 
-def test_fit_with_noise_still_close(fitted_liveness):
-    _, prof = fitted_liveness
+def test_fit_with_noise_still_close():
+    # coefficient recovery (like the noiseless test above) is only
+    # defined against a pure-affine oracle, so the non-affine layers
+    # are disabled; the shared fixtures keep them ON for MAPE tests
+    store = generate(engine=ENGINE, family_skew=None, knob_effects=None)
+    prof = fit_profile(store, engine=ENGINE, assembly="liveness")
     for t in TERMS:
         # the at-peak transient slice is the smallest design column, so
         # measurement noise concentrates in its coefficient
@@ -227,7 +236,8 @@ def test_legacy_oracle_escape_hatch():
     """generate(assembly="legacy") reproduces the historical oracle:
     a legacy-assembly fit recovers the hidden profile from it."""
     store = generate(archs=SMALL_ARCHS, engine=ENGINE, noise=0.0,
-                     assembly="legacy")
+                     assembly="legacy", family_skew=None,
+                     knob_effects=None)
     prof = fit_profile(store, engine=ENGINE)
     for t in TERMS:
         assert prof.coefficients[t] == \
@@ -274,8 +284,9 @@ def test_calibrated_mape_strictly_lower_everywhere(fitted):
 
 def test_liveness_raw_mape_beats_legacy_raw(fitted, fitted_liveness):
     """ISSUE-9 acceptance: on the fixture set the raw liveness peak cuts
-    the raw legacy MAPE (~12.2% -> ~8.7%), and the liveness fit still
-    improves every family strictly."""
+    the raw legacy MAPE (~11.2% -> ~10.5% with the ISSUE-10 non-affine
+    oracle layers on), and the liveness fit still improves every family
+    strictly."""
     store, prof_legacy = fitted
     _, prof_live = fitted_liveness
     legacy = evaluate(store, prof_legacy, by="family", engine=ENGINE,
@@ -283,8 +294,8 @@ def test_liveness_raw_mape_beats_legacy_raw(fitted, fitted_liveness):
     live = evaluate(store, prof_live, by="family", engine=ENGINE,
                     assembly="liveness")
     assert live.mape_raw < legacy.mape_raw
-    assert legacy.mape_raw == pytest.approx(12.2, abs=0.5)
-    assert live.mape_raw == pytest.approx(8.7, abs=0.5)
+    assert legacy.mape_raw == pytest.approx(11.2, abs=0.5)
+    assert live.mape_raw == pytest.approx(10.5, abs=0.5)
     assert live.all_groups_improved
     for row in live.rows:
         assert row.mape_calibrated < row.mape_raw, row.group
@@ -466,3 +477,331 @@ def test_configs_table_with_profile(fitted, tmp_path, capsys):
     rc = cfg_main([])
     assert rc == 0
     assert "calibrated" not in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# measurement ingest: defect matrix, mesh parsing, knob round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_parse_mesh_string():
+    assert parse_mesh_string("8x4") == {"data": 8, "model": 4}
+    assert parse_mesh_string("2x4x8") == {"pod": 2, "data": 4, "model": 8}
+    for bad in ("16", "2x2x2x2", "axb", "8x0", "8x-4", ""):
+        with pytest.raises(ValueError):
+            parse_mesh_string(bad)
+
+
+def test_dryrun_ingest_defect_matrix():
+    """from_dryrun_record raises a ValueError NAMING the telemetry
+    defect — a zero/negative/defective peak must never enter a fit as
+    ground truth (it once sailed in as measured_bytes=0 and scored as a
+    PERFECT prediction)."""
+    cases = [
+        ({"argument_bytes": 1}, "missing"),         # counters gone
+        ({"total_bytes": "??"}, "non-numeric"),
+        ({"argument_bytes": 1, "output_bytes": "x", "temp_bytes": 3,
+          "alias_bytes": 0}, "non-numeric"),
+        ({"total_bytes": 0}, "non-positive"),
+        ({"argument_bytes": 1, "output_bytes": 1, "temp_bytes": 1,
+          "alias_bytes": 10}, "non-positive"),
+    ]
+    for mem, needle in cases:
+        rec = dict(_fake_dryrun_record(), memory=mem)
+        with pytest.raises(ValueError, match=needle):
+            Measurement.from_dryrun_record(rec, source="t.json")
+
+
+def test_dryrun_ingest_truncated_json(tmp_path):
+    (tmp_path / "trunc.json").write_text('{"arch": "smollm-360m", "mem')
+    store = MeasurementStore.ingest_dryrun_dir(tmp_path)
+    assert len(store) == 0                     # skipped, not fatal
+    with pytest.raises(ValueError):            # JSONDecodeError is one
+        MeasurementStore.ingest_dryrun_dir(tmp_path, strict=True)
+
+
+def test_dryrun_ingest_rejects_unnameable_mesh():
+    rec = _fake_dryrun_record(mesh="2x2x2x2")
+    with pytest.raises(ValueError, match="mesh"):
+        Measurement.from_dryrun_record(rec)
+
+
+def test_measurement_schema_v1_knob_defaults():
+    """Stores written before the pipeline/offload knobs load with the
+    pre-knob defaults (m=1, 1f1b, no offload) — the exact cells those
+    measurements were historically decomposed against."""
+    d = {"arch": "smollm-360m", "kind": "train", "seq_len": 512,
+         "global_batch": 8, "mesh_shape": {"data": 4},
+         "measured_bytes": 123}
+    m = Measurement.from_dict(d)
+    assert (m.microbatches, m.schedule, m.offload_optimizer) == \
+        (1, "1f1b", False)
+
+
+def test_pipelined_measurement_roundtrip():
+    """ISSUE-10 regression: a pp=4 / m=8 measurement must decompose
+    against the pp=4 / m=8 cell (stash-bearing activations), not the
+    schema-v1 default m=1 cell, and the two cells must never share a
+    store key."""
+    kw = dict(arch="smollm-360m", kind="train", seq_len=1024,
+              global_batch=32, mesh_shape={"data": 2, "pipe": 4},
+              measured_bytes=4 * 1024 ** 3, backend="tpu", chip="v5e")
+    piped = Measurement(**kw, microbatches=8)
+    flat = Measurement(**kw)                   # schema-v1 default m=1
+    assert piped.key != flat.key
+    pp, pf = (predict_measurement(m, ENGINE) for m in (piped, flat))
+    assert pp.peak_bytes != pf.peak_bytes
+    # m=8 stashes per-microbatch activations; m=1 holds the whole batch
+    assert pp.act_saved_bytes < pf.act_saved_bytes
+    for row in decompose(MeasurementStore([piped, flat]), ENGINE):
+        assert sum(row.terms.values()) == row.raw_peak_bytes
+
+
+def test_offload_measurement_roundtrip():
+    kw = dict(arch="smollm-360m", kind="train", seq_len=1024,
+              global_batch=32, mesh_shape={"data": 8},
+              measured_bytes=4 * 1024 ** 3, backend="tpu", chip="v5e",
+              optimizer="adamw")
+    off = predict_measurement(Measurement(**kw, offload_optimizer=True),
+                              ENGINE)
+    on_dev = predict_measurement(Measurement(**kw), ENGINE)
+    assert off.peak_bytes < on_dev.peak_bytes
+
+
+def test_ape_nan_for_defective_actual():
+    import math
+
+    from repro.core import report as RPT
+    bad = RPT.PredictionRecord("x", 100, 0)
+    assert math.isnan(bad.ape)
+    valid, excluded = RPT.split_valid([bad])
+    assert valid == [] and excluded == 1
+    assert RPT.mape([bad]) == 0.0              # no valid rows, no average
+    good = RPT.PredictionRecord("y", 110, 100)
+    assert RPT.grouped_mape({"g": [bad, good]}) == \
+        [("g", 1, pytest.approx(10.0))]
+
+
+def test_zero_actual_excluded_from_evaluate(fitted):
+    store, prof = fitted
+    poisoned = MeasurementStore(list(store.measurements))
+    d = store.measurements[0].to_dict()
+    d["measured_bytes"] = 0
+    poisoned.add(Measurement.from_dict(d))
+    clean = evaluate(store, prof, engine=ENGINE)
+    rep = evaluate(poisoned, prof, engine=ENGINE)
+    assert clean.n_excluded == 0 and rep.n_excluded == 1
+    assert rep.n == clean.n
+    assert rep.mape_raw == pytest.approx(clean.mape_raw)
+    assert rep.mape_calibrated == pytest.approx(clean.mape_calibrated)
+    assert "excluded" in rep.to_markdown()
+
+
+# ---------------------------------------------------------------------------
+# learned residual model: fit guard, inertness, memo keys, staleness, CLI
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fitted_residual(fitted):
+    store, prof = fitted
+    return store, prof, fit_residual(store, profile=prof, engine=ENGINE)
+
+
+def test_residual_fit_never_worsens_in_sample(fitted_residual):
+    _, _, model = fitted_residual
+    info = model.fit_info
+    assert info["mape_learned_pct"] <= info["mape_affine_pct"]
+    # the fixture oracle has real non-affine structure to learn
+    assert info["mape_learned_pct"] < info["mape_affine_pct"]
+    assert model.global_weights is not None
+    assert not model.is_identity
+
+
+def test_residual_guard_on_pure_affine_store():
+    """On an exactly-affine store there is nothing left to learn; the
+    guard keeps any weight vector that cannot strictly improve its own
+    rows' MAPE out of the model, so the fit can never worsen it."""
+    store = generate(archs=SMALL_ARCHS, engine=ENGINE, noise=0.0,
+                     family_skew=None, knob_effects=None,
+                     assembly="legacy")
+    prof = fit_profile(store, engine=ENGINE)
+    model = fit_residual(store, profile=prof, engine=ENGINE)
+    info = model.fit_info
+    assert info["mape_learned_pct"] <= info["mape_affine_pct"]
+
+
+def test_residual_fit_refuses_empty_store():
+    with pytest.raises(ValueError):
+        fit_residual(MeasurementStore(), engine=ENGINE)
+    # a store of only defective rows is as empty as an empty one
+    d = {"arch": "smollm-360m", "kind": "train", "seq_len": 512,
+         "global_batch": 8, "mesh_shape": {"data": 4},
+         "measured_bytes": 0}
+    with pytest.raises(ValueError):
+        fit_residual(MeasurementStore([Measurement.from_dict(d)]),
+                     engine=ENGINE)
+
+
+def test_identity_residual_bit_inert(fitted):
+    store, prof = fitted
+    m = store.measurements[0]
+    base = predict_measurement(m, ENGINE, profile=prof)
+    ident = predict_measurement(
+        m, ENGINE, profile=prof,
+        residual=ResidualModel.identity(prof.profile_hash))
+    assert ident is base               # the exact cached base object
+    assert ResidualModel.identity().is_identity
+
+
+def test_sweep_identity_residual_matches_plain(fitted):
+    _, prof = fitted
+    kw = dict(arch="smollm-360m", chips=8, global_batches=(16,),
+              seq_lens=(512,), profile=prof)
+    plain = SW.sweep(SW.SweepGrid(**kw))               # columnar path
+    ident = SW.sweep(SW.SweepGrid(                     # cell path
+        **kw, residual_model=ResidualModel.identity(prof.profile_hash)))
+    assert [r.peak_bytes for r in plain.results] == \
+        [r.peak_bytes for r in ident.results]
+    assert [r.fits for r in plain.results] == \
+        [r.fits for r in ident.results]
+
+
+def test_residual_memo_keys_differ_across_versions(fitted):
+    store, prof = fitted
+    m = store.measurements[0]
+    w1 = [0.0] * len(FEATURE_NAMES)
+    w1[0] = 0.25                       # +0.25 GiB constant correction
+    w2 = list(w1)
+    w2[0] = 0.5
+    m1 = ResidualModel(global_weights=tuple(w1),
+                       base_profile_hash=prof.profile_hash)
+    m2 = ResidualModel(global_weights=tuple(w2),
+                       base_profile_hash=prof.profile_hash)
+    assert m1.model_hash != m2.model_hash
+    base = predict_measurement(m, ENGINE, profile=prof)
+    p1 = predict_measurement(m, ENGINE, profile=prof, residual=m1)
+    p2 = predict_measurement(m, ENGINE, profile=prof, residual=m2)
+    assert p1.peak_bytes == base.peak_bytes + 256 * 1024 ** 2
+    assert p2.peak_bytes == base.peak_bytes + 512 * 1024 ** 2
+    # same model hash -> the exact cached object; versions never mix
+    assert predict_measurement(m, ENGINE, profile=prof,
+                               residual=m1) is p1
+
+
+def test_residual_roundtrip_and_staleness(tmp_path, fitted_residual):
+    _, _, model = fitted_residual
+    path = model.save(tmp_path / "r.json")
+    loaded = ResidualModel.load(path)
+    assert loaded.model_hash == model.model_hash
+    assert loaded.families == model.families
+    assert loaded.global_weights == model.global_weights
+    d = model.to_dict()
+    with pytest.raises(ValueError):
+        ResidualModel.from_dict(dict(d, kind="calibration_profile"))
+    with pytest.raises(ValueError):
+        ResidualModel.from_dict(dict(d, schema_version=99))
+    with pytest.raises(ValueError):
+        ResidualModel.from_dict(dict(d, features=["a", "b"]))
+    with pytest.raises(ValueError):
+        ResidualModel(global_weights=(1.0, 2.0))       # wrong arity
+
+
+def test_residual_profile_binding(fitted_residual):
+    store, prof, model = fitted_residual
+    m = store.measurements[0]
+    with pytest.raises(ValueError, match="profile"):
+        predict_measurement(m, ENGINE, residual=model)   # no profile
+    other = CalibrationProfile(
+        coefficients={"static": 1.01, "act_saved": 1.0,
+                      "act_transient": 1.0, "overhead": 1.0})
+    with pytest.raises(ValueError, match="profile"):
+        predict_measurement(m, ENGINE, profile=other, residual=model)
+
+
+def test_residual_evaluate_adds_learned_series(fitted_residual):
+    store, prof, model = fitted_residual
+    rep = evaluate(store, prof, by="family", engine=ENGINE,
+                   residual=model)
+    assert rep.mape_learned is not None
+    assert rep.mape_learned < rep.mape_calibrated
+    assert rep.residual_hash == model.model_hash
+    assert "MAPE learned %" in rep.to_markdown()
+    assert rep.to_csv().splitlines()[0].endswith("mape_learned_pct")
+    assert rep.to_json_dict()["residual_hash"] == model.model_hash
+
+
+def test_leave_one_family_out_folds(fitted):
+    from repro.calibrate.report import _family_of
+    store, _ = fitted
+    folds = leave_one_family_out(store)
+    assert len(folds) == 6             # all six arch families
+    for fam, train, test in folds:
+        assert len(train) + len(test) == len(store)
+        assert {_family_of(m.arch) for m in test} == {fam}
+        assert fam not in {_family_of(m.arch) for m in train}
+
+
+def test_held_out_family_uses_global_fallback(fitted):
+    store, prof = fitted
+    fam, train, _ = leave_one_family_out(store)[0]
+    model = fit_residual(train, profile=prof, engine=ENGINE)
+    assert fam not in model.families
+    assert model.weights_for(fam) is model.global_weights
+
+
+def test_jax_engine_rejects_residual(fitted_residual):
+    _, prof, model = fitted_residual
+    grid = SW.SweepGrid(arch="smollm-360m", chips=4,
+                        global_batches=(16,), seq_lens=(256,),
+                        profile=prof, residual_model=model)
+    with pytest.raises(ValueError, match="residual"):
+        ENGINE.sweep(grid, engine="jax")
+
+
+def test_cli_fit_residual_apply_report(tmp_path, capsys):
+    from repro.calibrate.__main__ import main
+    prof_path = tmp_path / "prof.json"
+    res_path = tmp_path / "res.json"
+    assert main(["fit", "--synthetic", "--out", str(prof_path)]) == 0
+    rc = main(["fit-residual", "--synthetic", "--profile",
+               str(prof_path), "--out", str(res_path)])
+    assert rc == 0 and res_path.exists()
+    assert "in-sample MAPE" in capsys.readouterr().out
+    rc = main(["apply", "--profile", str(prof_path),
+               "--residual-model", str(res_path),
+               "--arch", "smollm_360m", "--mesh", "data=4,model=2",
+               "--chip", "v5e"])
+    assert rc == 0
+    assert "ResidualModel[" in capsys.readouterr().out
+    rc = main(["report", "--profile", str(prof_path),
+               "--residual-model", str(res_path), "--synthetic",
+               "--by", "family"])
+    assert rc == 0
+    assert "MAPE learned %" in capsys.readouterr().out
+
+
+def test_cli_residual_profile_mismatch(tmp_path):
+    from repro.calibrate.__main__ import main
+    prof_path = tmp_path / "prof.json"
+    res_path = tmp_path / "res.json"
+    assert main(["fit", "--synthetic", "--out", str(prof_path)]) == 0
+    # fitted WITHOUT a profile: bound to the raw prediction
+    assert main(["fit-residual", "--synthetic",
+                 "--out", str(res_path)]) == 0
+    with pytest.raises(SystemExit):
+        main(["apply", "--profile", str(prof_path),
+              "--residual-model", str(res_path),
+              "--arch", "smollm_360m", "--mesh", "data=4,model=2",
+              "--chip", "v5e"])
+
+
+def test_configs_table_with_residual(fitted_residual, tmp_path, capsys):
+    _, prof, model = fitted_residual
+    from repro.configs.__main__ import main as cfg_main
+    pp = prof.save(tmp_path / "p.json")
+    rp = model.save(tmp_path / "r.json")
+    rc = cfg_main(["--profile", str(pp), "--residual-model", str(rp),
+                   "--chip", "v5e"])
+    assert rc == 0
+    assert "learned GiB" in capsys.readouterr().out
